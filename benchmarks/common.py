@@ -1,0 +1,35 @@
+"""Shared benchmark utilities.
+
+Every benchmark emits `name,us_per_call,derived` CSV rows via `emit` —
+`derived` carries the paper-facing quantity (recall, KB, ratio, ...).
+Set REPRO_BENCH_FULL=1 for paper-scale sweeps (minutes-hours on CPU);
+the default sizes finish in a couple of minutes and exercise identical code.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def timeit(fn, *, repeat: int = 3, warmup: int = 1) -> float:
+    """Median wall time of fn() in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+__all__ = ["FULL", "emit", "timeit"]

@@ -1,0 +1,76 @@
+"""Paper Fig. 5: per-module computation / communication vs k'.
+
+Module 1 = plaintext top-k' search; Module 2a = encrypted re-rank;
+Module 2b = direct fetch; Module 2c = k-of-k' OT.  Both crypto backends for
+2a (the paper's Paillier and the TPU-native RLWE).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FULL, emit, timeit
+from repro.core import accounting as acc
+from repro.crypto import ot as ot_mod
+from repro.crypto import paillier as pai
+from repro.crypto import rlwe
+from repro.data import synth
+from repro.retrieval.index import FlatIndex
+from repro.retrieval.topk import distributed_topk
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    dim = 768
+    n_docs = 100_000 if FULL else 20_000
+    emb = synth.uniform_corpus(rng, n_docs, dim)
+    index = FlatIndex.build(emb)
+    q = synth.queries_near_corpus(rng, emb, 1)
+    qj = jnp.asarray(q)
+
+    kprimes = [40, 80, 160, 320] if not FULL else [40, 80, 160, 320, 640]
+
+    params = rlwe.RlweParams()
+    sk = rlwe.keygen(params, rng)
+    ct = rlwe.encrypt_query(sk, q[0], rng)
+    pk_paillier = pai.keygen(512)
+    enc_q = pai.encrypt_vector(pk_paillier.pub, q[0])
+
+    for kp in kprimes:
+        # module 1: plaintext top-k' scan over all N
+        us1 = timeit(lambda: jax.block_until_ready(
+            distributed_topk(index, qj, kp).values), repeat=3)
+        emit(f"fig5/module1_topk_k{kp}", us1, f"N={n_docs}")
+
+        cands = np.asarray(index.rows(
+            np.asarray(distributed_topk(index, qj, kp).indices)[0]))
+
+        # module 2a (rlwe): pack + encrypted scores + decrypt
+        def m2a_rlwe():
+            packed = rlwe.pack_candidates(params, cands)
+            res = rlwe.encrypted_scores(params, ct, packed)
+            return rlwe.decrypt_scores(sk, res)
+
+        us2 = timeit(m2a_rlwe, repeat=2)
+        emit(f"fig5/module2a_rlwe_k{kp}", us2,
+             f"bytes={acc.rlwe_scores_bytes(kp, dim)}")
+
+        # module 2a (paillier) — measured on a slice, scaled (exactly linear)
+        slice_n = min(8, kp)
+        us_slice = timeit(lambda: pai.encrypted_scores(
+            pk_paillier.pub, enc_q, cands[:slice_n]), repeat=1)
+        emit(f"fig5/module2a_paillier_k{kp}", us_slice * kp / slice_n,
+             f"bytes={acc.paillier_scores_bytes(kp, 512)};extrapolated")
+
+        # module 2b: direct fetch (bytes only — fetch is index lookup)
+        emit(f"fig5/module2b_direct_k{kp}", 0.0,
+             f"bytes={5 * 4 + 5 * 1024}")
+
+        # module 2c: OT over k' docs of 1 KiB
+        msgs = [b"d" * 1024 for _ in range(kp)]
+        us3 = timeit(lambda: ot_mod.run_ot(msgs, [0, 1, 2, 3, 4]), repeat=1)
+        _, wire = ot_mod.run_ot(msgs, [0, 1, 2, 3, 4])
+        emit(f"fig5/module2c_ot_k{kp}", us3, f"bytes={wire}")

@@ -1,0 +1,30 @@
+"""Paper Fig. 6: hyperparameter relationships (pure geometry).
+
+(a) k/N vs alpha_k for several dims — the high-dimensional concentration
+    that makes the perturbation so sensitive;
+(b) eps vs k' for several k — the planner's inverse map (Fig. 6b).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import geometry, planner
+
+
+def run() -> None:
+    for n in (16, 384, 768, 1536):
+        for alpha_deg in (60, 75, 85, 89, 90):
+            a = np.deg2rad(alpha_deg)
+            frac = float(geometry.cap_fraction_np(a, n))
+            emit(f"fig6a/n{n}_alpha{alpha_deg}", 0.0, f"k_over_N={frac:.3e}")
+
+    N = 100_000
+    for k in (5, 10, 20):
+        for kp in (50, 100, 160, 200, 400):
+            if kp <= k:
+                continue
+            eps = planner.eps_for_kprime(n=768, N=N, k=k, kprime=kp)
+            emit(f"fig6b/k{k}_kprime{kp}", 0.0,
+                 f"eps={eps:.0f};eps_over_n={eps / 768:.1f}")

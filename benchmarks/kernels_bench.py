@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: NTT and fused score+select vs their references.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness
+path); the XLA reference path is the meaningful CPU timing.  On TPU the same
+entry points dispatch the compiled kernels.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FULL, emit, timeit
+from repro.crypto import modring
+from repro.crypto.modring import PrimeCtx
+from repro.kernels.ntt import ops as ntt_ops
+from repro.kernels.ntt import ref as ntt_ref
+from repro.kernels.scoretopk import ops as st_ops
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    # NTT throughput (XLA path), batch of polys as in module-2a at k'=160
+    for n in (1024, 4096):
+        ctx = PrimeCtx.build(modring.find_ntt_primes(2 * n, 1)[0], n)
+        batch = 120 if not FULL else 480
+        x = jnp.asarray(ntt_ref.random_poly(rng, (batch, n), ctx.q))
+        us = timeit(lambda: jax.block_until_ready(
+            ntt_ops.ntt_fwd(x, ctx, use_pallas=False)), repeat=5)
+        emit(f"kernels/ntt_fwd_b{batch}_n{n}", us,
+             f"Mcoeff_per_s={batch * n / us:.1f}")
+
+    # fused score+select vs full-sort oracle
+    n_rows = 200_000 if FULL else 50_000
+    dim = 768
+    e = jnp.asarray(synth_unit(rng, n_rows, dim))
+    q = jnp.asarray(synth_unit(rng, 8, dim))
+    us_fused = timeit(lambda: jax.block_until_ready(
+        st_ops.topk_scores(q, e, 160, use_pallas=False).values), repeat=3)
+    emit(f"kernels/scoretopk_fused_N{n_rows}", us_fused, "per-tile select")
+
+    def full_sort():
+        s = q @ e.T
+        return jax.block_until_ready(jnp.sort(s, axis=-1))
+
+    us_sort = timeit(full_sort, repeat=3)
+    emit(f"kernels/score_fullsort_N{n_rows}", us_sort,
+         f"fused_speedup={us_sort / us_fused:.2f}x")
+
+
+def synth_unit(rng, n, d):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=-1, keepdims=True)

@@ -1,0 +1,197 @@
+"""Roofline report generator: runs/dryrun/*.json -> markdown tables.
+
+For every (arch x shape) cell on the single-pod mesh:
+  t_compute    = HLO_FLOPs  / (chips * 197 TFLOP/s bf16)
+  t_memory     = HLO_bytes  / (chips * 819 GB/s HBM)
+  t_collective = wire_bytes / (chips-local 50 GB/s ICI; ring model)
+plus MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) and the useful-compute
+ratio MODEL/HLO.  FLOP/byte numbers come from the `roofline` records (fully
+unrolled scans — exact); memory-fit numbers come from the scanned `pod`
+records.
+
+`python -m benchmarks.roofline_report [--out EXPERIMENTS_roofline.md]`
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import registry
+from repro.configs import shapes as shp
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic 'useful' FLOPs for the step (6ND for training; 2ND/token for
+    inference), per the §Roofline definition."""
+    entry = registry.get(arch)
+    if entry.family == "lm":
+        cfg = entry.config
+        n_act = cfg.active_param_count()
+        s = shp.LM_SHAPES[shape_name]
+        if s.kind == "train":
+            tokens = s.global_batch * s.seq_len
+            return 6.0 * n_act * tokens
+        if s.kind == "prefill":
+            tokens = s.global_batch * s.seq_len
+            return 2.0 * n_act * tokens
+        return 2.0 * n_act * s.global_batch  # decode: 1 token per sequence
+    if entry.family == "gnn":
+        g = shp.GNN_SHAPES[shape_name]
+        cfg = entry.config
+        d = cfg.d_hidden
+        per_layer = g.n_edges * (3 * d * d + d * d) * 2 \
+            + g.n_nodes * (2 * d * d + d * d) * 2
+        fwd = cfg.n_layers * per_layer \
+            + g.n_nodes * (g.d_feat * d + d * d) * 2 \
+            + g.n_nodes * (d * d + d * cfg.n_vars) * 2
+        return 3.0 * fwd  # fwd + bwd(2x)
+    if entry.family == "recsys":
+        s = shp.RECSYS_SHAPES[shape_name]
+        b = s.n_candidates if s.kind == "retrieval" else s.batch
+        cfg = entry.config
+        if arch == "fm":
+            per = cfg.n_sparse * cfg.embed_dim * 4
+        elif arch == "dcn-v2":
+            d = cfg.d_in
+            per = (cfg.n_cross_layers * d * d
+                   + d * cfg.mlp[0] + cfg.mlp[0] * cfg.mlp[1]
+                   + cfg.mlp[1] * cfg.mlp[2]) * 2
+        elif arch == "dien":
+            per = cfg.seq_len * 2 * 3 * (cfg.embed_dim + cfg.gru_dim) \
+                * cfg.gru_dim * 2
+        else:  # two-tower
+            d_in = cfg.n_user_feats * cfg.embed_dim
+            per = (d_in * cfg.tower_mlp[0]
+                   + cfg.tower_mlp[0] * cfg.tower_mlp[1]
+                   + cfg.tower_mlp[1] * cfg.tower_mlp[2]) * 2
+            if s.kind == "retrieval":
+                per = cfg.tower_mlp[-1] * 2  # dot per candidate
+        mult = 3.0 if s.kind == "train" else 1.0
+        return mult * b * per
+    # remoterag
+    s = shp.REMOTERAG_SHAPES[shape_name]
+    if s.kind == "module1":
+        return 2.0 * s.batch * s.corpus * s.dim
+    # module2: pointwise modmuls dominate; count 1 "flop" per modmul
+    return float(s.batch * 2 * 3 * 4096 * (-(-s.kprime // 4) + 2))
+
+
+def load(outdir: Path, arch: str, shape: str, tag: str):
+    p = outdir / f"{arch}__{shape}__{tag}.json"
+    if not p.exists():
+        return None
+    rec = json.loads(p.read_text())
+    return rec if rec.get("ok") else None
+
+
+IDEAL_TERM = {
+    # which roofline term a *perfect* implementation of this shape kind would
+    # be bound by: training/prefill -> compute; decode/serving/retrieval ->
+    # memory (streaming weights/KV/corpus once).
+    "train": "compute", "prefill": "compute", "full": "compute",
+    "minibatch": "compute", "batched_small": "compute",
+    "decode": "memory", "serve": "memory", "retrieval": "memory",
+    "module1": "memory", "module2": "compute",
+}
+
+
+def shape_kind(arch: str, shape: str) -> str:
+    entry = registry.get(arch)
+    return getattr(entry.shapes[shape], "kind", "train")
+
+
+def build_rows(outdir: Path):
+    rows = []
+    for arch in registry.REGISTRY:
+        for shape in registry.get(arch).shapes:
+            roof = load(outdir, arch, shape, "roofline")
+            pod = load(outdir, arch, shape, "pod")
+            multi = load(outdir, arch, shape, "multipod")
+            src = roof or pod
+            if src is None:
+                rows.append({"arch": arch, "shape": shape, "missing": True,
+                             "pod_ok": bool(pod), "multi_ok": bool(multi)})
+                continue
+            n_dev = src["devices"]
+            # hlo_flops / hlo_bytes are PER-DEVICE (per-partition HLO module)
+            tc = src.get("hlo_flops", 0) / PEAK
+            tm = src.get("hlo_bytes", 0) / HBM
+            tx = src.get("collective_wire_bytes_per_device", 0) / ICI
+            terms = {"compute": tc, "memory": tm, "collective": tx}
+            dom = max(terms, key=terms.get)
+            ideal = IDEAL_TERM.get(shape_kind(arch, shape), "compute")
+            # fraction-of-roofline: the term a perfect implementation would
+            # be bound by, over the estimated step bound (max of terms).
+            frac = terms[ideal] / max(max(terms.values()), 1e-12)
+            # frac* excludes the HLO-bytes memory term (an unfused-CPU upper
+            # bound — see EXPERIMENTS.md §Roofline): ideal over max(tc, tx).
+            ideal_nomem = tc if ideal != "collective" else tx
+            frac_star = ideal_nomem / max(tc, tx, 1e-12)
+            mf = model_flops(arch, shape)
+            mem = (pod or {})
+            rows.append({
+                "arch": arch, "shape": shape, "missing": False,
+                "pod_ok": bool(pod), "multi_ok": bool(multi),
+                "exact": bool(roof),
+                "t_compute_s": tc, "t_memory_s": tm, "t_collective_s": tx,
+                "bottleneck": dom, "ideal": ideal,
+                "model_flops": mf,
+                "hlo_flops_total": src.get("hlo_flops", 0) * n_dev,
+                "useful_ratio": (mf / (src.get("hlo_flops", 1) * n_dev)
+                                 if src.get("hlo_flops") else 0.0),
+                "roofline_fraction": frac,
+                "roofline_fraction_star": frac_star,
+                "mem_gb_per_dev": mem.get(
+                    "bytes_per_device_donation_adjusted",
+                    mem.get("bytes_per_device", 0)) / 1e9,
+            })
+    return rows
+
+
+def to_markdown(rows) -> str:
+    out = ["| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+           "bound | ideal | frac | frac* | MODEL/HLO | GB/dev | pod | 2pod |"
+           " exact |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("missing"):
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | pending |"
+                       f" - | - | - | - | - | {'Y' if r['pod_ok'] else 'N'} |"
+                       f" {'Y' if r['multi_ok'] else 'N'} | - |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.2f} | "
+            f"{r['t_memory_s']*1e3:.2f} | {r['t_collective_s']*1e3:.2f} | "
+            f"{r['bottleneck']} | {r['ideal']} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{r['roofline_fraction_star']:.3f} | "
+            f"{r['useful_ratio']:.2f} | {r['mem_gb_per_dev']:.1f} | "
+            f"{'Y' if r['pod_ok'] else 'N'} | "
+            f"{'Y' if r['multi_ok'] else 'N'} | "
+            f"{'Y' if r.get('exact') else 'scan-1x'} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = build_rows(Path(args.dir))
+    md = to_markdown(rows)
+    if args.out:
+        Path(args.out).write_text(md)
+    if args.json:
+        Path(args.json).write_text(json.dumps(rows, indent=1))
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only table4]``
+prints ``name,us_per_call,derived`` CSV.  REPRO_BENCH_FULL=1 for paper-scale.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark module names")
+    args = ap.parse_args()
+
+    from benchmarks import (fig4_privacy, fig5_modules, fig6_hyper,
+                            kernels_bench, table2_comm, table3_recall,
+                            table4_efficiency)
+
+    modules = [table2_comm, table3_recall, table4_efficiency, fig4_privacy,
+               fig5_modules, fig6_hyper, kernels_bench]
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in modules:
+        name = mod.__name__.split(".")[-1]
+        if args.only and args.only not in name:
+            continue
+        t0 = time.monotonic()
+        try:
+            mod.run()
+            print(f"# {name} done in {time.monotonic() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"{name}/ERROR,0,{traceback.format_exc(limit=1)!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

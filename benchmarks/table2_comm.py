@@ -1,0 +1,59 @@
+"""Paper Table 2: communication comparison (formulas + measured protocol).
+
+Rows: symbolic beta/eta-unit costs at the paper's operating point, concrete
+byte models for both crypto backends, and the wire bytes actually metered by
+a live protocol round (request/reply/fetch transcripts).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import FULL, emit, timeit
+from repro.core import accounting as acc
+from repro.core import protocol
+from repro.data import synth
+from repro.retrieval.index import FlatIndex
+
+
+def run() -> None:
+    n, N, k, kp = 768, 10 ** 5, 5, 160
+    rows = {
+        "table2/ignorant": acc.privacy_ignorant(n, k),
+        "table2/conscious": acc.privacy_conscious(n, N),
+        "table2/remoterag_direct": acc.remoterag_direct(n, k, kp),
+        "table2/remoterag_ot": acc.remoterag_ot(n, kp),
+    }
+    for name, c in rows.items():
+        emit(name, 0.0,
+             f"rounds={c.rounds};numbers={c.numbers};docs={c.documents};"
+             f"bytes@beta4_eta1024={c.bytes_total()}")
+
+    emit("table2/rlwe_query_bytes", 0.0, str(acc.rlwe_query_bytes(n)))
+    emit("table2/paillier_query_bytes", 0.0, str(acc.paillier_query_bytes(n)))
+    emit("table2/rlwe_scores_bytes_k160", 0.0,
+         str(acc.rlwe_scores_bytes(kp, n)))
+    emit("table2/paillier_scores_bytes_k160", 0.0,
+         str(acc.paillier_scores_bytes(kp)))
+
+    # live metering (reduced N; wire formulas are N-independent for RemoteRAG)
+    rng = np.random.default_rng(0)
+    n_docs = 20_000 if FULL else 3_000
+    emb = synth.uniform_corpus(rng, n_docs, 384)
+    docs = [b"x" * 1024 for _ in range(n_docs)]
+    index = FlatIndex.build(emb, documents=docs)
+    user = protocol.RemoteRagUser(n=384, N=n_docs, k=5, radius=0.05,
+                                  backend="rlwe", rng=rng)
+    cloud = protocol.RemoteRagCloud(index, rlwe_params=user.rlwe_params)
+    q = synth.queries_near_corpus(rng, emb, 1)[0]
+
+    def round_trip():
+        return protocol.run_remoterag(user, cloud, q, jax.random.PRNGKey(0))
+
+    us = timeit(round_trip, repeat=1, warmup=1)
+    _, _, tr = round_trip()
+    emit("table2/measured_rlwe_request_bytes", us, str(tr.request_bytes))
+    emit("table2/measured_rlwe_reply_bytes", us, str(tr.reply_bytes))
+    emit("table2/measured_total_bytes", us, str(tr.total_bytes))

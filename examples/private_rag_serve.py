@@ -1,0 +1,77 @@
+"""End-to-end driver: a private RAG service with a *real* embedding model.
+
+    PYTHONPATH=src python examples/private_rag_serve.py
+
+1. builds the in-framework text embedder (mean-pooled transformer encoder),
+2. embeds a synthetic passage corpus and indexes it,
+3. serves user queries through the full RemoteRAG protocol — the cloud only
+   ever sees the DistanceDP-perturbed embedding and RLWE ciphertexts,
+4. reports recall vs the plaintext pipeline and per-request wire bytes.
+
+This is the serving-kind end-to-end deliverable (the training-kind one is
+examples/train_lm.py).
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import protocol
+from repro.data import synth
+from repro.data.tokenizer import HashTokenizer
+from repro.models import embedder
+from repro.retrieval.index import FlatIndex
+
+DIM = 256
+N_DOCS = 2_000
+SEQ = 32
+K = 5
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    tok = HashTokenizer(vocab_size=8192)
+    cfg = embedder.encoder_config(dim=DIM, vocab=8192, n_layers=2)
+    params = embedder.init_params(jax.random.PRNGKey(0), cfg)
+    embed = jax.jit(lambda t: embedder.embed(params, cfg, t))
+
+    # corpus: synthetic "passages" with topical token structure
+    topics = ["weather storm rain wind", "finance stock bond market",
+              "health doctor medicine flu", "sports game team score",
+              "music concert guitar song", "travel flight hotel beach"]
+    passages = []
+    for i in range(N_DOCS):
+        t = topics[i % len(topics)]
+        extra = " ".join(f"w{rng.integers(0, 500)}" for _ in range(12))
+        passages.append(f"{t} {extra}")
+
+    print(f"embedding {N_DOCS} passages with {cfg.name} ...")
+    ids = tok.encode_batch(passages, SEQ)
+    embs = np.asarray(jax.lax.map(
+        embed, jnp.asarray(ids).reshape(-1, 50, SEQ)).reshape(N_DOCS, DIM))
+    index = FlatIndex.build(embs, documents=[p.encode() for p in passages])
+
+    user = protocol.RemoteRagUser(n=DIM, N=N_DOCS, k=K, radius=0.05,
+                                  backend="rlwe", rng=rng)
+    cloud = protocol.RemoteRagCloud(index, rlwe_params=user.rlwe_params)
+    print(f"plan: k'={user.plan.kprime}, path={user.plan.path}")
+
+    queries = ["rain and storms this weekend", "stock market crash bond",
+               "flu medicine from the doctor"]
+    for qi, qtext in enumerate(queries):
+        q_emb = np.asarray(embed(jnp.asarray(
+            tok.encode_batch([qtext], SEQ))))[0]
+        docs, got_ids, tr = protocol.run_remoterag(
+            user, cloud, q_emb, jax.random.PRNGKey(qi))
+        oracle = np.argsort(-(embs @ q_emb), kind="stable")[:K]
+        recall = len(set(got_ids.tolist()) & set(oracle.tolist())) / K
+        print(f"\nquery: {qtext!r}")
+        print(f"  top doc: {docs[0][:60]!r}")
+        print(f"  recall={recall:.0%}  wire={tr.total_bytes/1024:.1f} KB  "
+              f"path={tr.path}")
+        assert recall == 1.0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Private candidate retrieval for the two-tower recsys arch.
+
+    PYTHONPATH=src python examples/recsys_retrieval.py
+
+two-tower-retrieval is the RemoteRAG-native assigned architecture: its
+candidate index is a unit-norm embedding corpus, so the paper's protocol
+wraps it unchanged.  The "user query" here is the *user tower output* —
+exactly the sensitive object (someone's taste vector) the paper protects.
+
+1. train the reduced two-tower model briefly on the synthetic click task,
+2. index the item-tower embeddings,
+3. run private retrieval of the user's top-k items.
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core import protocol
+from repro.models import recsys as rec
+from repro.retrieval.index import FlatIndex
+from repro.train import optimizer as opt_lib
+from repro.train import trainer
+
+N_ITEMS = 4_000
+K = 5
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    cfg = registry.get("two-tower-retrieval").reduced
+    params = rec.twotower_init(jax.random.PRNGKey(0), cfg)
+
+    # brief training on in-batch softmax (synthetic co-click pairs)
+    opt_cfg = opt_lib.AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=50)
+    opt_state = opt_lib.init(params, opt_cfg)
+    step = jax.jit(trainer.make_train_step(
+        lambda p, u, i: rec.twotower_loss(p, cfg, u, i), opt_cfg))
+    for s in range(50):
+        srng = np.random.default_rng(s)
+        uf = jnp.asarray(srng.integers(0, cfg.user_vocab, (64, cfg.n_user_feats)))
+        itf = jnp.asarray(uf[:, : cfg.n_item_feats] % cfg.item_vocab)  # co-click
+        params, opt_state, m = step(params, opt_state, (uf, itf))
+    print(f"two-tower trained 50 steps, final in-batch loss {float(m['loss']):.3f}")
+
+    # index the item corpus
+    item_feats = jnp.asarray(
+        rng.integers(0, cfg.item_vocab, (N_ITEMS, cfg.n_item_feats)))
+    item_embs = np.asarray(rec.item_embedding(params, cfg, item_feats))
+    index = FlatIndex.build(
+        item_embs, documents=[f"item-{i}".encode() for i in range(N_ITEMS)])
+
+    # the private query = user tower output
+    dim = item_embs.shape[1]
+    user_feats = jnp.asarray(rng.integers(0, cfg.user_vocab,
+                                          (1, cfg.n_user_feats)))
+    taste = np.asarray(rec.user_embedding(params, cfg, user_feats))[0]
+
+    user = protocol.RemoteRagUser(n=dim, N=N_ITEMS, k=K, radius=0.1,
+                                  backend="rlwe", rng=rng)
+    cloud = protocol.RemoteRagCloud(index, rlwe_params=user.rlwe_params)
+    items, ids, tr = protocol.run_remoterag(user, cloud, taste,
+                                            jax.random.PRNGKey(1))
+
+    oracle = np.argsort(-(item_embs @ taste), kind="stable")[:K]
+    recall = len(set(ids.tolist()) & set(oracle.tolist())) / K
+    print(f"private retrieval: items={[d.decode() for d in items]}")
+    print(f"recall vs plaintext ranking: {recall:.0%}  "
+          f"k'={user.plan.kprime}  wire={tr.total_bytes/1024:.1f} KB")
+    assert recall == 1.0
+
+
+if __name__ == "__main__":
+    main()

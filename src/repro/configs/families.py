@@ -1,0 +1,467 @@
+"""Dry-run cell builders per architecture family.
+
+A Cell is everything `launch/dryrun.py` needs for one (arch x shape x mesh):
+the step function, abstract (ShapeDtypeStruct) inputs, explicit shardings,
+and donation hints.  Cells never allocate device memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import shapes as shp
+from repro.crypto import rlwe
+from repro.launch.mesh import batch_axes as _batch_axes, row_axes as _row_axes
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as rec_lib
+from repro.models import transformer as tf_lib
+from repro.retrieval.topk import make_sharded_topk
+from repro.train import optimizer as opt_lib
+from repro.train import trainer as trainer_lib
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable
+    args: tuple                   # pytrees of ShapeDtypeStruct
+    in_shardings: tuple
+    out_shardings: object = None  # None -> let GSPMD choose
+    donate_argnums: tuple = ()
+    static_argnums: tuple = ()
+
+
+def _shard(mesh: Mesh, spec_tree):
+    to_ns = lambda s: NamedSharding(mesh, s)
+    return jax.tree.map(to_ns, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+OPT_CFG = opt_lib.AdamWConfig()
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def lm_cell(cfg: tf_lib.TransformerConfig, shape: shp.LmShape,
+            mesh: Mesh, *, roofline: bool = False,
+            scan_knob: Optional[int] = None,
+            variant: Optional[str] = None) -> Cell:
+    """variant: None | "moe_a2a" | "tp_repl" | "micro2" | "micro16" — the
+    hillclimb configurations (EXPERIMENTS.md §Perf)."""
+    ba = _batch_axes(mesh)
+    cfg = dataclasses.replace(
+        cfg, batch_axes=ba,
+        n_layers=scan_knob if scan_knob else cfg.n_layers,
+        scan_unroll=cfg.n_layers if roofline and not scan_knob else 1)
+    if variant == "moe_a2a":
+        cfg = dataclasses.replace(cfg, moe_impl="shard_a2a", mesh=mesh)
+    if variant in ("fsdp_only", "fsdp_noremat"):
+        # no TP: batch and weights shard over ALL axes; no head padding.
+        # fsdp_noremat additionally drops remat (activations/chip are tiny at
+        # 256-way batch sharding) -> one fewer weight all-gather pass.
+        all_axes = tuple(mesh.axis_names)
+        cfg = dataclasses.replace(cfg, tp=1, batch_axes=all_axes,
+                                  tp_axis=None,  # no TP dim for activations
+                                  remat=variant != "fsdp_noremat")
+        ba = all_axes
+    pspec = (tf_lib.fsdp_param_specs(cfg, tuple(mesh.axis_names))
+             if variant in ("fsdp_only", "fsdp_noremat")
+             else tf_lib.param_specs(cfg))
+    opt_pspec = pspec
+    if variant == "tp_repl":
+        # pure-TP weights (replicated over "data"), ZeRO-1 optimizer state
+        # (still 2D-sharded): no per-microbatch FSDP weight all-gathers; one
+        # grad all-reduce + one master->param all-gather per step.
+        def strip_data(p_):
+            return P(*[None if ax == "data" else ax for ax in p_])
+        pspec = jax.tree.map(strip_data, pspec,
+                             is_leaf=lambda x: isinstance(x, P))
+    params_sds = tf_lib.abstract_params(cfg)
+    spec = cfg.attn_spec
+
+    if variant == "pp2" and "pod" in mesh.axis_names:
+        # pipeline over the pod axis: layer params P("pod") on dim 0, batch
+        # parallelism stays within-pod (data axis); microbatching = pipeline
+        cfg = dataclasses.replace(cfg, batch_axes=("data",))
+        ba = ("data",)
+        pspec = tf_lib.param_specs(cfg)
+
+        def add_pod(p_):
+            return P("pod", *tuple(p_)[1:])
+        pspec = dict(pspec)
+        pspec["layers"] = jax.tree.map(add_pod, pspec["layers"],
+                                       is_leaf=lambda x: isinstance(x, P))
+        opt_pspec = pspec
+
+    if shape.kind == "train":
+        opt_sds = opt_lib.abstract_init(params_sds, OPT_CFG)
+        opt_spec = opt_lib.state_specs(opt_pspec)
+        tok_sds = _sds((shape.global_batch, shape.seq_len), jnp.int32)
+        batch_spec = (P(ba, None), P(ba, None))
+
+        if variant == "pp2" and "pod" in mesh.axis_names:
+            def loss(p, tokens, targets):
+                return tf_lib.pipeline_loss_fn(p, cfg, tokens, targets,
+                                               mesh=mesh, n_micro=8)
+        else:
+            def loss(p, tokens, targets):
+                return tf_lib.loss_fn(p, cfg, tokens, targets)
+
+        # grad accumulation bounds activation memory; the roofline variant
+        # uses microbatches=1 + unrolled layers for exact cost_analysis
+        # (XLA visits while bodies once).
+        micro = {"micro2": 2, "micro16": 16, "pp2": 1}.get(variant, 8)
+        step = trainer_lib.make_train_step(
+            loss, OPT_CFG, param_dtype=cfg.jdtype,
+            microbatches=1 if roofline else micro)
+        return Cell(
+            arch=cfg.name, shape=shape.name, fn=step,
+            args=(params_sds, opt_sds, (tok_sds, tok_sds)),
+            in_shardings=(_shard(mesh, pspec), _shard(mesh, opt_spec),
+                          _shard(mesh, batch_spec)),
+            out_shardings=(_shard(mesh, pspec), _shard(mesh, opt_spec),
+                           _shard(mesh, {"loss": P(), "grad_norm": P(),
+                                         "lr": P()})),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        tok_sds = _sds((shape.global_batch, shape.seq_len), jnp.int32)
+        cache_sds = tf_lib.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                      abstract=True)
+        kv_spec = P(None, ba, None, "model", None)
+        cache_spec = {"k": kv_spec, "v": kv_spec, "len": P()}
+
+        def prefill_step(p, tokens):
+            logits, cache = tf_lib.prefill(p, cfg, tokens, shape.seq_len)
+            return logits[:, -1, :], cache
+
+        return Cell(
+            arch=cfg.name, shape=shape.name, fn=prefill_step,
+            args=(params_sds, tok_sds),
+            in_shardings=(_shard(mesh, pspec), _shard(mesh, P(ba, None))),
+            out_shardings=(_shard(mesh, (P(ba, "model"), cache_spec))),
+        )
+
+    # decode: one token against a seq_len KV cache (+headroom, padded so a
+    # sequence-sharded cache divides the mesh evenly).
+    # Serving uses the UNPADDED config (tp=1): weights shard on their input
+    # dim (per-projection psums are tiny at B x 1 activations), the cache
+    # keeps the true kv-head count and shards on d_head — this keeps the
+    # MHA-ized archs (qwen2.5, granite) inside per-device HBM.
+    cfg = dataclasses.replace(cfg, tp=1)
+    pspec = tf_lib.decode_param_specs(cfg)
+    params_sds = tf_lib.abstract_params(cfg)
+    max_len = shape.seq_len + 1024
+    tok_sds = _sds((shape.global_batch, 1), jnp.int32)
+    cache_sds = tf_lib.init_cache(cfg, shape.global_batch, max_len,
+                                  abstract=True)
+    n_batch_shards = 1
+    for a in ba:
+        n_batch_shards *= mesh.shape[a]
+    if shape.global_batch % n_batch_shards == 0:
+        kv_spec = P(None, ba, None, None, "model")     # batch x d_head
+        tok_spec = P(ba, None)
+        out_logit_spec = P(ba, "model")
+    else:
+        # long_500k (batch=1): shard the cache SEQUENCE over the data axes;
+        # decode attention lowers to flash-decoding-style split-K reductions.
+        kv_spec = P(None, None, ba, None, "model")
+        tok_spec = P(None, None)
+        out_logit_spec = P(None, "model")
+    cache_spec = {"k": kv_spec, "v": kv_spec, "len": P()}
+
+    def decode(p, tokens, cache):
+        return tf_lib.decode_step(p, cfg, tokens, cache)
+
+    return Cell(
+        arch=cfg.name, shape=shape.name, fn=decode,
+        args=(params_sds, tok_sds, cache_sds),
+        in_shardings=(_shard(mesh, pspec), _shard(mesh, tok_spec),
+                      _shard(mesh, cache_spec)),
+        out_shardings=(_shard(mesh, (out_logit_spec, cache_spec))),
+        donate_argnums=(2,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def gnn_cell(cfg: gnn_lib.GnnConfig, shape: shp.GraphShape,
+             mesh: Mesh, *, roofline: bool = False,
+             scan_knob: Optional[int] = None,
+             variant: Optional[str] = None) -> Cell:
+    # graphs have no TP dim: nodes/edges shard over EVERY mesh axis
+    # (a data-axes-only layout leaves 16x more per-device edge state —
+    # ogb_products would need ~722 GB/dev instead of ~45)
+    ba = _row_axes(mesh)
+    cfg = dataclasses.replace(
+        cfg, d_feat=shape.d_feat,
+        n_layers=scan_knob if scan_knob else cfg.n_layers,
+        scan_unroll=cfg.n_layers if roofline and not scan_knob else 1)
+    params_sds = gnn_lib.abstract_params(cfg)
+    pspec = jax.tree.map(lambda _: P(), params_sds)  # replicated (small)
+    opt_sds = opt_lib.abstract_init(params_sds, OPT_CFG)
+    opt_spec = opt_lib.state_specs(pspec)
+
+    batch_sds = gnn_lib.GraphBatch(
+        node_feats=_sds((shape.n_nodes, shape.d_feat), jnp.float32),
+        edge_src=_sds((shape.n_edges,), jnp.int32),
+        edge_dst=_sds((shape.n_edges,), jnp.int32),
+        targets=_sds((shape.n_nodes, cfg.n_vars), jnp.float32))
+    batch_spec = gnn_lib.GraphBatch(
+        node_feats=P(ba, None), edge_src=P(ba), edge_dst=P(ba),
+        targets=P(ba, None))
+
+    def loss(p, node_feats, edge_src, edge_dst, targets):
+        return gnn_lib.loss_fn(p, cfg, gnn_lib.GraphBatch(
+            node_feats, edge_src, edge_dst, targets))
+
+    step = trainer_lib.make_train_step(loss, OPT_CFG, param_dtype=cfg.jdtype)
+    return Cell(
+        arch=cfg.name, shape=shape.name, fn=step,
+        args=(params_sds, opt_sds, tuple(batch_sds)),
+        in_shardings=(_shard(mesh, pspec), _shard(mesh, opt_spec),
+                      _shard(mesh, tuple(batch_spec))),
+        donate_argnums=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# recsys family
+# ---------------------------------------------------------------------------
+
+def _recsys_batch(arch: str, cfg, b: int):
+    """(sds tree, spec tree, loss_fn(params, *leaves)) per arch."""
+    if arch == "fm":
+        ids = _sds((b, cfg.n_sparse), jnp.int32)
+        lbl = _sds((b,), jnp.float32)
+        return ((ids, lbl), (P(("data",), None), P(("data",))),
+                lambda p, i, l: rec_lib.fm_loss(p, cfg, i, l))
+    if arch == "dcn-v2":
+        dense = _sds((b, cfg.n_dense), jnp.float32)
+        ids = _sds((b, cfg.n_sparse), jnp.int32)
+        lbl = _sds((b,), jnp.float32)
+        return ((dense, ids, lbl),
+                (P(("data",), None), P(("data",), None), P(("data",))),
+                lambda p, d, i, l: rec_lib.dcnv2_loss(p, cfg, d, i, l))
+    if arch == "dien":
+        hist = _sds((b, cfg.seq_len), jnp.int32)
+        tgt = _sds((b,), jnp.int32)
+        lbl = _sds((b,), jnp.float32)
+        return ((hist, tgt, lbl),
+                (P(("data",), None), P(("data",)), P(("data",))),
+                lambda p, h, t, l: rec_lib.dien_loss(p, cfg, h, t, l))
+    if arch == "two-tower-retrieval":
+        uf = _sds((b, cfg.n_user_feats), jnp.int32)
+        itf = _sds((b, cfg.n_item_feats), jnp.int32)
+        return ((uf, itf), (P(("data",), None), P(("data",), None)),
+                lambda p, u, i: rec_lib.twotower_loss(p, cfg, u, i))
+    raise KeyError(arch)
+
+
+def _recsys_forward(arch: str, cfg):
+    if arch == "fm":
+        return lambda p, i: rec_lib.fm_forward(p, cfg, i)
+    if arch == "dcn-v2":
+        return lambda p, d, i: rec_lib.dcnv2_forward(p, cfg, d, i)
+    if arch == "dien":
+        return lambda p, h, t: rec_lib.dien_forward(p, cfg, h, t)
+    if arch == "two-tower-retrieval":
+        return lambda p, u, i: jnp.einsum(
+            "bd,bd->b", rec_lib.user_embedding(p, cfg, u),
+            rec_lib.item_embedding(p, cfg, i))
+    raise KeyError(arch)
+
+
+def _recsys_init(arch: str, cfg, abstract: bool, key=None):
+    init = {"fm": rec_lib.fm_init, "dcn-v2": rec_lib.dcnv2_init,
+            "dien": rec_lib.dien_init,
+            "two-tower-retrieval": rec_lib.twotower_init}[arch]
+    return init(key, cfg, abstract=abstract)
+
+
+def _recsys_pspec(arch: str, params_sds):
+    """Row-shard every large table over 'model'; replicate small MLPs."""
+    def spec_for(path, leaf):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if "table" in name or "linear" in name:
+            return P("model", None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_sds)
+
+
+def recsys_cell(arch: str, cfg, shape: shp.RecsysShape, mesh: Mesh,
+                *, roofline: bool = False,
+                scan_knob: Optional[int] = None,
+                variant: Optional[str] = None) -> Cell:
+    if arch == "two-tower-retrieval" and variant == "bf16":
+        cfg = dataclasses.replace(cfg, dtype="bfloat16")
+    ba = _batch_axes(mesh)
+    if arch == "dien" and roofline:
+        cfg = dataclasses.replace(cfg, unroll=cfg.seq_len)
+    params_sds = _recsys_init(arch, cfg, abstract=True)
+    pspec = _recsys_pspec(arch, params_sds)
+
+    def fix_ba(spec):  # replace ("data",) with mesh batch axes
+        parts = tuple(ba if p == ("data",) else p for p in spec)
+        return P(*parts)
+
+    if shape.kind == "train":
+        batch_sds, batch_spec, loss = _recsys_batch(arch, cfg, shape.batch)
+        batch_spec = tuple(fix_ba(s) for s in batch_spec)
+        opt_sds = opt_lib.abstract_init(params_sds, OPT_CFG)
+        opt_spec = opt_lib.state_specs(pspec)
+        step = trainer_lib.make_train_step(loss, OPT_CFG,
+                                           param_dtype=cfg.jdtype)
+        return Cell(arch=arch, shape=shape.name, fn=step,
+                    args=(params_sds, opt_sds, batch_sds),
+                    in_shardings=(_shard(mesh, pspec), _shard(mesh, opt_spec),
+                                  _shard(mesh, batch_spec)),
+                    donate_argnums=(0, 1))
+
+    if shape.kind == "serve":
+        batch_sds, batch_spec, _ = _recsys_batch(arch, cfg, shape.batch)
+        batch_sds = batch_sds[:-1] if arch != "two-tower-retrieval" else batch_sds
+        batch_spec = tuple(fix_ba(s) for s in batch_spec)[: len(batch_sds)]
+        fwd = _recsys_forward(arch, cfg)
+        return Cell(arch=arch, shape=shape.name, fn=fwd,
+                    args=(params_sds,) + tuple(batch_sds),
+                    in_shardings=(_shard(mesh, pspec),)
+                    + tuple(_shard(mesh, s) for s in batch_spec))
+
+    # retrieval: 1 query vs n_candidates (padded to shard evenly)
+    ra = _row_axes(mesh)
+    n_shards = 1
+    for a in ra:
+        n_shards *= mesh.shape[a]
+    c = -(-shape.n_candidates // n_shards) * n_shards
+    if arch == "two-tower-retrieval":
+        uf = _sds((shape.batch, cfg.n_user_feats), jnp.int32)
+        cands = _sds((c, cfg.tower_mlp[-1]), jnp.float32)
+
+        def score(p, u, cand):
+            return rec_lib.twotower_score_candidates(p, cfg, u, cand)
+
+        return Cell(arch=arch, shape=shape.name, fn=score,
+                    args=(params_sds, uf, cands),
+                    in_shardings=(_shard(mesh, pspec),
+                                  _shard(mesh, P(None, None)),
+                                  _shard(mesh, P(ra, None))))
+    # ranking archs: bulk-score c candidates for one user context
+    if arch == "dien":
+        hist = _sds((1, cfg.seq_len), jnp.int32)
+        tgt = _sds((c,), jnp.int32)
+
+        def score(p, h, t):
+            hb = jnp.broadcast_to(h, (c, cfg.seq_len))
+            return rec_lib.dien_forward(p, cfg, hb, t)
+
+        return Cell(arch=arch, shape=shape.name, fn=score,
+                    args=(params_sds, hist, tgt),
+                    in_shardings=(_shard(mesh, pspec),
+                                  _shard(mesh, P(None, None)),
+                                  _shard(mesh, P(ra))))
+    if arch == "fm":
+        ids = _sds((c, cfg.n_sparse), jnp.int32)
+        fwd = _recsys_forward(arch, cfg)
+        return Cell(arch=arch, shape=shape.name, fn=fwd,
+                    args=(params_sds, ids),
+                    in_shardings=(_shard(mesh, pspec),
+                                  _shard(mesh, P(ra, None))))
+    # dcn-v2
+    dense = _sds((c, cfg.n_dense), jnp.float32)
+    ids = _sds((c, cfg.n_sparse), jnp.int32)
+    fwd = _recsys_forward(arch, cfg)
+    return Cell(arch=arch, shape=shape.name, fn=fwd,
+                args=(params_sds, dense, ids),
+                in_shardings=(_shard(mesh, pspec),
+                              _shard(mesh, P(ra, None)),
+                              _shard(mesh, P(ra, None))))
+
+
+# ---------------------------------------------------------------------------
+# remoterag (the paper's own service steps)
+# ---------------------------------------------------------------------------
+
+def remoterag_cell(shape: shp.RagShape, mesh: Mesh,
+                   params: Optional[rlwe.RlweParams] = None,
+                   *, roofline: bool = False,
+                   scan_knob: Optional[int] = None,
+                   variant: Optional[str] = None) -> Cell:
+    dtype = jnp.float32
+    per_tile_k = None
+    if shape.kind == "module1" and variant:
+        if "big" in variant:  # serving-scale stress: 64M docs, 256 queries
+            shape = dataclasses.replace(shape, corpus=2 ** 26, batch=256)
+        if "bf16" in variant:
+            dtype = jnp.bfloat16
+        if "ptk32" in variant:  # certificate-checked reduced local top-k
+            per_tile_k = 32
+    params = params or rlwe.RlweParams()
+    ra = _row_axes(mesh)
+    ba = _batch_axes(mesh)
+    if shape.kind == "module1":
+        corpus = _sds((shape.corpus, shape.dim), dtype)
+        queries = _sds((shape.batch, shape.dim), dtype)
+        search = make_sharded_topk(mesh, ra, shape.corpus, shape.kprime,
+                                   per_tile_k=per_tile_k, use_pallas=False)
+        return Cell(arch="remoterag", shape=shape.name,
+                    fn=lambda q, c: tuple(search(q, c)),
+                    args=(queries, corpus),
+                    in_shardings=(_shard(mesh, P(None, None)),
+                                  _shard(mesh, P(ra, None))))
+    # module 2a: batched encrypted re-ranking over R requests
+    chunks = params.num_chunks(shape.dim)
+    cpt = params.cands_per_ct(shape.dim)
+    num_ct = -(-shape.kprime // cpt)
+    r = shape.batch
+    c0 = _sds((r, chunks, params.num_primes, params.n_poly), jnp.int32)
+    packed = _sds((r, num_ct, chunks, params.num_primes, params.n_poly),
+                  jnp.int32)
+
+    def enc_scores(c0_, c1_, packed_):
+        # vectorized per-prime path, batched over (R, num_ct)
+        outs0, outs1 = [], []
+        from repro.kernels.ntt import ops as ntt_ops
+        from repro.crypto import modring
+        for i, ctx in enumerate(params.ctxs):
+            f0 = ntt_ops.ntt_fwd(c0_[:, :, i, :], ctx, use_pallas=False)
+            f1 = ntt_ops.ntt_fwd(c1_[:, :, i, :], ctx, use_pallas=False)
+            pk = packed_[:, :, :, i, :]                  # (R, CT, CH, N)
+            p0 = modring.mod_mul(pk, f0[:, None, :, :], ctx.q, ctx.mu)
+            p1 = modring.mod_mul(pk, f1[:, None, :, :], ctx.q, ctx.mu)
+            a0 = p0[:, :, 0, :]
+            a1 = p1[:, :, 0, :]
+            for ch in range(1, chunks):
+                a0 = modring.mod_add(a0, p0[:, :, ch, :], ctx.q)
+                a1 = modring.mod_add(a1, p1[:, :, ch, :], ctx.q)
+            outs0.append(ntt_ops.ntt_inv(a0, ctx, use_pallas=False))
+            outs1.append(ntt_ops.ntt_inv(a1, ctx, use_pallas=False))
+        return jnp.stack(outs0, 2), jnp.stack(outs1, 2)
+
+    return Cell(arch="remoterag", shape=shape.name, fn=enc_scores,
+                args=(c0, c0, packed),
+                in_shardings=(_shard(mesh, P(ba, None, None, None)),
+                              _shard(mesh, P(ba, None, None, None)),
+                              _shard(mesh, P(ba, None, None, None, None))))
+
+
+__all__ = ["Cell", "lm_cell", "gnn_cell", "recsys_cell", "remoterag_cell",
+           "OPT_CFG"]

@@ -1,0 +1,9 @@
+"""remoterag — the paper's own service config: N=1e6 documents, n=768
+embeddings (gtr-t5-base), k=5, k'=160 (the Table-4 operating point)."""
+from repro.crypto.rlwe import RlweParams
+
+RLWE = RlweParams()
+N_DOCS = 10 ** 6
+DIM = 768
+K = 5
+KPRIME = 160

@@ -1,0 +1,93 @@
+"""(n, eps)-DistanceDP mechanism (paper Definition 1 + Section 3.2.1).
+
+Mechanism: given a query embedding ``e in R^n`` and budget ``eps``, output
+``e' = e + r * v`` with radial component ``r ~ Gamma(n, 1/eps)`` and direction
+``v`` uniform on the unit sphere.  The output density is
+
+    D_{n,eps}(x | e)  proportional to  exp(-eps * ||x - e||)
+
+so for any x, x':  |log p(y|x) - log p(y|x')| = eps * | ||y-x|| - ||y-x'|| |
+<= eps * ||x - x'||  (triangle inequality), i.e. (n, eps)-DistanceDP holds.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+class Perturbation(NamedTuple):
+    embedding: jax.Array  # e' = e + r*v, shape (..., n)
+    radius: jax.Array     # r, shape (...,)
+    direction: jax.Array  # v, unit-norm, shape (..., n)
+
+
+def sample_radial(key, n: int, eps, shape=()):
+    """r ~ Gamma(shape=n, scale=1/eps).  Mean n/eps, concentrates for large n."""
+    g = jax.random.gamma(key, a=float(n), shape=shape, dtype=jnp.float32)
+    return g / jnp.asarray(eps, jnp.float32)
+
+
+def sample_direction(key, n: int, shape=()):
+    """Uniform direction on S^{n-1} via normalized gaussians."""
+    t = jax.random.normal(key, shape + (n,), dtype=jnp.float32)
+    return t / jnp.linalg.norm(t, axis=-1, keepdims=True)
+
+
+def perturb(key, e, eps) -> Perturbation:
+    """Apply the (n, eps)-DistanceDP mechanism to embedding(s) ``e``.
+
+    ``e`` has shape (..., n); one independent perturbation per leading index.
+    """
+    e = jnp.asarray(e, jnp.float32)
+    n = e.shape[-1]
+    kr, kd = jax.random.split(key)
+    r = sample_radial(kr, n, eps, e.shape[:-1])
+    v = sample_direction(kd, n, e.shape[:-1])
+    return Perturbation(e + r[..., None] * v, r, v)
+
+
+def log_density_unnormalized(y, x, eps):
+    """log D_{n,eps}(y | x) up to the (x-independent) normalizer."""
+    y = jnp.asarray(y, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    return -jnp.asarray(eps, jnp.float32) * jnp.linalg.norm(y - x, axis=-1)
+
+
+def dp_log_ratio(y, x, x_alt, eps):
+    """L(K(x), K(x')) evaluated at y: must be <= eps * ||x - x'||."""
+    return log_density_unnormalized(y, x, eps) - log_density_unnormalized(y, x_alt, eps)
+
+
+def radial_quantile_np(n: int, eps: float, q: float) -> float:
+    """Host-side Gamma(n, 1/eps) quantile — used by the planner for robust k'."""
+    import scipy.special as sps
+
+    return float(sps.gammaincinv(n, q) / eps)
+
+
+def expected_radius(n: int, eps: float) -> float:
+    """E[r] = n / eps (paper: delta_alpha_k ~= r_bar = n/eps)."""
+    return n / eps
+
+
+def eps_for_radius(n: int, r: float) -> float:
+    """Budget giving expected perturbation radius r."""
+    return n / r
+
+
+__all__ = [
+    "Perturbation",
+    "sample_radial",
+    "sample_direction",
+    "perturb",
+    "log_density_unnormalized",
+    "dp_log_ratio",
+    "radial_quantile_np",
+    "expected_radius",
+    "eps_for_radius",
+]

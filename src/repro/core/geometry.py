@@ -1,0 +1,167 @@
+"""Hypersphere-cap geometry for RemoteRAG (paper Lemma 1, Theorems 1-3).
+
+All embeddings live on the unit sphere S^{n-1} subset R^n.  The paper models the
+corpus as N points uniform on the sphere; the *cap fraction* F(alpha) is the
+fraction of the sphere's surface within polar angle alpha of a given point:
+
+    F(alpha) = (Omega_{n-1}(pi) / Omega_n(pi)) * int_0^alpha sin^{n-2}(t) dt
+             = 1/2 * I_{sin^2 alpha}((n-1)/2, 1/2)          for alpha <= pi/2
+             = 1 - 1/2 * I_{sin^2 alpha}((n-1)/2, 1/2)      for alpha >  pi/2
+
+where I is the regularized incomplete beta function.  Lemma 1 is then
+``k = N * F(alpha_k)``; Theorem 1 is ``k' = N * F(alpha_k + delta_alpha)``;
+Theorem 3 is ``tan(omega) = tan(alpha_k) / sqrt(k)``.
+
+Everything here is pure math: the JAX paths are jittable (used inside the
+protocol), the scipy paths are host-side planners (exact inverse beta).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import scipy.special as sps
+
+import jax
+import jax.numpy as jnp
+from jax.scipy import special as jsp
+
+
+# ---------------------------------------------------------------------------
+# Cap fraction (Lemma 1)
+# ---------------------------------------------------------------------------
+
+def cap_fraction(alpha, n: int):
+    """Fraction of S^{n-1} surface within polar angle ``alpha`` (JAX, jittable)."""
+    alpha = jnp.asarray(alpha, jnp.float32)
+    a = (n - 1) / 2.0
+    b = 0.5
+    s2 = jnp.sin(alpha) ** 2
+    half = 0.5 * jsp.betainc(a, b, jnp.clip(s2, 0.0, 1.0))
+    return jnp.where(alpha <= jnp.pi / 2, half, 1.0 - half)
+
+
+def cap_fraction_np(alpha, n: int):
+    """Host/double-precision cap fraction (numpy+scipy)."""
+    alpha = np.asarray(alpha, np.float64)
+    s2 = np.clip(np.sin(alpha) ** 2, 0.0, 1.0)
+    half = 0.5 * sps.betainc((n - 1) / 2.0, 0.5, s2)
+    return np.where(alpha <= np.pi / 2, half, 1.0 - half)
+
+
+def alpha_from_fraction_np(frac, n: int):
+    """Inverse of :func:`cap_fraction_np` — polar angle containing fraction ``frac``."""
+    frac = np.asarray(frac, np.float64)
+    if np.any((frac < 0) | (frac > 1)):
+        raise ValueError("cap fraction must be in [0, 1]")
+    lower = np.minimum(frac, 1.0 - frac)  # solve on the <= pi/2 branch
+    s2 = sps.betaincinv((n - 1) / 2.0, 0.5, np.clip(2.0 * lower, 0.0, 1.0))
+    alpha = np.arcsin(np.sqrt(np.clip(s2, 0.0, 1.0)))
+    return np.where(frac <= 0.5, alpha, np.pi - alpha)
+
+
+def alpha_from_fraction(frac, n: int, *, iters: int = 60):
+    """JAX bisection inverse of :func:`cap_fraction` (jittable, f32)."""
+    frac = jnp.asarray(frac, jnp.float32)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        too_small = cap_fraction(mid, n) < frac
+        return jnp.where(too_small, mid, lo), jnp.where(too_small, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(
+        0, iters, body, (jnp.zeros_like(frac), jnp.full_like(frac, jnp.pi))
+    )
+    return 0.5 * (lo + hi)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 — search-range inflation
+# ---------------------------------------------------------------------------
+
+def perturbed_angle(r, *, conservative: bool = False):
+    """Angle between ``e_k`` and ``e_k + r*v`` for unit ``e_k``.
+
+    The paper approximates ``delta_alpha ~= r`` (small-r chord~angle).  The
+    conservative variant uses the worst case over directions v, which is the
+    tangent angle ``arcsin(r)`` for r < 1 (and pi for r >= 1).
+    """
+    r = np.asarray(r, np.float64)
+    if conservative:
+        return np.where(r < 1.0, np.arcsin(np.clip(r, 0.0, 1.0)), np.pi)
+    return r
+
+
+def kprime_for(
+    k: int,
+    N: int,
+    n: int,
+    r: float,
+    *,
+    conservative: bool = True,
+    slack: float = 1.0,
+) -> int:
+    """Theorem 1: minimum k' so that top-k' of e_{k'} contains top-k of e_k.
+
+    ``r`` is the (expected or quantile) perturbation radius; ``slack``
+    multiplies delta_alpha for extra safety margin.
+    """
+    if k <= 0:
+        raise ValueError("k must be positive")
+    if k >= N:
+        return N
+    alpha_k = float(alpha_from_fraction_np(k / N, n))
+    d_alpha = float(perturbed_angle(r, conservative=conservative)) * slack
+    alpha_kp = min(alpha_k + d_alpha, np.pi)
+    kp = int(np.ceil(N * float(cap_fraction_np(alpha_kp, n))))
+    return max(min(kp, N), k)
+
+
+def delta_k(k: int, N: int, n: int, r: float, **kw) -> int:
+    """Theorem 1 stated as the increment ``k' - k``."""
+    return kprime_for(k, N, n, r, **kw) - k
+
+
+# ---------------------------------------------------------------------------
+# Theorem 3 — mean-embedding leakage angle
+# ---------------------------------------------------------------------------
+
+def mean_angle_omega(alpha_k, k):
+    """Theorem 3: mean angle between e_k and the mean of its top-k neighbours."""
+    return np.arctan(np.tan(np.asarray(alpha_k, np.float64)) / np.sqrt(k))
+
+
+def leakage_requires_ot(k: int, N: int, n: int, eps: float) -> bool:
+    """Algorithm 2 line 7: OT needed iff omega < delta_alpha_mean (= n/eps)."""
+    alpha_k = float(alpha_from_fraction_np(k / N, n))
+    omega = float(mean_angle_omega(alpha_k, k))
+    return omega < (n / eps)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2 — metric equivalence (used by tests and the scorer)
+# ---------------------------------------------------------------------------
+
+def l2_from_cos(d_cos):
+    """Theorem 2: d_l2 = sqrt(2 * d_cos) for unit-norm embeddings."""
+    return jnp.sqrt(2.0 * jnp.asarray(d_cos))
+
+
+def cos_distance(a, b):
+    """Cosine distance 1 - <a, b> for (batched) unit-norm embeddings."""
+    return 1.0 - jnp.sum(jnp.asarray(a) * jnp.asarray(b), axis=-1)
+
+
+__all__ = [
+    "cap_fraction",
+    "cap_fraction_np",
+    "alpha_from_fraction",
+    "alpha_from_fraction_np",
+    "perturbed_angle",
+    "kprime_for",
+    "delta_k",
+    "mean_angle_omega",
+    "leakage_requires_ot",
+    "l2_from_cos",
+    "cos_distance",
+]

@@ -1,0 +1,234 @@
+"""End-to-end RemoteRAG protocol (paper Algorithms 1 + 2).
+
+Two explicit state machines — `RemoteRagUser` and `RemoteRagCloud` — exchange
+typed messages so tests and benchmarks can meter every byte on the wire.
+
+    user                                   cloud
+    ----                                   -----
+    Module 1: perturb e_k -> e_k' (DistanceDP), plan k'
+    Module 2a: enc(e_k)
+          -- Request{e_k', k', enc_query} -->
+                                           top-k' of e_k' over sharded index
+                                           encrypted cos-distances on the k'
+          <-- Reply{candidate_ids, enc_scores} --
+    decrypt + sort -> local top-k candidate positions
+    Theorem 3: omega >= delta_alpha ?
+      yes -- Fetch{positions} -->          return docs        (Module 2b)
+      no  -- k-of-k' OT        -->         oblivious docs     (Module 2c)
+
+Crypto backend: "rlwe" (TPU-native, default) or "paillier" (paper-faithful).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distancedp, planner
+from repro.core.planner import ProtocolPlan
+from repro.crypto import ot as ot_mod
+from repro.crypto import paillier as pai
+from repro.crypto import rlwe
+from repro.retrieval.index import FlatIndex
+from repro.retrieval.topk import distributed_topk
+
+
+# ---------------------------------------------------------------------------
+# wire messages
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    perturbed: np.ndarray          # e_k' (n,)
+    kprime: int
+    enc_query: object              # rlwe.QueryCiphertext | list[int] (paillier)
+    backend: str
+
+    def nbytes(self, params: Optional[rlwe.RlweParams] = None,
+               key_bits: int = 2048) -> int:
+        base = self.perturbed.size * 4 + 4
+        if self.backend == "rlwe":
+            assert params is not None
+            chunks = self.enc_query.c0.shape[0]
+            return base + chunks * params.ciphertext_bytes()
+        return base + len(self.enc_query) * 2 * key_bits // 8
+
+
+@dataclasses.dataclass
+class Reply:
+    candidate_ids: np.ndarray      # (k',) global ids (order defines positions)
+    enc_scores: object             # rlwe.ScoreCiphertexts | list[int]
+
+    def nbytes(self, params: Optional[rlwe.RlweParams] = None,
+               key_bits: int = 2048) -> int:
+        base = self.candidate_ids.size * 4
+        if isinstance(self.enc_scores, rlwe.ScoreCiphertexts):
+            assert params is not None
+            num_ct = self.enc_scores.c0.shape[0]
+            return base + num_ct * params.ciphertext_bytes()
+        return base + len(self.enc_scores) * 2 * key_bits // 8
+
+
+@dataclasses.dataclass
+class FetchDirect:
+    positions: Sequence[int]       # positions within candidate_ids (k of them)
+
+    def nbytes(self) -> int:
+        return len(self.positions) * 4
+
+
+@dataclasses.dataclass
+class Documents:
+    docs: List[bytes]
+
+    def nbytes(self) -> int:
+        return sum(len(d) for d in self.docs)
+
+
+# ---------------------------------------------------------------------------
+# cloud
+# ---------------------------------------------------------------------------
+
+class RemoteRagCloud:
+    """Holds the sharded index + documents; executes modules 1, 2a, 2b, 2c."""
+
+    def __init__(self, index: FlatIndex, *,
+                 rlwe_params: Optional[rlwe.RlweParams] = None):
+        self.index = index
+        self.rlwe_params = rlwe_params or rlwe.RlweParams()
+
+    def handle_request(self, req: Request) -> Reply:
+        q = jnp.asarray(req.perturbed, jnp.float32)[None, :]
+        res = distributed_topk(self.index, q, req.kprime)
+        cand_ids = np.asarray(res.indices)[0]
+        cand_rows = np.asarray(self.index.rows(cand_ids))
+        if req.backend == "rlwe":
+            packed = rlwe.pack_candidates(self.rlwe_params, cand_rows)
+            enc = rlwe.encrypted_scores(self.rlwe_params, req.enc_query, packed)
+        else:
+            enc = pai.encrypted_scores(self._paillier_pub, req.enc_query,
+                                       cand_rows)
+        return Reply(candidate_ids=cand_ids, enc_scores=enc)
+
+    def register_paillier(self, pub: pai.PaillierPublicKey) -> None:
+        self._paillier_pub = pub
+
+    def handle_fetch(self, cand_ids: np.ndarray, msg: FetchDirect) -> Documents:
+        ids = [int(cand_ids[p]) for p in msg.positions]
+        return Documents(docs=self.index.fetch_documents(ids))
+
+    def ot_documents(self, cand_ids: np.ndarray) -> List[bytes]:
+        docs = self.index.fetch_documents([int(i) for i in cand_ids])
+        width = max(len(d) for d in docs)
+        return [d.ljust(width, b"\x00") for d in docs]
+
+
+# ---------------------------------------------------------------------------
+# user
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ProtocolTranscript:
+    plan: ProtocolPlan
+    path: str                      # "direct" | "ot"
+    request_bytes: int
+    reply_bytes: int
+    fetch_bytes: int
+    docs_bytes: int
+    ot_wire_bytes: int = 0
+
+    @property
+    def total_bytes(self) -> int:
+        return (self.request_bytes + self.reply_bytes + self.fetch_bytes
+                + self.docs_bytes + self.ot_wire_bytes)
+
+
+class RemoteRagUser:
+    def __init__(self, *, n: int, N: int, k: int,
+                 eps: Optional[float] = None, radius: Optional[float] = None,
+                 backend: str = "rlwe",
+                 rlwe_params: Optional[rlwe.RlweParams] = None,
+                 paillier_bits: int = 512,
+                 rng: Optional[np.random.Generator] = None,
+                 plan_kwargs: Optional[dict] = None):
+        assert backend in ("rlwe", "paillier")
+        self.backend = backend
+        self.rng = rng or np.random.default_rng(0)
+        self.plan = planner.plan(n=n, N=N, k=k, eps=eps, radius=radius,
+                                 **(plan_kwargs or {}))
+        if backend == "rlwe":
+            self.rlwe_params = rlwe_params or rlwe.RlweParams()
+            self.sk = rlwe.keygen(self.rlwe_params, self.rng)
+        else:
+            self.sk = pai.keygen(paillier_bits)
+
+    # -- module 1 + 2a ------------------------------------------------------
+    def make_request(self, e: np.ndarray, key: jax.Array) -> Request:
+        self._e = np.asarray(e, np.float64)
+        pert = distancedp.perturb(key, jnp.asarray(e, jnp.float32),
+                                  self.plan.eps)
+        if self.backend == "rlwe":
+            enc = rlwe.encrypt_query(self.sk, self._e, self.rng)
+        else:
+            enc = pai.encrypt_vector(self.sk.pub, self._e)
+        return Request(perturbed=np.asarray(pert.embedding),
+                       kprime=self.plan.kprime, enc_query=enc,
+                       backend=self.backend)
+
+    # -- decrypt + sort (module 2a end) --------------------------------------
+    def top_positions(self, reply: Reply) -> np.ndarray:
+        if self.backend == "rlwe":
+            scores = rlwe.decrypt_scores(self.sk, reply.enc_scores)
+        else:
+            scores = pai.decrypt_scores(self.sk, reply.enc_scores)
+        scores = scores[: len(reply.candidate_ids)]
+        order = np.argsort(-scores, kind="stable")
+        return order[: self.plan.k]
+
+    # -- module 2b / 2c ------------------------------------------------------
+    def retrieve(self, cloud: RemoteRagCloud, reply: Reply,
+                 positions: np.ndarray) -> tuple:
+        """Returns (documents, transcript extras)."""
+        if not self.plan.use_ot:
+            msg = FetchDirect(positions=[int(p) for p in positions])
+            docs = cloud.handle_fetch(reply.candidate_ids, msg)
+            return docs.docs, dict(fetch_bytes=msg.nbytes(),
+                                   docs_bytes=docs.nbytes(), ot_wire_bytes=0)
+        padded = cloud.ot_documents(reply.candidate_ids)
+        got, wire = ot_mod.run_ot(padded, [int(p) for p in positions])
+        docs = [d.rstrip(b"\x00") for d in got]
+        return docs, dict(fetch_bytes=0, docs_bytes=0, ot_wire_bytes=wire)
+
+
+# ---------------------------------------------------------------------------
+# one-shot driver
+# ---------------------------------------------------------------------------
+
+def run_remoterag(user: RemoteRagUser, cloud: RemoteRagCloud, e: np.ndarray,
+                  key: jax.Array) -> tuple:
+    """Full protocol round; returns (docs, top-k global ids, transcript)."""
+    if user.backend == "paillier":
+        cloud.register_paillier(user.sk.pub)
+    req = user.make_request(e, key)
+    reply = cloud.handle_request(req)
+    positions = user.top_positions(reply)
+    docs, extras = user.retrieve(cloud, reply, positions)
+    params = user.rlwe_params if user.backend == "rlwe" else None
+    kb = user.sk.pub.key_bits if user.backend == "paillier" else 2048
+    transcript = ProtocolTranscript(
+        plan=user.plan, path=user.plan.path,
+        request_bytes=req.nbytes(params, kb),
+        reply_bytes=reply.nbytes(params, kb), **extras)
+    ids = np.asarray([int(reply.candidate_ids[p]) for p in positions])
+    return docs, ids, transcript
+
+
+__all__ = [
+    "Request", "Reply", "FetchDirect", "Documents", "RemoteRagCloud",
+    "RemoteRagUser", "ProtocolTranscript", "run_remoterag",
+]

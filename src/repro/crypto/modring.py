@@ -1,0 +1,219 @@
+"""Modular-arithmetic substrate for the TPU-native RLWE path.
+
+Design constraints (TPU int32 lanes, no 64-bit integers on the device path):
+
+  * RNS primes q in (2^19, 2^20) with q = 1 (mod 2N)  -> NTT-friendly and every
+    partial product in the limb-split modular multiply fits in int32:
+      - one operand split into 10-bit limbs: a*b_hi < 2^20 * 2^10 = 2^30
+      - Barrett estimate (x >> 11) * mu with mu = floor(2^30 / q) < 2^11:
+        (2^20)(2^11) < 2^31
+  * ``mod_mul`` below is written with jnp ops only and is used verbatim inside
+    the Pallas NTT kernel and in the pure-JAX fallback path.
+
+Host-side helpers (prime search, primitive roots, twiddle tables) use Python
+bignums; the resulting tables are int32 numpy arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Host-side number theory (Python ints)
+# ---------------------------------------------------------------------------
+
+
+def is_prime(n: int) -> bool:
+    """Deterministic Miller-Rabin for n < 3.3e24 (fixed witness set)."""
+    if n < 2:
+        return False
+    for p in (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37):
+        if n % p == 0:
+            return n == p
+    d, s = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        s += 1
+    for a in (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37):
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(s - 1):
+            x = x * x % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def find_ntt_primes(two_n: int, count: int, *, lo: int = 1 << 19, hi: int = 1 << 20):
+    """Primes q in (lo, hi) with q = 1 mod two_n, largest first."""
+    primes = []
+    k = (hi - 1) // two_n
+    while k * two_n + 1 > lo and len(primes) < count:
+        q = k * two_n + 1
+        if q < hi and is_prime(q):
+            primes.append(q)
+        k -= 1
+    if len(primes) < count:
+        raise ValueError(f"only {len(primes)} NTT primes = 1 mod {two_n} in range")
+    return tuple(primes)
+
+
+def primitive_root(q: int) -> int:
+    """Smallest generator of Z_q^* (q prime)."""
+    factors = []
+    phi = q - 1
+    m = phi
+    d = 2
+    while d * d <= m:
+        if m % d == 0:
+            factors.append(d)
+            while m % d == 0:
+                m //= d
+        d += 1
+    if m > 1:
+        factors.append(m)
+    for g in range(2, q):
+        if all(pow(g, phi // f, q) != 1 for f in factors):
+            return g
+    raise ValueError("no generator found")
+
+
+def root_of_unity(q: int, order: int) -> int:
+    """Element of exact multiplicative order ``order`` mod q."""
+    if (q - 1) % order != 0:
+        raise ValueError(f"{order} does not divide {q}-1")
+    g = primitive_root(q)
+    w = pow(g, (q - 1) // order, q)
+    assert pow(w, order, q) == 1 and pow(w, order // 2, q) == q - 1
+    return w
+
+
+def bit_reverse_indices(n: int) -> np.ndarray:
+    bits = n.bit_length() - 1
+    idx = np.arange(n)
+    rev = np.zeros(n, dtype=np.int64)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+# ---------------------------------------------------------------------------
+# Per-prime constant bundle
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PrimeCtx:
+    """Everything the NTT kernel needs for one RNS prime.
+
+    ``eq=False``: instances hash by identity; ``build`` is lru_cached so each
+    (q, n) pair maps to a single instance, making it a valid jit static arg.
+    """
+
+    q: int
+    mu: int            # floor(2^30 / q) for Barrett
+    n: int             # transform size (polynomial degree)
+    psi_table: np.ndarray      # (n,) int32 — bit-rev ordered powers of psi (2n-th root)
+    ipsi_table: np.ndarray     # (n,) int32 — bit-rev ordered powers of psi^{-1}
+    n_inv: int         # N^{-1} mod q
+
+    @classmethod
+    @functools.lru_cache(maxsize=None)
+    def build(cls, q: int, n: int) -> "PrimeCtx":
+        psi = root_of_unity(q, 2 * n)
+        ipsi = pow(psi, -1, q)
+        rev = bit_reverse_indices(n)
+        psi_pows = np.array([pow(psi, int(i), q) for i in range(n)], dtype=np.int64)
+        ipsi_pows = np.array([pow(ipsi, int(i), q) for i in range(n)], dtype=np.int64)
+        return cls(
+            q=q,
+            mu=(1 << 30) // q,
+            n=n,
+            psi_table=psi_pows[rev].astype(np.int32),
+            ipsi_table=ipsi_pows[rev].astype(np.int32),
+            n_inv=pow(n, -1, q),
+        )
+
+
+# ---------------------------------------------------------------------------
+# int32-lane-safe modular primitives (jnp; usable inside Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def barrett_reduce(x, q: int, mu: int):
+    """x mod q for 0 <= x < 2^31, q in (2^19, 2^20), mu = floor(2^30/q).
+
+    All intermediates fit in int32:  (x >> 11) < 2^20,  mu < 2^11.
+    Estimate error < 4, corrected by 4 conditional subtractions.
+    """
+    est = ((x >> 11) * jnp.int32(mu)) >> 19
+    r = x - est * jnp.int32(q)
+    for _ in range(4):
+        r = jnp.where(r >= q, r - jnp.int32(q), r)
+    return r
+
+
+def mod_mul(a, b, q: int, mu: int):
+    """(a * b) mod q with a, b in [0, q), q < 2^20 — int32-safe limb split."""
+    b_hi = b >> 10
+    b_lo = b & jnp.int32(1023)
+    t = barrett_reduce(a * b_hi, q, mu)          # a*b_hi < 2^30
+    t = (t << 10) + a * b_lo                     # < (q-1)(2^11 - 1) < 2^31
+    return barrett_reduce(t, q, mu)
+
+
+def mod_add(a, b, q: int):
+    s = a + b
+    return jnp.where(s >= q, s - jnp.int32(q), s)
+
+
+def mod_sub(a, b, q: int):
+    d = a - b
+    return jnp.where(d < 0, d + jnp.int32(q), d)
+
+
+# ---------------------------------------------------------------------------
+# numpy int64 oracles (independent implementation for tests)
+# ---------------------------------------------------------------------------
+
+
+def mod_mul_np(a, b, q: int):
+    return (a.astype(np.int64) * b.astype(np.int64)) % q
+
+
+def negacyclic_mul_np(a: np.ndarray, b: np.ndarray, q: int) -> np.ndarray:
+    """Schoolbook negacyclic convolution in Z_q[X]/(X^n + 1) (int64 numpy)."""
+    n = a.shape[-1]
+    a = a.astype(np.int64)
+    b = b.astype(np.int64)
+    full = np.zeros(a.shape[:-1] + (2 * n,), dtype=object)
+    # object dtype: exact big-int accumulation regardless of q and n
+    for i in range(n):
+        full[..., i : i + n] += a[..., i : i + 1] * b
+    lo = full[..., :n]
+    hi = full[..., n:]
+    return np.array((lo - hi) % q, dtype=np.int64)
+
+
+__all__ = [
+    "is_prime",
+    "find_ntt_primes",
+    "primitive_root",
+    "root_of_unity",
+    "bit_reverse_indices",
+    "PrimeCtx",
+    "barrett_reduce",
+    "mod_mul",
+    "mod_add",
+    "mod_sub",
+    "mod_mul_np",
+    "negacyclic_mul_np",
+]

@@ -1,0 +1,332 @@
+"""TPU-native RNS-RLWE additively homomorphic encryption ("BFV-lite").
+
+This is the hardware adaptation of the paper's PHE (Module 2a).  Paillier is
+bignum modexp — hostile to the MXU/VPU — so we use the RLWE analogue of "PHE
+with ct+ct and ct*plain": BFV without relinearisation.
+
+Scheme (symmetric key; the user is both encryptor and decryptor):
+
+  ring      R_q = Z_q[X]/(X^N + 1),  q = q_0 q_1 q_2  (RNS, ~20-bit NTT primes)
+  secret    s ternary in {-1, 0, 1}^N
+  enc(m)    c0 = a*s + e + Delta*m,  c1 = a;   a ~ U(R_q), e ~ CBD(eta)
+  dec(ct)   m = round(t/q * centered(c0 - c1*s)) mod t
+  add       componentwise;  ct (x) p = (c0*p, c1*p)  for plaintext p in R
+
+Encrypted inner products use negacyclic-convolution packing: the fixed-point
+query chunk is the plaintext of a ciphertext; each candidate chunk is packed
+*reversed* into a plain polynomial at block offset o_b, so coefficient
+o_b + chunk - 1 of ct (x) p is exactly <query_chunk, cand_chunk>.  Chunks of
+dimension > chunk_size are summed homomorphically.  Multiple candidates share
+one ciphertext via block stride (N/stride candidates per result ciphertext).
+
+Correctness budget (validated in `RlweParams.validate`): every *extraction*
+coefficient of m*p is an inner product of unit-norm vectors scaled by
+Delta_q*Delta_c (Cauchy-Schwarz) and therefore < t/2; mod-t wraps can only
+occur at garbage coefficients, which decryption treats coefficient-locally.
+Noise after plain-mult is ||e||_inf * ||p||_1 <= eta * C * Delta_c * sqrt(cs),
+far below q / (2t).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.crypto import modring
+from repro.crypto.modring import PrimeCtx
+from repro.kernels.ntt import ops as ntt_ops
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RlweParams:
+    n_poly: int = 4096          # ring dimension N
+    num_primes: int = 3         # RNS primes (~20 bits each)
+    t_bits: int = 28            # plaintext modulus t = 2^t_bits
+    scale_q_bits: int = 13      # query fixed-point scale  Delta_q = 2^13
+    scale_c_bits: int = 13      # candidate fixed-point scale Delta_c = 2^13
+    eta: int = 8                # CBD noise parameter, |e| <= eta
+    chunk: int = 1024           # dot-product chunk size (<= n_poly)
+
+    def __post_init__(self):
+        assert self.n_poly % self.chunk == 0
+        self.validate()
+
+    @functools.cached_property
+    def primes(self) -> tuple:
+        return modring.find_ntt_primes(2 * self.n_poly, self.num_primes)
+
+    @functools.cached_property
+    def ctxs(self) -> tuple:
+        return tuple(PrimeCtx.build(q, self.n_poly) for q in self.primes)
+
+    @functools.cached_property
+    def big_q(self) -> int:
+        return math.prod(self.primes)
+
+    @property
+    def t(self) -> int:
+        return 1 << self.t_bits
+
+    @functools.cached_property
+    def delta(self) -> int:
+        return self.big_q // self.t
+
+    @property
+    def scale_q(self) -> int:
+        return 1 << self.scale_q_bits
+
+    @property
+    def scale_c(self) -> int:
+        return 1 << self.scale_c_bits
+
+    def stride(self, n_dim: int) -> int:
+        """Block stride: extraction at o_b + chunk - 1 must clear the previous
+        block's span o_b + chunk - 1 + (chunk_used - 1)."""
+        return self.chunk if n_dim <= self.chunk else 2 * self.chunk
+
+    def cands_per_ct(self, n_dim: int) -> int:
+        return self.n_poly // self.stride(n_dim)
+
+    def num_chunks(self, n_dim: int) -> int:
+        return -(-n_dim // self.chunk)
+
+    def validate(self) -> None:
+        # plaintext range: extraction coefficients bounded by Delta_q*Delta_c
+        # (unit-norm Cauchy-Schwarz) + quantization slop < t/2.
+        assert (1 << (self.scale_q_bits + self.scale_c_bits)) * 1.1 < self.t / 2, \
+            "plaintext scales overflow t"
+        # noise: after plain-mult and chunk-summing,
+        #   |noise| <= eta * cands_per_ct_max * Delta_c * sqrt(chunk) * chunks_max
+        worst = (self.eta * (self.n_poly // self.chunk) * self.scale_c
+                 * math.isqrt(self.chunk) * 4)
+        assert 2 * self.t * worst < self.big_q, "noise budget exceeded"
+
+    def ciphertext_bytes(self, packed_bits: int = 20) -> int:
+        """Wire size of one ciphertext (2 components, RNS, bit-packed)."""
+        return 2 * self.num_primes * self.n_poly * packed_bits // 8
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RlweSecretKey:
+    params: RlweParams
+    s: np.ndarray          # (N,) int8 ternary
+    s_ntt: jnp.ndarray     # (P, N) int32 — NTT(s) per prime
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class QueryCiphertext:
+    """Encrypted, chunked query embedding: (chunks, P, N) int32 per component."""
+    c0: jnp.ndarray
+    c1: jnp.ndarray
+    n_dim: int
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PackedCandidates:
+    """NTT-domain packed candidate plaintexts.
+
+    polys: (num_ct, chunks, P, N) int32; candidate i lives in result ct
+    i // cands_per_ct at extraction coefficient (i % cands_per_ct) * stride
+    + chunk - 1.
+    """
+    polys: jnp.ndarray
+    n_dim: int
+    num_cands: int
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ScoreCiphertexts:
+    """Encrypted inner products: (num_ct, P, N) int32 per component."""
+    c0: jnp.ndarray
+    c1: jnp.ndarray
+    n_dim: int
+    num_cands: int
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _to_rns(values: np.ndarray, params: RlweParams) -> np.ndarray:
+    """Signed int64 (..., N) -> RNS int32 (P, ..., N)."""
+    out = [np.mod(values, q).astype(np.int32) for q in params.primes]
+    return np.stack(out, axis=0)
+
+
+def _cbd(rng: np.random.Generator, eta: int, n: int) -> np.ndarray:
+    a = rng.integers(0, 2, size=(eta, n)).sum(axis=0)
+    b = rng.integers(0, 2, size=(eta, n)).sum(axis=0)
+    return (a - b).astype(np.int64)
+
+
+def keygen(params: RlweParams, rng: np.random.Generator) -> RlweSecretKey:
+    s = rng.integers(-1, 2, size=(params.n_poly,)).astype(np.int8)
+    s_rns = _to_rns(s.astype(np.int64), params)  # (P, N)
+    s_ntt = jnp.stack([
+        ntt_ops.ntt_fwd(jnp.asarray(s_rns[i]), ctx)
+        for i, ctx in enumerate(params.ctxs)
+    ])
+    return RlweSecretKey(params=params, s=s, s_ntt=s_ntt)
+
+
+def _fixed_point(e: np.ndarray, scale: int) -> np.ndarray:
+    return np.rint(np.asarray(e, np.float64) * scale).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# user side: encrypt / decrypt
+# ---------------------------------------------------------------------------
+
+def encrypt_query(sk: RlweSecretKey, e: np.ndarray,
+                  rng: np.random.Generator) -> QueryCiphertext:
+    """Encrypt a unit-norm query embedding of any dimension (chunked)."""
+    p = sk.params
+    n_dim = e.shape[-1]
+    chunks = p.num_chunks(n_dim)
+    ints = _fixed_point(e, p.scale_q)
+    c0s, c1s = [], []
+    for c in range(chunks):
+        m = np.zeros(p.n_poly, np.int64)
+        seg = ints[c * p.chunk:(c + 1) * p.chunk]
+        m[: len(seg)] = seg
+        # signed (centered) encoding: Delta*m mod q, computed per RNS prime.
+        # An unsigned mod-t lift would add a Delta*t*w term that explodes
+        # under plain-mult; signed encoding keeps Dec(ct (x) p) = m*p exactly
+        # while |(m*p)_j| < t/2 at the coefficients we read.
+        err = _cbd(rng, p.eta, p.n_poly)
+        c0_p, c1_p = [], []
+        for i, ctx in enumerate(p.ctxs):
+            a = rng.integers(0, ctx.q, size=(p.n_poly,)).astype(np.int32)
+            dm = (int(p.delta % ctx.q) * np.mod(m, ctx.q)) % ctx.q  # int64 safe
+            a_s = ntt_ops.ntt_inv(
+                ntt_ops.pointwise_mul(
+                    ntt_ops.ntt_fwd(jnp.asarray(a), ctx), sk.s_ntt[i], ctx),
+                ctx)
+            c0 = (np.asarray(a_s).astype(np.int64) + err + dm) % ctx.q
+            c0_p.append(c0.astype(np.int32))
+            c1_p.append(a)
+        c0s.append(np.stack(c0_p))
+        c1s.append(np.stack(c1_p))
+    return QueryCiphertext(
+        c0=jnp.asarray(np.stack(c0s)), c1=jnp.asarray(np.stack(c1s)), n_dim=n_dim)
+
+
+def decrypt_scores(sk: RlweSecretKey, res: ScoreCiphertexts) -> np.ndarray:
+    """Decrypt packed inner products -> float scores (len num_cands)."""
+    p = sk.params
+    num_ct = res.c0.shape[0]
+    # d = c0 - c1 * s per prime (batched over result ciphertexts)
+    d_p = []
+    for i, ctx in enumerate(p.ctxs):
+        c1s = ntt_ops.ntt_inv(
+            ntt_ops.pointwise_mul(
+                ntt_ops.ntt_fwd(res.c1[:, i, :], ctx), sk.s_ntt[i][None, :], ctx),
+            ctx)
+        d = modring.mod_sub(res.c0[:, i, :], c1s, ctx.q)
+        d_p.append(np.asarray(d).astype(np.int64))
+    d_rns = np.stack(d_p, axis=1)  # (num_ct, P, N)
+
+    # CRT reconstruct only the extraction coefficients (Python bignums)
+    stride = p.stride(res.n_dim)
+    cpt = p.cands_per_ct(res.n_dim)
+    g = [p.big_q // q for q in p.primes]
+    h = [pow(gi % qi, -1, qi) for gi, qi in zip(g, p.primes)]
+    scale = float(p.scale_q * p.scale_c)
+    out = np.zeros(res.num_cands, np.float64)
+    for cand in range(res.num_cands):
+        ct_i, slot = divmod(cand, cpt)
+        coeff = slot * stride + p.chunk - 1
+        big = 0
+        for i, qi in enumerate(p.primes):
+            big += int(d_rns[ct_i, i, coeff]) * g[i] * h[i]
+        big %= p.big_q
+        if big > p.big_q // 2:
+            big -= p.big_q
+        val = round(big * p.t / p.big_q)  # noise removal
+        # centered mod t
+        val = ((val + p.t // 2) % p.t) - p.t // 2
+        out[cand] = val / scale
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cloud side: pack candidates, encrypted scoring
+# ---------------------------------------------------------------------------
+
+def pack_candidates(params: RlweParams, cands: np.ndarray) -> PackedCandidates:
+    """Pack candidate embeddings (num_cands, n_dim) into NTT-domain plaintexts."""
+    num_cands, n_dim = cands.shape
+    chunks = params.num_chunks(n_dim)
+    stride = params.stride(n_dim)
+    cpt = params.cands_per_ct(n_dim)
+    num_ct = -(-num_cands // cpt)
+    ints = _fixed_point(cands, params.scale_c)  # (num_cands, n_dim)
+
+    polys = np.zeros((num_ct, chunks, params.n_poly), np.int64)
+    for cand in range(num_cands):
+        ct_i, slot = divmod(cand, cpt)
+        o = slot * stride
+        for c in range(chunks):
+            seg = ints[cand, c * params.chunk:(c + 1) * params.chunk]
+            # reversed placement: p[o + chunk-1 - j] = seg[j]
+            idx = o + params.chunk - 1 - np.arange(len(seg))
+            polys[ct_i, c, idx] = seg
+    rns = _to_rns(polys, params)  # (P, num_ct, chunks, N)
+    ntt_polys = np.stack([
+        np.asarray(ntt_ops.ntt_fwd(jnp.asarray(rns[i]), ctx))
+        for i, ctx in enumerate(params.ctxs)
+    ])  # (P, num_ct, chunks, N)
+    return PackedCandidates(
+        polys=jnp.asarray(np.transpose(ntt_polys, (1, 2, 0, 3))),  # (ct, chunk, P, N)
+        n_dim=n_dim, num_cands=num_cands)
+
+
+def encrypted_scores(params: RlweParams, q_ct: QueryCiphertext,
+                     packed: PackedCandidates, *,
+                     use_pallas=None) -> ScoreCiphertexts:
+    """ct (x) p per candidate block, summed over chunks in the NTT domain.
+
+    This is the cloud's entire encrypted workload: 2 * chunks forward NTTs of
+    the query (amortized over all candidates), one Hadamard modmul per
+    (result-ct, chunk, component, prime), and 2 inverse NTTs per result ct.
+    """
+    assert q_ct.n_dim == packed.n_dim
+    num_ct = packed.polys.shape[0]
+    c0_out, c1_out = [], []
+    for i, ctx in enumerate(params.ctxs):
+        f0 = ntt_ops.ntt_fwd(q_ct.c0[:, i, :], ctx, use_pallas=use_pallas)
+        f1 = ntt_ops.ntt_fwd(q_ct.c1[:, i, :], ctx, use_pallas=use_pallas)
+        pk = packed.polys[:, :, i, :]                      # (num_ct, chunks, N)
+        f0b = jnp.broadcast_to(f0[None], pk.shape)
+        f1b = jnp.broadcast_to(f1[None], pk.shape)
+        prod0 = ntt_ops.pointwise_mul(pk, f0b, ctx, use_pallas=use_pallas)
+        prod1 = ntt_ops.pointwise_mul(pk, f1b, ctx, use_pallas=use_pallas)
+        # homomorphic chunk-sum in NTT domain (mod-add over chunk axis)
+        acc0 = prod0[:, 0, :]
+        acc1 = prod1[:, 0, :]
+        for c in range(1, prod0.shape[1]):
+            acc0 = modring.mod_add(acc0, prod0[:, c, :], ctx.q)
+            acc1 = modring.mod_add(acc1, prod1[:, c, :], ctx.q)
+        c0_out.append(ntt_ops.ntt_inv(acc0, ctx, use_pallas=use_pallas))
+        c1_out.append(ntt_ops.ntt_inv(acc1, ctx, use_pallas=use_pallas))
+    return ScoreCiphertexts(
+        c0=jnp.stack(c0_out, axis=1), c1=jnp.stack(c1_out, axis=1),
+        n_dim=q_ct.n_dim, num_cands=packed.num_cands)
+
+
+def cosine_distances(scores: np.ndarray) -> np.ndarray:
+    """Paper Definition 2 over decrypted inner products."""
+    return 1.0 - scores
+
+
+__all__ = [
+    "RlweParams", "RlweSecretKey", "QueryCiphertext", "PackedCandidates",
+    "ScoreCiphertexts", "keygen", "encrypt_query", "decrypt_scores",
+    "pack_candidates", "encrypted_scores", "cosine_distances",
+]

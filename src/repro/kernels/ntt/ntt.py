@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: batched negacyclic NTT over an RNS prime.
+
+Why a kernel: the RLWE encrypted-distance path (paper Module 2a, TPU-adapted)
+is dominated by forward/inverse NTTs over batches of polynomials.  The whole
+log2(N)-stage butterfly network runs on a VMEM-resident tile — one HBM read
+and one HBM write per polynomial regardless of stage count, with the 10-bit
+limb-split Barrett modular multiply (see `crypto/modring.py`) fused into every
+butterfly.  All arithmetic is int32; every partial product is < 2^31, so the
+kernel targets the TPU's native 32-bit integer lanes (no 64-bit emulation).
+
+Layout: polynomials are (batch, N) int32; the grid tiles the batch dimension.
+N is a power of two (256..16384); for N >= 256 rows are a multiple of the
+(8, 128) VPU tile after the internal (m, 2, t) reshapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.crypto import modring
+from repro.crypto.modring import PrimeCtx
+
+
+def _fwd_kernel(x_ref, psi_ref, o_ref, *, q: int, mu: int, n: int):
+    a = x_ref[...]
+    psi = psi_ref[...]
+    bt = a.shape[0]
+    t = n
+    m = 1
+    while m < n:
+        t //= 2
+        g = a.reshape(bt, m, 2, t)
+        s = jax.lax.dynamic_slice(psi, (m,), (m,)).reshape(1, m, 1)
+        u = g[:, :, 0, :]
+        v = modring.mod_mul(g[:, :, 1, :], s, q, mu)
+        a = jnp.stack(
+            [modring.mod_add(u, v, q), modring.mod_sub(u, v, q)], axis=2
+        ).reshape(bt, n)
+        m *= 2
+    o_ref[...] = a
+
+
+def _inv_kernel(x_ref, ipsi_ref, o_ref, *, q: int, mu: int, n: int, n_inv: int):
+    a = x_ref[...]
+    ipsi = ipsi_ref[...]
+    bt = a.shape[0]
+    t = 1
+    m = n
+    while m > 1:
+        h = m // 2
+        g = a.reshape(bt, h, 2, t)
+        s = jax.lax.dynamic_slice(ipsi, (h,), (h,)).reshape(1, h, 1)
+        u = g[:, :, 0, :]
+        v = g[:, :, 1, :]
+        a = jnp.stack(
+            [
+                modring.mod_add(u, v, q),
+                modring.mod_mul(modring.mod_sub(u, v, q), s, q, mu),
+            ],
+            axis=2,
+        ).reshape(bt, n)
+        t *= 2
+        m = h
+    o_ref[...] = modring.mod_mul(a, jnp.int32(n_inv), q, mu)
+
+
+def _pointwise_kernel(a_ref, b_ref, o_ref, *, q: int, mu: int):
+    o_ref[...] = modring.mod_mul(a_ref[...], b_ref[...], q, mu)
+
+
+def _tile(batch: int, n: int) -> int:
+    """Batch tile size so a tile is ~<=1 MiB of VMEM-resident int32."""
+    target = max(1, (1 << 20) // (4 * n))
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= target and batch % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("ctx", "inverse", "interpret"))
+def ntt_pallas(x, ctx: PrimeCtx, *, inverse: bool = False, interpret: bool = True):
+    """Batched (inverse) negacyclic NTT. x: (batch, N) int32 in [0, q)."""
+    batch, n = x.shape
+    assert n == ctx.n, (n, ctx.n)
+    bt = _tile(batch, n)
+    table = jnp.asarray(ctx.ipsi_table if inverse else ctx.psi_table)
+    if inverse:
+        kern = functools.partial(
+            _inv_kernel, q=ctx.q, mu=ctx.mu, n=n, n_inv=ctx.n_inv
+        )
+    else:
+        kern = functools.partial(_fwd_kernel, q=ctx.q, mu=ctx.mu, n=n)
+    return pl.pallas_call(
+        kern,
+        grid=(batch // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), jnp.int32),
+        interpret=interpret,
+    )(x, table)
+
+
+@functools.partial(jax.jit, static_argnames=("ctx", "interpret"))
+def pointwise_mul_pallas(a, b, ctx: PrimeCtx, *, interpret: bool = True):
+    """Elementwise modular multiply of NTT-domain polynomials (same shape)."""
+    assert a.shape == b.shape
+    batch, n = a.shape
+    bt = _tile(batch, n)
+    return pl.pallas_call(
+        functools.partial(_pointwise_kernel, q=ctx.q, mu=ctx.mu),
+        grid=(batch // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), jnp.int32),
+        interpret=interpret,
+    )(a, b)
+
+
+__all__ = ["ntt_pallas", "pointwise_mul_pallas"]

@@ -1,0 +1,74 @@
+"""Public jit'd API over the NTT kernel with an XLA fallback.
+
+``use_pallas`` selects the Pallas kernel (interpret-mode on CPU, compiled on
+TPU); the fallback is the pure-jnp reference, which XLA fuses reasonably but
+round-trips HBM between stages on real hardware.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.crypto.modring import PrimeCtx
+from repro.kernels.ntt import ntt as _kern
+from repro.kernels.ntt import ref as _ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _resolve(use_pallas):
+    """None -> auto: Pallas on TPU, XLA reference path elsewhere (tests pass
+    use_pallas=True explicitly to exercise the kernel in interpret mode)."""
+    if use_pallas is None:
+        return jax.default_backend() == "tpu"
+    return use_pallas
+
+
+def ntt_fwd(x, ctx: PrimeCtx, *, use_pallas=None):
+    """Forward negacyclic NTT, (..., N) int32 in [0, q) -> bit-rev NTT domain."""
+    use_pallas = _resolve(use_pallas)
+    if not use_pallas:
+        return _ref.ntt_fwd_ref(x, ctx)
+    lead = x.shape[:-1]
+    flat = x.reshape((-1, ctx.n))
+    out = _kern.ntt_pallas(flat, ctx, inverse=False, interpret=_interpret())
+    return out.reshape(lead + (ctx.n,))
+
+
+def ntt_inv(x, ctx: PrimeCtx, *, use_pallas=None):
+    """Inverse negacyclic NTT, bit-rev NTT domain -> coefficient domain."""
+    use_pallas = _resolve(use_pallas)
+    if not use_pallas:
+        return _ref.ntt_inv_ref(x, ctx)
+    lead = x.shape[:-1]
+    flat = x.reshape((-1, ctx.n))
+    out = _kern.ntt_pallas(flat, ctx, inverse=True, interpret=_interpret())
+    return out.reshape(lead + (ctx.n,))
+
+
+def pointwise_mul(a, b, ctx: PrimeCtx, *, use_pallas=None):
+    """Hadamard modular product in the NTT domain."""
+    use_pallas = _resolve(use_pallas)
+    if not use_pallas:
+        from repro.crypto import modring
+
+        return modring.mod_mul(a, b, ctx.q, ctx.mu)
+    lead = a.shape[:-1]
+    fa = a.reshape((-1, ctx.n))
+    fb = b.reshape((-1, ctx.n))
+    out = _kern.pointwise_mul_pallas(fa, fb, ctx, interpret=_interpret())
+    return out.reshape(lead + (ctx.n,))
+
+
+def negacyclic_mul(a, b, ctx: PrimeCtx, *, use_pallas=None):
+    """a * b in Z_q[X]/(X^N + 1)."""
+    use_pallas = _resolve(use_pallas)
+    fa = ntt_fwd(a, ctx, use_pallas=use_pallas)
+    fb = ntt_fwd(b, ctx, use_pallas=use_pallas)
+    return ntt_inv(pointwise_mul(fa, fb, ctx, use_pallas=use_pallas), ctx,
+                   use_pallas=use_pallas)
+
+
+__all__ = ["ntt_fwd", "ntt_inv", "pointwise_mul", "negacyclic_mul"]

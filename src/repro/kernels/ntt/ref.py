@@ -1,0 +1,81 @@
+"""Pure-jnp reference for the negacyclic NTT (oracle for the Pallas kernel).
+
+Implements the Longa-Naehrig merged-psi NTT (CT forward: standard -> bit-rev
+order; GS inverse: bit-rev -> standard) with the same int32-lane-safe modular
+primitives the kernel uses, expressed as plain jnp reshapes/broadcasts so XLA
+(not Pallas) executes it.  A second, fully independent numpy-int64 oracle
+(`modring.negacyclic_mul_np`) backs the tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.crypto import modring
+from repro.crypto.modring import PrimeCtx
+
+
+def ntt_fwd_ref(x, ctx: PrimeCtx):
+    """Forward negacyclic NTT. x: (..., N) int32 in [0, q). Out bit-rev order."""
+    n = ctx.n
+    assert x.shape[-1] == n
+    a = jnp.asarray(x, jnp.int32)
+    psi = jnp.asarray(ctx.psi_table)
+    lead = a.shape[:-1]
+    t = n
+    m = 1
+    while m < n:
+        t //= 2
+        g = a.reshape(lead + (m, 2, t))
+        s = psi[m : 2 * m].reshape((1,) * len(lead) + (m, 1))
+        u = g[..., 0, :]
+        v = modring.mod_mul(g[..., 1, :], s, ctx.q, ctx.mu)
+        a = jnp.stack(
+            [modring.mod_add(u, v, ctx.q), modring.mod_sub(u, v, ctx.q)], axis=-2
+        ).reshape(lead + (n,))
+        m *= 2
+    return a
+
+
+def ntt_inv_ref(x, ctx: PrimeCtx):
+    """Inverse negacyclic NTT. Input bit-rev order, output standard order."""
+    n = ctx.n
+    assert x.shape[-1] == n
+    a = jnp.asarray(x, jnp.int32)
+    ipsi = jnp.asarray(ctx.ipsi_table)
+    lead = a.shape[:-1]
+    t = 1
+    m = n
+    while m > 1:
+        h = m // 2
+        g = a.reshape(lead + (h, 2, t))
+        s = ipsi[h : 2 * h].reshape((1,) * len(lead) + (h, 1))
+        u = g[..., 0, :]
+        v = g[..., 1, :]
+        a = jnp.stack(
+            [
+                modring.mod_add(u, v, ctx.q),
+                modring.mod_mul(modring.mod_sub(u, v, ctx.q), s, ctx.q, ctx.mu),
+            ],
+            axis=-2,
+        ).reshape(lead + (n,))
+        t *= 2
+        m = h
+    n_inv = jnp.int32(ctx.n_inv)
+    return modring.mod_mul(a, n_inv, ctx.q, ctx.mu)
+
+
+def negacyclic_mul_ref(a, b, ctx: PrimeCtx):
+    """Negacyclic a*b in Z_q[X]/(X^N+1) via the reference NTT."""
+    fa = ntt_fwd_ref(a, ctx)
+    fb = ntt_fwd_ref(b, ctx)
+    return ntt_inv_ref(modring.mod_mul(fa, fb, ctx.q, ctx.mu), ctx)
+
+
+def random_poly(rng: np.random.Generator, shape, q: int) -> np.ndarray:
+    return rng.integers(0, q, size=shape, dtype=np.int64).astype(np.int32)
+
+
+__all__ = ["ntt_fwd_ref", "ntt_inv_ref", "negacyclic_mul_ref", "random_poly"]

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the fused score+select kernel.
+
+Scores are inner products (cosine similarity for unit-norm rows); the
+RemoteRAG cosine *distance* is 1 - score.  Ties break toward the lower index
+(XLA top_k semantics), matching the kernel's tile-major merge order.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def score_ref(queries, corpus):
+    """(B, n) x (N, n) -> (B, N) inner-product scores in f32."""
+    return jnp.dot(queries.astype(jnp.float32), corpus.astype(jnp.float32).T,
+                   preferred_element_type=jnp.float32)
+
+
+def topk_ref(queries, corpus, k: int):
+    """Exact top-k scores+indices per query: (B, k) vals, (B, k) int32 idx."""
+    scores = score_ref(queries, corpus)
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)
+
+
+def tile_topk_ref(queries, corpus, kk: int, tile: int):
+    """Per-tile top-kk (the kernel's actual contract).
+
+    Returns (num_tiles, B, kk) vals and global idx; tiles shorter than
+    ``tile`` are padded with -inf / index N.
+    """
+    b = queries.shape[0]
+    n_rows = corpus.shape[0]
+    num_tiles = -(-n_rows // tile)
+    pad = num_tiles * tile - n_rows
+    scores = score_ref(queries, corpus)  # (B, N)
+    scores = jnp.pad(scores, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+    tiles = scores.reshape(b, num_tiles, tile).transpose(1, 0, 2)
+    vals, idx = jax.lax.top_k(tiles, kk)  # (num_tiles, B, kk)
+    gidx = idx + (jnp.arange(num_tiles, dtype=jnp.int32) * tile)[:, None, None]
+    return vals, gidx.astype(jnp.int32)
+
+
+def merge_tiles_ref(vals, gidx, k: int):
+    """Merge per-tile candidates into global top-k (tile-major tie order)."""
+    num_tiles, b, kk = vals.shape
+    flat_v = vals.transpose(1, 0, 2).reshape(b, num_tiles * kk)
+    flat_i = gidx.transpose(1, 0, 2).reshape(b, num_tiles * kk)
+    mv, mpos = jax.lax.top_k(flat_v, k)
+    mi = jnp.take_along_axis(flat_i, mpos, axis=1)
+    return mv, mi
+
+
+__all__ = ["score_ref", "topk_ref", "tile_topk_ref", "merge_tiles_ref"]

@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces a JSON record with:
+  * compiled.memory_analysis()  — proves the cell fits per-device HBM
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline
+  * collective bytes parsed from the post-SPMD HLO (all-gather, all-reduce,
+    reduce-scatter, all-to-all, collective-permute), with ring-model
+    effective-wire-bytes estimates
+  * lower/compile wall times
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k \
+      [--multipod] [--out runs/dryrun]
+  python -m repro.launch.dryrun --all [--multipod]
+
+NOTE: the 512-device XLA flag above MUST precede any jax import; run this
+module in its own process (never import it from tests).
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import registry
+from repro.launch.mesh import make_production_mesh
+
+V5E_PEAK_FLOPS = 197e12      # bf16 per chip
+V5E_HBM_BW = 819e9           # bytes/s per chip
+V5E_ICI_BW = 50e9            # bytes/s per link
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective type from post-SPMD HLO."""
+    out = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * DTYPE_BYTES[dtype]
+        rec = out.setdefault(op, {"count": 0, "result_bytes": 0})
+        rec["count"] += 1
+        rec["result_bytes"] += b
+    return out
+
+
+def effective_wire_bytes(collectives: dict, n_devices: int) -> float:
+    """Ring-model per-device wire bytes (standard algorithm bandwidth)."""
+    f = (n_devices - 1) / max(n_devices, 1)
+    total = 0.0
+    for op, rec in collectives.items():
+        b = rec["result_bytes"]
+        if op == "all-reduce":
+            total += 2 * b * f
+        elif op in ("all-gather", "reduce-scatter", "all-to-all"):
+            total += b * f
+        elif op == "collective-permute":
+            total += b
+    return total
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             roofline: bool = False, scan_knob=None,
+             variant=None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    entry = registry.get(arch)
+    cell = entry.build_cell(entry.config, entry.shapes[shape], mesh,
+                            roofline=roofline, scan_knob=scan_knob,
+                            variant=variant)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "devices": mesh.devices.size}
+    t0 = time.monotonic()
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args)
+        rec["lower_s"] = round(time.monotonic() - t0, 2)
+        t1 = time.monotonic()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.monotonic() - t1, 2)
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                rec[k] = int(v)
+        rec["bytes_per_device"] = (rec.get("argument_size_in_bytes", 0)
+                                   + rec.get("temp_size_in_bytes", 0))
+        # XLA:CPU ignores donation, so donated in/out buffers double-count;
+        # on TPU the output aliases the donated input.
+        rec["donated"] = bool(cell.donate_argnums)
+        if cell.donate_argnums:
+            rec["bytes_per_device_donation_adjusted"] = max(
+                rec["bytes_per_device"] - rec.get("output_size_in_bytes", 0),
+                0)
+    cost = compiled.cost_analysis()
+    if cost:
+        # cost_analysis reports the PER-PARTITION (per-device) module
+        rec["hlo_flops"] = float(cost.get("flops", -1))
+        rec["hlo_bytes"] = float(cost.get("bytes accessed", -1))
+    hlo = compiled.as_text()
+    rec["collectives"] = parse_collectives(hlo)
+    rec["collective_wire_bytes_per_device"] = effective_wire_bytes(
+        rec["collectives"], mesh.devices.size)
+    # roofline terms (per chip); hlo_* and wire bytes are already per-device
+    if "hlo_flops" in rec and rec["hlo_flops"] > 0:
+        rec["t_compute_s"] = rec["hlo_flops"] / V5E_PEAK_FLOPS
+    if "hlo_bytes" in rec and rec["hlo_bytes"] > 0:
+        rec["t_memory_s"] = rec["hlo_bytes"] / V5E_HBM_BW
+    rec["t_collective_s"] = (rec["collective_wire_bytes_per_device"]
+                             / V5E_ICI_BW)
+    return rec
+
+
+def run_roofline(arch: str, shape: str, variant=None) -> dict:
+    """Exact roofline metrics on the single-pod mesh.
+
+    cost_analysis visits while-loop bodies once (independent of trip count),
+    so the roofline variant compiles the cell with every scan fully unrolled
+    (and microbatches=1): FLOPs / bytes / collective counts are then exact.
+    Memory fields are dropped — the scanned 'pod' record is the memory/fit
+    proof; this record is the compute/communication ground truth.
+    """
+    rec = run_cell(arch, shape, multi_pod=False, roofline=True,
+                   variant=variant)
+    rec["roofline_method"] = "unrolled"
+    rec["variant"] = variant
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "bytes_per_device",
+              "generated_code_size_in_bytes"):
+        rec.pop(k, None)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--roofline", action="store_true",
+                    help="exact roofline metrics via trip-count "
+                         "extrapolation (single-pod only)")
+    ap.add_argument("--variant", default=None,
+                    help="hillclimb variant (moe_a2a, tp_repl, micro2, ...)")
+    ap.add_argument("--out", default="runs/dryrun")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in registry.REGISTRY:
+            if args.roofline and arch == "dien":
+                # dien's 2x100-step unrolled GRU backward is a pathologically
+                # slow XLA:CPU compile; its scanned records are kept with the
+                # scan-1x marker + analytic seq-factor note (EXPERIMENTS.md).
+                print("[skip] dien roofline (scan-1x + analytic correction)")
+                continue
+            for shape in registry.get(arch).shapes:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        tag = "multipod" if args.multipod else "pod"
+        if args.roofline:
+            tag = "roofline"
+        if args.variant:
+            tag += f"-{args.variant}"
+        path = outdir / f"{arch}__{shape}__{tag}.json"
+        if path.exists():
+            print(f"[skip] {path}")
+            continue
+        print(f"[dryrun] {arch} x {shape} ({tag}) ...", flush=True)
+        try:
+            if args.roofline:
+                rec = run_roofline(arch, shape, variant=args.variant)
+            else:
+                rec = run_cell(arch, shape, args.multipod,
+                               variant=args.variant)
+            rec["ok"] = True
+        except Exception as e:  # record failures for triage
+            rec = {"arch": arch, "shape": shape, "mesh": tag, "ok": False,
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+        path.write_text(json.dumps(rec, indent=2))
+        status = "OK" if rec.get("ok") else f"FAIL: {rec.get('error')}"
+        print(f"[dryrun] {arch} x {shape} ({tag}) -> {status}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

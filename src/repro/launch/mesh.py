@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+single pod: (16, 16) = ("data", "model")   — 256 chips
+multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips
+
+A function (not a module-level constant) so importing never touches jax
+device state; dryrun.py sets XLA_FLAGS before any jax import.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """Axes that carry data parallelism (pod extends data)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def row_axes(mesh) -> tuple:
+    """All axes, for corpus/embedding-table row sharding."""
+    return tuple(mesh.axis_names)
+
+
+__all__ = ["make_production_mesh", "batch_axes", "row_axes"]

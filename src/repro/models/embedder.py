@@ -1,0 +1,59 @@
+"""Text embedding model for the RAG service: mean-pooled bidirectional
+transformer encoder over hashed tokens, unit-normalized output.
+
+This is the in-framework stand-in for gtr-t5-base / MiniLM: the protocol and
+benchmarks only need *some* shared embedding model both sides can run; its
+dimension is what the paper's theory cares about.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, transformer
+from repro.models.transformer import TransformerConfig
+
+
+def encoder_config(dim: int = 768, *, vocab: int = 32768,
+                   n_layers: int = 4) -> TransformerConfig:
+    return TransformerConfig(
+        name=f"embedder-{dim}", n_layers=n_layers, d_model=dim,
+        n_heads=max(4, dim // 128), n_kv_heads=max(4, dim // 128),
+        d_ff=dim * 4, vocab=vocab, d_head=128, dtype="float32", remat=False)
+
+
+def init_params(key, cfg: TransformerConfig):
+    return transformer.init_params(key, cfg)
+
+
+def embed(params, cfg: TransformerConfig, tokens, mask=None):
+    """tokens (B, S) -> unit-norm embeddings (B, d_model).
+
+    Bidirectional (causal=False path via the chunked attention) + mean pool.
+    """
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(s)[None, :]
+
+    def scan_fn(x, layer_p):
+        h, _ = layers.attention_fwd(
+            layer_p["attn"], layers.rms_norm(x, layer_p["attn_norm"]),
+            cfg.attn_spec, positions=positions, causal=False)
+        x = x + h
+        h = layers.mlp_fwd(layer_p["mlp"], layers.rms_norm(x, layer_p["mlp_norm"]))
+        return x + h, None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["layers"])
+    x = layers.rms_norm(x, params["final_norm"])
+    if mask is not None:
+        x = x * mask[..., None]
+        pooled = x.sum(1) / jnp.maximum(mask.sum(1)[:, None], 1.0)
+    else:
+        pooled = x.mean(axis=1)
+    return pooled / (jnp.linalg.norm(pooled, axis=-1, keepdims=True) + 1e-6)
+
+
+__all__ = ["encoder_config", "init_params", "embed"]

@@ -1,0 +1,190 @@
+"""GraphCast-style encode-process-decode GNN (assigned arch: graphcast).
+
+Message passing is built on `jax.ops.segment_sum` over an explicit edge list
+(src, dst) — the JAX-native scatter formulation (no sparse formats).  The
+config follows the assignment: 16 processor layers, d_hidden=512, sum
+aggregator, 227 output variables.  Four graph shape regimes are supported,
+including a real fanout neighbour sampler for minibatch training.
+
+RemoteRAG applicability: none (no query/corpus structure) — see DESIGN.md
+§Arch-applicability; the arch runs without the paper's technique.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class GnnConfig:
+    name: str = "graphcast"
+    n_layers: int = 16
+    d_hidden: int = 512
+    d_feat: int = 227          # input feature dim
+    n_vars: int = 227          # output variables
+    mesh_refinement: int = 6   # metadata (icosahedral level in the paper)
+    aggregator: str = "sum"
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_unroll: int = 1
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+class GraphBatch(NamedTuple):
+    node_feats: jax.Array    # (V, d_feat)
+    edge_src: jax.Array      # (E,) int32
+    edge_dst: jax.Array      # (E,) int32
+    targets: jax.Array       # (V, n_vars)
+
+
+def _mlp_params(key, dims, dtype, abstract):
+    out = []
+    ks = jax.random.split(key, len(dims) - 1) if not abstract else \
+        [None] * (len(dims) - 1)
+    for i in range(len(dims) - 1):
+        out.append({
+            "w": layers.make_param(ks[i], (dims[i], dims[i + 1]), dtype,
+                                   1.0 / math.sqrt(dims[i]), abstract),
+            "b": layers.make_zeros((dims[i + 1],), dtype, abstract),
+        })
+    return out
+
+
+def _mlp(ps, x):
+    for i, p in enumerate(ps):
+        x = x @ p["w"] + p["b"]
+        if i < len(ps) - 1:
+            x = jax.nn.silu(x)
+    return x
+
+
+def init_params(key, cfg: GnnConfig, abstract: bool = False):
+    ks = jax.random.split(key, 4) if not abstract else [None] * 4
+    d = cfg.d_hidden
+    layer = {
+        "edge_mlp": _mlp_params(ks[1], (3 * d, d, d), cfg.jdtype, abstract),
+        "node_mlp": _mlp_params(ks[2], (2 * d, d, d), cfg.jdtype, abstract),
+    }
+    if abstract:
+        stacked = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype),
+            layer)
+    else:
+        per = []
+        for i in range(cfg.n_layers):
+            ki = jax.random.fold_in(ks[1], i)
+            per.append({
+                "edge_mlp": _mlp_params(jax.random.fold_in(ki, 0),
+                                        (3 * d, d, d), cfg.jdtype, False),
+                "node_mlp": _mlp_params(jax.random.fold_in(ki, 1),
+                                        (2 * d, d, d), cfg.jdtype, False),
+            })
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    return {
+        "encoder": _mlp_params(ks[0], (cfg.d_feat, d, d), cfg.jdtype, abstract),
+        "edge_encoder": _mlp_params(
+            jax.random.fold_in(ks[0], 7) if not abstract else None,
+            (2 * d, d), cfg.jdtype, abstract),
+        "layers": stacked,
+        "decoder": _mlp_params(ks[3], (d, d, cfg.n_vars), cfg.jdtype, abstract),
+    }
+
+
+def abstract_params(cfg: GnnConfig):
+    return init_params(None, cfg, abstract=True)
+
+
+def forward(params, cfg: GnnConfig, batch: GraphBatch):
+    """Encode-process-decode; returns (V, n_vars) predictions."""
+    v = batch.node_feats.shape[0]
+    h = _mlp(params["encoder"], batch.node_feats.astype(cfg.jdtype))
+    e = _mlp(params["edge_encoder"],
+             jnp.concatenate([h[batch.edge_src], h[batch.edge_dst]], -1))
+
+    def step(carry, layer_p):
+        h, e = carry
+        msg_in = jnp.concatenate([h[batch.edge_src], h[batch.edge_dst], e], -1)
+
+        def apply(lp, h, e, msg_in):
+            e_new = e + _mlp(lp["edge_mlp"], msg_in)
+            agg = jax.ops.segment_sum(e_new, batch.edge_dst, num_segments=v)
+            if cfg.aggregator == "mean":
+                deg = jax.ops.segment_sum(
+                    jnp.ones_like(batch.edge_dst, cfg.jdtype),
+                    batch.edge_dst, num_segments=v)
+                agg = agg / jnp.maximum(deg, 1.0)[:, None]
+            h_new = h + _mlp(lp["node_mlp"], jnp.concatenate([h, agg], -1))
+            return h_new, e_new
+
+        fn = jax.checkpoint(apply) if cfg.remat else apply
+        h, e = fn(layer_p, h, e, msg_in)
+        return (h, e), None
+
+    (h, _), _ = jax.lax.scan(step, (h, e), params["layers"],
+                             unroll=cfg.scan_unroll)
+    return _mlp(params["decoder"], h)
+
+
+def loss_fn(params, cfg: GnnConfig, batch: GraphBatch):
+    pred = forward(params, cfg, batch).astype(jnp.float32)
+    return jnp.mean(jnp.square(pred - batch.targets.astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# neighbour sampler (host-side, for minibatch_lg)
+# ---------------------------------------------------------------------------
+
+def build_csr(edge_src: np.ndarray, edge_dst: np.ndarray, n_nodes: int):
+    """In-neighbour CSR: for each dst node, its src list."""
+    order = np.argsort(edge_dst, kind="stable")
+    sorted_src = edge_src[order]
+    counts = np.bincount(edge_dst, minlength=n_nodes)
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+    return offsets, sorted_src
+
+
+def sample_fanout(rng: np.random.Generator, offsets, nbrs,
+                  seed_nodes: np.ndarray, fanouts) -> GraphBatch:
+    """GraphSAGE-style layered fanout sampling -> one merged subgraph.
+
+    Returns a GraphBatch over the union of sampled nodes, with local ids and
+    zero targets (caller attaches real features/targets by global id).
+    """
+    frontier = np.unique(seed_nodes)
+    nodes = [frontier]
+    src_list, dst_list = [], []
+    for f in fanouts:
+        new = []
+        for u in frontier:
+            lo, hi = offsets[u], offsets[u + 1]
+            if hi == lo:
+                continue
+            cand = nbrs[lo:hi]
+            take = cand if hi - lo <= f else rng.choice(cand, f, replace=False)
+            for s in take:
+                src_list.append(s)
+                dst_list.append(u)
+            new.append(take)
+        frontier = np.unique(np.concatenate(new)) if new else np.array([], np.int64)
+        nodes.append(frontier)
+    all_nodes = np.unique(np.concatenate(nodes))
+    local = {g: i for i, g in enumerate(all_nodes)}
+    src = np.array([local[s] for s in src_list], np.int32)
+    dst = np.array([local[d] for d in dst_list], np.int32)
+    return all_nodes, src, dst
+
+
+__all__ = ["GnnConfig", "GraphBatch", "init_params", "abstract_params",
+           "forward", "loss_fn", "build_csr", "sample_fanout"]

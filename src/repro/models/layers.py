@@ -1,0 +1,281 @@
+"""Shared transformer building blocks (pure JAX, pytree params).
+
+Conventions:
+  * params are nested dicts of jnp arrays; every constructor has an
+    ``abstract=True`` mode returning jax.ShapeDtypeStruct (dry-run: no
+    allocation).
+  * attention is GQA with optional qk-norm / qkv-bias; KV heads are
+    *replicated* and Q heads zero-padded up to the tensor-parallel degree when
+    needed (the Megatron GQA-TP trick) — controlled by the config, so the
+    single-device smoke tests run the unpadded math.
+  * training attention uses an online-softmax scan over KV chunks (flash
+    structure in pure JAX) so the (S, S) score matrix never materializes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def make_param(key, shape, dtype, scale, abstract: bool):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def make_zeros(shape, dtype, abstract: bool):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def make_ones(shape, dtype, abstract: bool):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope_freqs(d_head: int, theta: float = 500_000.0):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float = 500_000.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
+                      kv_chunk: int = 1024, kv_len: Optional[jax.Array] = None):
+    """Online-softmax attention, O(S) memory in KV length.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    ``q_offset``: absolute position of q[0] (decode: Skv_cached).
+    ``kv_len``: optional dynamic valid-length mask for cache decoding.
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, d)
+    scale = 1.0 / math.sqrt(d)
+
+    n_chunks = -(-skv // kv_chunk)
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, hkv, d)
+    vc = v.reshape(b, n_chunks, kv_chunk, hkv, d)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inp):
+        m_prev, l_prev, o_prev = carry
+        kb, vb, c_idx = inp
+        # scores: (B, Sq, Hkv, G, C)
+        s = jnp.einsum("bqhgd,bchd->bqhgc", qg.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        kv_pos = c_idx * kv_chunk + jnp.arange(kv_chunk)
+        mask = jnp.ones((sq, kv_chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        mask &= (kv_pos[None, :] < (kv_len if kv_len is not None else skv))
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqhgc,bchd->bqhgd", p, vb.astype(jnp.float32))
+        o_new = o_prev * corr[..., None] + pv
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, sq, hkv, group), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, group), jnp.float32)
+    o0 = jnp.zeros((b, sq, hkv, group, d), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(
+        step, (m0, l0, o0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(n_chunks)))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def direct_attention(q, k, v, *, q_offset=0, kv_len=None, causal=True):
+    """Unchunked attention for decode (q_len small, KV possibly huge).
+
+    Reductions over the KV sequence are plain einsum/softmax reductions, so a
+    sequence-sharded cache lowers to flash-decoding-style split-K partial
+    reductions + small all-reduces under GSPMD (long_500k relies on this).
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, d).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bshd->bqhgs", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    kv_pos = jnp.arange(skv)
+    q_pos = q_offset + jnp.arange(sq)
+    mask = kv_pos[None, :] < (kv_len if kv_len is not None else skv)
+    if causal:
+        mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgs,bshd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 500_000.0
+    # tensor-parallel padding (see module docstring); 1 = no padding
+    tp_pad_to: int = 1
+
+    @property
+    def padded_heads(self) -> int:
+        return -(-self.n_heads // self.tp_pad_to) * self.tp_pad_to
+
+    @property
+    def padded_kv_heads(self) -> int:
+        """KV heads after TP padding.
+
+        If no q-padding was needed and the rounded-up KV count divides the q
+        count, consecutive replication (the Megatron GQA-TP trick) preserves
+        the q->kv grouping.  Otherwise padding q heads changes the grouping
+        arithmetic and we MHA-ize (one kv head per padded q head) — more KV
+        FLOPs/cache, but exact; qwen2.5-14b (40 q) and granite (24 q) hit
+        this on the 16-way mesh (see DESIGN.md).
+        """
+        if self.tp_pad_to == 1:
+            return self.n_kv_heads
+        cand = max(self.n_kv_heads, self.tp_pad_to)
+        cand = -(-cand // self.tp_pad_to) * self.tp_pad_to
+        if self.padded_heads == self.n_heads and self.padded_heads % cand == 0:
+            return cand
+        return self.padded_heads
+
+    def kv_head_source(self):
+        """Source original-kv-head index for each padded kv head (for
+        checkpoint import and equivalence tests)."""
+        import numpy as np
+
+        group = self.n_heads // self.n_kv_heads
+        pk = self.padded_kv_heads
+        if pk == self.padded_heads:  # MHA-ized
+            j = np.minimum(np.arange(pk), self.n_heads - 1)
+            return j // group
+        rep = pk // self.n_kv_heads
+        return np.arange(pk) // rep
+
+
+def attention_params(key, spec: AttentionSpec, dtype, abstract: bool):
+    hq, hkv, d = spec.padded_heads, spec.padded_kv_heads, spec.d_head
+    scale = 1.0 / math.sqrt(spec.d_model)
+    ks = jax.random.split(key, 4) if not abstract else [None] * 4
+    p = {
+        "wq": make_param(ks[0], (spec.d_model, hq * d), dtype, scale, abstract),
+        "wk": make_param(ks[1], (spec.d_model, hkv * d), dtype, scale, abstract),
+        "wv": make_param(ks[2], (spec.d_model, hkv * d), dtype, scale, abstract),
+        "wo": make_param(ks[3], (hq * d, spec.d_model), dtype, scale, abstract),
+    }
+    if spec.qkv_bias:
+        p["bq"] = make_zeros((hq * d,), dtype, abstract)
+        p["bk"] = make_zeros((hkv * d,), dtype, abstract)
+        p["bv"] = make_zeros((hkv * d,), dtype, abstract)
+    if spec.qk_norm:
+        p["q_norm"] = make_ones((d,), dtype, abstract)
+        p["k_norm"] = make_ones((d,), dtype, abstract)
+    return p
+
+
+def attention_fwd(p, x, spec: AttentionSpec, *, positions, causal=True,
+                  cache=None, kv_len=None, kv_chunk=1024):
+    """Returns (out, new_kv) — new_kv is the (k, v) for this segment."""
+    b, s, _ = x.shape
+    hq, hkv, d = spec.padded_heads, spec.padded_kv_heads, spec.d_head
+    q = jnp.einsum("bsm,mh->bsh", x, p["wq"])
+    k = jnp.einsum("bsm,mh->bsh", x, p["wk"])
+    v = jnp.einsum("bsm,mh->bsh", x, p["wv"])
+    if spec.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hq, d)
+    k = k.reshape(b, s, hkv, d)
+    v = v.reshape(b, s, hkv, d)
+    if spec.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, spec.rope_theta)
+    k = apply_rope(k, positions, spec.rope_theta)
+
+    if cache is not None:
+        ck, cv, cache_len = cache
+        k_all = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                             (0, cache_len, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                             (0, cache_len, 0, 0))
+        # decode: direct attention (GSPMD split-K over a sharded cache)
+        out = direct_attention(q, k_all, v_all, q_offset=cache_len,
+                               kv_len=cache_len + s, causal=True)
+        new_kv = (k_all, v_all)
+    else:
+        out = chunked_attention(q, k, v, causal=causal, kv_chunk=kv_chunk)
+        new_kv = (k, v)
+    out = out.reshape(b, s, hq * d)
+    return jnp.einsum("bsh,hm->bsm", out, p["wo"]), new_kv
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_params(key, d_model: int, d_ff: int, dtype, abstract: bool):
+    scale = 1.0 / math.sqrt(d_model)
+    ks = jax.random.split(key, 3) if not abstract else [None] * 3
+    return {
+        "w_gate": make_param(ks[0], (d_model, d_ff), dtype, scale, abstract),
+        "w_up": make_param(ks[1], (d_model, d_ff), dtype, scale, abstract),
+        "w_down": make_param(ks[2], (d_ff, d_model), dtype,
+                             1.0 / math.sqrt(d_ff), abstract),
+    }
+
+
+def mlp_fwd(p, x):
+    g = jax.nn.silu(jnp.einsum("bsm,mf->bsf", x, p["w_gate"]))
+    u = jnp.einsum("bsm,mf->bsf", x, p["w_up"])
+    return jnp.einsum("bsf,fm->bsm", g * u, p["w_down"])
+
+
+__all__ = [
+    "make_param", "make_zeros", "make_ones", "rms_norm", "apply_rope",
+    "chunked_attention", "direct_attention", "AttentionSpec",
+    "attention_params", "attention_fwd", "mlp_params", "mlp_fwd",
+]

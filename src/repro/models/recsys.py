@@ -1,0 +1,364 @@
+"""RecSys archs: FM, two-tower retrieval, DIEN (AUGRU), DCN-v2.
+
+The shared substrate is the sparse-embedding layer: JAX has no EmbeddingBag,
+so lookups are `jnp.take` + `jax.ops.segment_sum` (multi-hot bags) over
+row-sharded tables — the FBGEMM/TBE layout mapped onto the mesh's "model"
+axis.  Two-tower's candidate scoring plugs directly into `repro.retrieval`
+(it *is* the RemoteRAG workload — DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag substrate
+# ---------------------------------------------------------------------------
+
+def embedding_lookup(table, ids):
+    """Plain per-id lookup: (..., ) int32 -> (..., d)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(table, ids, segment_ids, num_bags: int, *, mode="sum"):
+    """Multi-hot bag reduce: ids/segment_ids (nnz,) -> (num_bags, d)."""
+    rows = jnp.take(table, ids, axis=0)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(ids, table.dtype),
+                                  segment_ids, num_segments=num_bags)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def _mlp_params(key, dims, dtype, abstract):
+    out = []
+    ks = jax.random.split(key, len(dims) - 1) if not abstract else \
+        [None] * (len(dims) - 1)
+    for i in range(len(dims) - 1):
+        out.append({
+            "w": layers.make_param(ks[i], (dims[i], dims[i + 1]), dtype,
+                                   1.0 / math.sqrt(dims[i]), abstract),
+            "b": layers.make_zeros((dims[i + 1],), dtype, abstract),
+        })
+    return out
+
+
+def _mlp(ps, x, final_act=False):
+    for i, p in enumerate(ps):
+        x = x @ p["w"] + p["b"]
+        if i < len(ps) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _table(key, vocab, dim, dtype, abstract):
+    return layers.make_param(key, (vocab, dim), dtype, 1.0 / math.sqrt(dim),
+                             abstract)
+
+
+# ---------------------------------------------------------------------------
+# FM  (Rendle ICDM'10): O(nk) sum-square pairwise interactions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FmConfig:
+    name: str = "fm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    vocab_per_field: int = 100_000
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def fm_init(key, cfg: FmConfig, abstract=False):
+    ks = jax.random.split(key, 3) if not abstract else [None] * 3
+    v = cfg.n_sparse * cfg.vocab_per_field
+    return {
+        "table": _table(ks[0], v, cfg.embed_dim, cfg.jdtype, abstract),
+        "linear": _table(ks[1], v, 1, cfg.jdtype, abstract),
+        "bias": layers.make_zeros((), cfg.jdtype, abstract),
+    }
+
+
+def fm_forward(params, cfg: FmConfig, sparse_ids):
+    """sparse_ids: (B, n_sparse) globally-offset ids -> logits (B,)."""
+    emb = embedding_lookup(params["table"], sparse_ids)     # (B, F, k)
+    lin = embedding_lookup(params["linear"], sparse_ids)[..., 0].sum(-1)
+    s = emb.sum(axis=1)                                     # (B, k)
+    inter = 0.5 * (jnp.square(s) - jnp.square(emb).sum(axis=1)).sum(-1)
+    return params["bias"] + lin + inter
+
+
+def fm_loss(params, cfg: FmConfig, sparse_ids, labels):
+    logits = fm_forward(params, cfg, sparse_ids).astype(jnp.float32)
+    return jnp.mean(_bce(logits, labels))
+
+
+def _bce(logits, labels):
+    return jnp.maximum(logits, 0) - logits * labels + jnp.log1p(
+        jnp.exp(-jnp.abs(logits)))
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval (YouTube RecSys'19)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    embed_dim: int = 256
+    tower_mlp: Sequence[int] = (1024, 512, 256)
+    user_vocab: int = 1_000_000
+    item_vocab: int = 1_000_000
+    n_user_feats: int = 8
+    n_item_feats: int = 4
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def twotower_init(key, cfg: TwoTowerConfig, abstract=False):
+    ks = jax.random.split(key, 4) if not abstract else [None] * 4
+    d_in_u = cfg.n_user_feats * cfg.embed_dim
+    d_in_i = cfg.n_item_feats * cfg.embed_dim
+    return {
+        "user_table": _table(ks[0], cfg.user_vocab, cfg.embed_dim,
+                             cfg.jdtype, abstract),
+        "item_table": _table(ks[1], cfg.item_vocab, cfg.embed_dim,
+                             cfg.jdtype, abstract),
+        "user_mlp": _mlp_params(ks[2], (d_in_u,) + tuple(cfg.tower_mlp),
+                                cfg.jdtype, abstract),
+        "item_mlp": _mlp_params(ks[3], (d_in_i,) + tuple(cfg.tower_mlp),
+                                cfg.jdtype, abstract),
+    }
+
+
+def user_embedding(params, cfg: TwoTowerConfig, user_feats):
+    """user_feats (B, n_user_feats) ids -> unit-norm (B, d)."""
+    e = embedding_lookup(params["user_table"], user_feats)
+    e = e.reshape(e.shape[0], -1)
+    u = _mlp(params["user_mlp"], e)
+    return u / (jnp.linalg.norm(u, axis=-1, keepdims=True) + 1e-6)
+
+
+def item_embedding(params, cfg: TwoTowerConfig, item_feats):
+    e = embedding_lookup(params["item_table"], item_feats)
+    e = e.reshape(e.shape[0], -1)
+    i = _mlp(params["item_mlp"], e)
+    return i / (jnp.linalg.norm(i, axis=-1, keepdims=True) + 1e-6)
+
+
+def twotower_loss(params, cfg: TwoTowerConfig, user_feats, item_feats,
+                  temperature: float = 0.05):
+    """In-batch sampled softmax."""
+    u = user_embedding(params, cfg, user_feats)
+    i = item_embedding(params, cfg, item_feats)
+    logits = (u @ i.T) / temperature
+    labels = jnp.arange(u.shape[0])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+
+def twotower_score_candidates(params, cfg: TwoTowerConfig, user_feats,
+                              cand_embeddings):
+    """retrieval_cand shape: one query batch vs 1e6 candidates — batched dot
+    via the retrieval substrate (no loop)."""
+    u = user_embedding(params, cfg, user_feats)
+    return u @ cand_embeddings.T
+
+
+# ---------------------------------------------------------------------------
+# DIEN (AUGRU interest evolution)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DienConfig:
+    name: str = "dien"
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp: Sequence[int] = (200, 80)
+    item_vocab: int = 500_000
+    dtype: str = "float32"
+    unroll: int = 1
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def _gru_params(key, d_in, d_h, dtype, abstract):
+    ks = jax.random.split(key, 3) if not abstract else [None] * 3
+    s = 1.0 / math.sqrt(d_in + d_h)
+    return {
+        "wz": layers.make_param(ks[0], (d_in + d_h, d_h), dtype, s, abstract),
+        "wr": layers.make_param(ks[1], (d_in + d_h, d_h), dtype, s, abstract),
+        "wh": layers.make_param(ks[2], (d_in + d_h, d_h), dtype, s, abstract),
+    }
+
+
+def dien_init(key, cfg: DienConfig, abstract=False):
+    ks = jax.random.split(key, 4) if not abstract else [None] * 4
+    d_concat = cfg.gru_dim + 2 * cfg.embed_dim
+    return {
+        "item_table": _table(ks[0], cfg.item_vocab, cfg.embed_dim,
+                             cfg.jdtype, abstract),
+        "gru1": _gru_params(ks[1], cfg.embed_dim, cfg.gru_dim, cfg.jdtype,
+                            abstract),
+        "augru": _gru_params(ks[2], cfg.gru_dim, cfg.gru_dim, cfg.jdtype,
+                             abstract),
+        "mlp": _mlp_params(ks[3], (d_concat,) + tuple(cfg.mlp) + (1,),
+                           cfg.jdtype, abstract),
+    }
+
+
+def _gru_cell(p, h, x, att=None):
+    hx = jnp.concatenate([x, h], axis=-1)
+    z = jax.nn.sigmoid(hx @ p["wz"])
+    r = jax.nn.sigmoid(hx @ p["wr"])
+    hh = jnp.tanh(jnp.concatenate([x, r * h], axis=-1) @ p["wh"])
+    if att is not None:           # AUGRU: attention scales the update gate
+        z = z * att[:, None]
+    return (1 - z) * h + z * hh
+
+
+def dien_forward(params, cfg: DienConfig, hist_ids, target_ids):
+    """hist_ids (B, S), target_ids (B,) -> logits (B,)."""
+    b, s = hist_ids.shape
+    hist = embedding_lookup(params["item_table"], hist_ids)   # (B, S, k)
+    target = embedding_lookup(params["item_table"], target_ids)  # (B, k)
+
+    def gru1_step(h, x):
+        return _gru_cell(params["gru1"], h, x), _gru_cell(params["gru1"], h, x)
+
+    h0 = jnp.zeros((b, cfg.gru_dim), cfg.jdtype)
+    _, interests = jax.lax.scan(gru1_step, h0, hist.swapaxes(0, 1),
+                                unroll=cfg.unroll)
+    interests = interests.swapaxes(0, 1)                      # (B, S, H)
+
+    # attention of target on interests
+    proj = interests[..., : cfg.embed_dim]
+    att = jax.nn.softmax(
+        jnp.einsum("bsh,bh->bs", proj, target).astype(jnp.float32), axis=-1
+    ).astype(cfg.jdtype)
+
+    def augru_step(h, inp):
+        x, a = inp
+        return _gru_cell(params["augru"], h, x, att=a), None
+
+    h_final, _ = jax.lax.scan(
+        augru_step, h0, (interests.swapaxes(0, 1), att.swapaxes(0, 1)),
+        unroll=cfg.unroll)
+    feats = jnp.concatenate([h_final, target,
+                             hist.mean(axis=1)], axis=-1)
+    return _mlp(params["mlp"], feats)[:, 0]
+
+
+def dien_loss(params, cfg: DienConfig, hist_ids, target_ids, labels):
+    logits = dien_forward(params, cfg, hist_ids, target_ids).astype(jnp.float32)
+    return jnp.mean(_bce(logits, labels))
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DcnV2Config:
+    name: str = "dcn-v2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 16
+    n_cross_layers: int = 3
+    mlp: Sequence[int] = (1024, 1024, 512)
+    vocab_per_field: int = 100_000
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def d_in(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+
+def dcnv2_init(key, cfg: DcnV2Config, abstract=False):
+    ks = jax.random.split(key, 4) if not abstract else [None] * 4
+    d = cfg.d_in
+    cross = []
+    for i in range(cfg.n_cross_layers):
+        kk = jax.random.fold_in(ks[1], i) if not abstract else None
+        cross.append({
+            "w": layers.make_param(kk, (d, d), cfg.jdtype, 1.0 / math.sqrt(d),
+                                   abstract),
+            "b": layers.make_zeros((d,), cfg.jdtype, abstract),
+        })
+    if abstract:
+        cross_stacked = {
+            "w": jax.ShapeDtypeStruct((cfg.n_cross_layers, d, d), cfg.jdtype),
+            "b": jax.ShapeDtypeStruct((cfg.n_cross_layers, d), cfg.jdtype),
+        }
+    else:
+        cross_stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *cross)
+    return {
+        "table": _table(ks[0], cfg.n_sparse * cfg.vocab_per_field,
+                        cfg.embed_dim, cfg.jdtype, abstract),
+        "cross": cross_stacked,
+        "deep": _mlp_params(ks[2], (d,) + tuple(cfg.mlp), cfg.jdtype, abstract),
+        "head": _mlp_params(ks[3], (d + cfg.mlp[-1], 1), cfg.jdtype, abstract),
+    }
+
+
+def dcnv2_forward(params, cfg: DcnV2Config, dense, sparse_ids):
+    """dense (B, n_dense) float; sparse_ids (B, n_sparse) -> logits (B,)."""
+    emb = embedding_lookup(params["table"], sparse_ids)
+    x0 = jnp.concatenate([dense.astype(cfg.jdtype),
+                          emb.reshape(emb.shape[0], -1)], axis=-1)
+
+    def cross_step(x, wb):
+        return x0 * (x @ wb["w"] + wb["b"]) + x, None
+
+    xc, _ = jax.lax.scan(cross_step, x0, params["cross"])
+    xd = _mlp(params["deep"], x0, final_act=True)
+    return _mlp(params["head"], jnp.concatenate([xc, xd], -1))[:, 0]
+
+
+def dcnv2_loss(params, cfg: DcnV2Config, dense, sparse_ids, labels):
+    logits = dcnv2_forward(params, cfg, dense, sparse_ids).astype(jnp.float32)
+    return jnp.mean(_bce(logits, labels))
+
+
+# ---------------------------------------------------------------------------
+# sharding specs
+# ---------------------------------------------------------------------------
+
+def table_spec(tp_axis="model"):
+    """Row-sharded embedding tables (the TBE layout)."""
+    return P(tp_axis, None)
+
+
+__all__ = [
+    "embedding_lookup", "embedding_bag",
+    "FmConfig", "fm_init", "fm_forward", "fm_loss",
+    "TwoTowerConfig", "twotower_init", "user_embedding", "item_embedding",
+    "twotower_loss", "twotower_score_candidates",
+    "DienConfig", "dien_init", "dien_forward", "dien_loss",
+    "DcnV2Config", "dcnv2_init", "dcnv2_forward", "dcnv2_loss",
+    "table_spec",
+]

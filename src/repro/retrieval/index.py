@@ -1,0 +1,69 @@
+"""Device-sharded flat corpus index.
+
+The cloud's N document embeddings are row-sharded across every axis of the
+mesh (the paper's single-host vector DB, scaled out).  Each device owns a
+contiguous row range; global ids are shard_offset + local id.  Documents
+themselves (bytes) stay host-side, keyed by global id.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class FlatIndex:
+    """A flat (exact-search) embedding index, optionally mesh-sharded."""
+
+    embeddings: jax.Array          # (N, n) unit-norm rows
+    mesh: Optional[Mesh] = None
+    row_axes: Optional[tuple] = None   # mesh axes the rows are sharded over
+    documents: Optional[Sequence[bytes]] = None
+
+    @property
+    def num_rows(self) -> int:
+        return self.embeddings.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.embeddings.shape[1]
+
+    @classmethod
+    def build(cls, embeddings: np.ndarray, *, mesh: Optional[Mesh] = None,
+              row_axes: Optional[tuple] = None,
+              documents: Optional[Sequence[bytes]] = None,
+              normalize: bool = True) -> "FlatIndex":
+        emb = np.asarray(embeddings, np.float32)
+        if normalize:
+            emb = emb / np.linalg.norm(emb, axis=-1, keepdims=True)
+        if mesh is not None:
+            row_axes = row_axes or tuple(mesh.axis_names)
+            n_shards = int(np.prod([mesh.shape[a] for a in row_axes]))
+            pad = (-emb.shape[0]) % n_shards
+            if pad:
+                emb = np.concatenate([emb, np.zeros((pad, emb.shape[1]),
+                                                    np.float32)])
+            sharding = NamedSharding(mesh, P(row_axes, None))
+            arr = jax.device_put(jnp.asarray(emb), sharding)
+        else:
+            arr = jnp.asarray(emb)
+        return cls(embeddings=arr, mesh=mesh, row_axes=row_axes,
+                   documents=documents)
+
+    def fetch_documents(self, ids: Sequence[int]):
+        assert self.documents is not None, "index built without documents"
+        return [self.documents[int(i)] for i in ids]
+
+    def rows(self, ids) -> jax.Array:
+        """Gather embedding rows by global id (host-driven, small batches)."""
+        return jnp.take(self.embeddings, jnp.asarray(ids), axis=0)
+
+
+__all__ = ["FlatIndex"]

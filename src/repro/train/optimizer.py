@@ -1,0 +1,111 @@
+"""AdamW + global-norm clipping + cosine schedule, pure JAX (no optax).
+
+Optimizer state is a pytree mirroring params (fp32 master copy + moments),
+so it shards with the same PartitionSpecs as the parameters — FSDP'd over
+"data" automatically under the 2D sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array        # () int32
+    master: object         # fp32 copy of params
+    m: object
+    v: object
+
+
+def init(params, cfg: AdamWConfig) -> OptState:
+    # copy=True: with f32 params, astype would alias the param buffer and
+    # donating (params, opt_state) together would donate it twice.
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.int32(0),
+                    master=jax.tree.map(f32, params),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def abstract_init(abstract_params, cfg: AdamWConfig) -> OptState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                    master=jax.tree.map(f32, abstract_params),
+                    m=jax.tree.map(f32, abstract_params),
+                    v=jax.tree.map(f32, abstract_params))
+
+
+def state_specs(param_specs) -> OptState:
+    """PartitionSpecs for the optimizer state (mirror the params)."""
+    from jax.sharding import PartitionSpec as P
+
+    return OptState(step=P(), master=param_specs, m=param_specs,
+                    v=param_specs)
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree))
+    return jnp.sqrt(sum(leaves))
+
+
+def apply(grads, state: OptState, cfg: AdamWConfig, *, param_dtype=None):
+    """One AdamW step; returns (new_params_in_compute_dtype, new_state, stats)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.beta1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.beta2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: cfg.beta1 * m + (1 - cfg.beta1) * g,
+                         state.m, grads)
+    new_v = jax.tree.map(lambda v, g: cfg.beta2 * v + (1 - cfg.beta2) * g * g,
+                         state.v, grads)
+
+    def upd(p, m, v):
+        mh = m / b1c
+        vh = v / b2c
+        return p - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+
+    new_master = jax.tree.map(upd, state.master, new_m, new_v)
+    cast = (lambda p: p) if param_dtype is None else \
+        (lambda p: p.astype(param_dtype))
+    new_params = jax.tree.map(cast, new_master)
+    return new_params, OptState(step, new_master, new_m, new_v), \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+__all__ = ["AdamWConfig", "OptState", "init", "abstract_init", "state_specs",
+           "schedule", "global_norm", "apply"]

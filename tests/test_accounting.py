@@ -1,0 +1,49 @@
+"""Table 2 formulas + wire-size models."""
+
+import pytest
+
+from repro.core import accounting as acc
+
+
+def test_table2_formulas():
+    n, N, k, kp = 768, 10**5, 5, 160
+    ig = acc.privacy_ignorant(n, k)
+    assert (ig.rounds, ig.numbers, ig.documents) == (1.0, n, k)
+    co = acc.privacy_conscious(n, N)
+    assert (co.rounds, co.numbers, co.documents) == (2.0, n + 2 * N + 1, N)
+    di = acc.remoterag_direct(n, k, kp)
+    assert (di.rounds, di.numbers, di.documents) == (2.5, 2 * n + k + kp + 1, k)
+    ot = acc.remoterag_ot(n, kp)
+    assert (ot.rounds, ot.numbers, ot.documents) == (3.0, 2 * (n + kp + 1), kp)
+
+
+def test_remoterag_beats_conscious_by_orders_of_magnitude():
+    n, N, k, kp = 768, 10**6, 5, 160
+    conscious = acc.privacy_conscious(n, N).bytes_total()
+    direct = acc.remoterag_direct(n, k, kp).bytes_total()
+    assert conscious / direct > 10_000  # paper: 1.43 GB vs 46.66 KB
+
+
+def test_optimized_rounds():
+    c = acc.optimized_rounds(acc.remoterag_ot(768, 160))
+    assert c.rounds == 2.0
+
+
+def test_backend_wire_models():
+    # Paillier query: n ciphertexts; RLWE query: ceil(n/1024) ciphertexts.
+    assert acc.paillier_query_bytes(768) == 768 * 512
+    assert acc.rlwe_query_bytes(768) == 1 * 2 * 3 * 4096 * 20 // 8
+    assert acc.rlwe_query_bytes(3072) == 3 * 2 * 3 * 4096 * 20 // 8
+    # RLWE response packs 4 candidates/ct at n<=1024, 2 at n>1024.
+    one_ct = 2 * 3 * 4096 * 20 // 8
+    assert acc.rlwe_scores_bytes(160, 768) == 40 * one_ct
+    assert acc.rlwe_scores_bytes(160, 1536) == 80 * one_ct
+    # RLWE query upload is smaller than Paillier's for n = 768
+    assert acc.rlwe_query_bytes(768) < acc.paillier_query_bytes(768)
+
+
+def test_paper_headline_numbers_consistent():
+    """46.66 KB (direct) at k'=160: formula bytes in the right ballpark with
+    beta=4B numbers and ~230B documents (paper's eta differs; order check)."""
+    di = acc.remoterag_direct(768, 5, 160)
+    assert 10_000 < di.bytes_total(beta=4, eta=1024) < 100_000

@@ -1,0 +1,63 @@
+"""Inversion-attack proxies: recovery decays with perturbation (Fig. 4)."""
+
+import numpy as np
+import pytest
+
+from repro.core import attacks
+from repro.data import synth
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(0)
+    return synth.token_corpus(rng, 600, 256, vocab=512, doc_len=16)
+
+
+def test_token_f1_basics():
+    assert attacks.token_f1({1, 2, 3}, {1, 2, 3}) == 1.0
+    assert attacks.token_f1({1, 2}, {3, 4}) == 0.0
+    assert 0 < attacks.token_f1({1, 2, 3, 4}, {1, 2}) < 1
+
+
+def test_nn_attack_perfect_at_zero_perturbation(corpus):
+    atk = attacks.NearestNeighborAttack(aux=corpus)
+    scores = [atk.score(corpus.embeddings[i], corpus.token_sets[i])
+              for i in range(20)]
+    assert np.mean(scores) > 0.95
+
+
+def test_attack_curve_monotone_decay(corpus):
+    """1-NN proxy needs ~sqrt(dim)-scaled radii (see attacks.py note); the
+    validated property is the monotone decay to chance."""
+    rng = np.random.default_rng(1)
+    atk = attacks.NearestNeighborAttack(aux=corpus)
+    radii = [0.0, 0.5, 4.0, 10.0]
+    curve = attacks.attack_curve(atk, corpus, range(30), radii, rng)
+    assert curve[0] > 0.9
+    assert curve[-1] < 0.6 * curve[0]  # large r kills the attack (Fig. 4a)
+    assert curve[0] >= curve[2] >= curve[3]
+
+
+def test_exact_recovery_cliffs_before_f1(corpus):
+    rng = np.random.default_rng(5)
+    atk = attacks.NearestNeighborAttack(aux=corpus)
+    radii = [0.0, 1.0]
+    exact = attacks.exact_recovery_curve(atk, corpus, range(30), radii, rng)
+    f1 = attacks.attack_curve(atk, corpus, range(30), radii, rng)
+    assert exact[0] == 1.0
+    # exact-identity recovery degrades at least as fast as token F1
+    assert exact[1] <= f1[1] + 1e-9
+
+
+def test_linear_decoder_recovers_tokens(corpus):
+    atk = attacks.LinearDecoderAttack(aux=corpus, top_m=16)
+    s = [atk.score(corpus.embeddings[i], corpus.token_sets[i])
+         for i in range(20)]
+    assert np.mean(s) > 0.3  # far above chance (16/512)
+
+
+def test_linear_decoder_decays(corpus):
+    rng = np.random.default_rng(2)
+    atk = attacks.LinearDecoderAttack(aux=corpus, top_m=16)
+    curve = attacks.attack_curve(atk, corpus, range(20), [0.0, 4.0], rng)
+    assert curve[1] < 0.75 * curve[0]

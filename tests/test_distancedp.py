@@ -1,0 +1,65 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distancedp
+
+
+def test_radial_moments_match_gamma():
+    key = jax.random.PRNGKey(1)
+    n, eps = 768, 10 * 768.0
+    r = distancedp.sample_radial(key, n, eps, (20_000,))
+    mean, var = float(jnp.mean(r)), float(jnp.var(r))
+    assert mean == pytest.approx(n / eps, rel=0.02)
+    assert var == pytest.approx(n / eps**2, rel=0.1)
+
+
+def test_direction_uniform():
+    key = jax.random.PRNGKey(2)
+    v = distancedp.sample_direction(key, 64, (5000,))
+    norms = jnp.linalg.norm(v, axis=-1)
+    np.testing.assert_allclose(np.asarray(norms), 1.0, atol=1e-5)
+    assert float(jnp.abs(jnp.mean(v, axis=0)).max()) < 0.05
+
+
+def test_perturb_shapes_and_radius_consistency():
+    key = jax.random.PRNGKey(3)
+    e = distancedp.sample_direction(jax.random.PRNGKey(9), 384, (7,))
+    out = distancedp.perturb(key, e, eps=384 * 20.0)
+    assert out.embedding.shape == (7, 384)
+    d = jnp.linalg.norm(out.embedding - e, axis=-1)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(out.radius), rtol=1e-4)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=64),
+    st.floats(min_value=0.1, max_value=1e4),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_distancedp_inequality_property(n, eps, seed):
+    """Definition 1: |log p(y|x) - log p(y|x')| <= eps * ||x - x'|| for all y."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n,))
+    x_alt = rng.normal(size=(n,))
+    ys = rng.normal(size=(16, n)) * rng.uniform(0.1, 10)
+    lr = np.asarray(distancedp.dp_log_ratio(ys, x, x_alt, eps))
+    bound = eps * np.linalg.norm(x - x_alt) + 1e-2 * eps  # f32 slop
+    assert np.all(np.abs(lr) <= bound + 1e-4)
+
+
+def test_eps_radius_inverses():
+    assert distancedp.eps_for_radius(768, 0.03) == pytest.approx(25600.0)
+    assert distancedp.expected_radius(768, 25600.0) == pytest.approx(0.03)
+
+
+def test_radial_quantile_brackets_mean():
+    n, eps = 768, 768 * 10.0
+    q50 = distancedp.radial_quantile_np(n, eps, 0.5)
+    q999 = distancedp.radial_quantile_np(n, eps, 0.999)
+    assert q50 == pytest.approx(n / eps, rel=0.01)  # Gamma(n) median ~ mean, large n
+    assert q999 > q50
+    assert q999 < 1.2 * (n / eps)  # concentration at n=768 (Fig. 2)

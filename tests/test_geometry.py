@@ -1,0 +1,102 @@
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import geometry
+
+
+def test_cap_fraction_endpoints():
+    for n in (3, 16, 384, 768):
+        assert geometry.cap_fraction_np(0.0, n) == pytest.approx(0.0, abs=1e-12)
+        assert geometry.cap_fraction_np(np.pi / 2, n) == pytest.approx(0.5, abs=1e-9)
+        assert geometry.cap_fraction_np(np.pi, n) == pytest.approx(1.0, abs=1e-9)
+
+
+def test_cap_fraction_monotone():
+    alphas = np.linspace(0.0, np.pi, 257)
+    for n in (4, 64, 768):
+        f = geometry.cap_fraction_np(alphas, n)
+        assert np.all(np.diff(f) >= -1e-12)
+
+
+def test_cap_fraction_matches_3d_closed_form():
+    # In R^3 the cap fraction is (1 - cos(alpha)) / 2 exactly.
+    alphas = np.linspace(0.01, np.pi - 0.01, 31)
+    f = geometry.cap_fraction_np(alphas, 3)
+    np.testing.assert_allclose(f, (1 - np.cos(alphas)) / 2, rtol=1e-8)
+
+
+def test_alpha_fraction_roundtrip_np():
+    for n in (8, 384, 1536):
+        fr = np.array([1e-6, 1e-4, 1e-2, 0.3, 0.5, 0.7, 0.999])
+        a = geometry.alpha_from_fraction_np(fr, n)
+        back = geometry.cap_fraction_np(a, n)
+        np.testing.assert_allclose(back, fr, rtol=1e-6, atol=1e-12)
+
+
+def test_alpha_from_fraction_jax_matches_np():
+    for n in (16, 768):
+        fr = np.array([1e-4, 1e-2, 0.25, 0.5, 0.9], np.float32)
+        a_jax = np.asarray(geometry.alpha_from_fraction(jnp.asarray(fr), n))
+        a_np = geometry.alpha_from_fraction_np(fr, n)
+        np.testing.assert_allclose(a_jax, a_np, atol=2e-3)
+
+
+def test_kprime_reproduces_paper_operating_point():
+    # Paper highlight: N=1e5, k=5, T5 (n=768), r=0.03 -> k'=160.
+    kp = geometry.kprime_for(5, 100_000, 768, 0.03, conservative=False)
+    assert 100 <= kp <= 260, kp
+
+
+def test_kprime_monotone_in_r_and_bounded():
+    ks = [geometry.kprime_for(5, 10_000, 384, r) for r in (0.01, 0.03, 0.05, 0.1)]
+    assert ks == sorted(ks)
+    assert all(5 <= kp <= 10_000 for kp in ks)
+    assert geometry.kprime_for(5, 100, 384, 3.5) == 100  # huge r -> whole corpus
+
+
+def test_theorem2_l2_cos_identity():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (16, 64))
+    a = a / jnp.linalg.norm(a, axis=-1, keepdims=True)
+    b = jnp.roll(a, 1, axis=0)
+    d_cos = geometry.cos_distance(a, b)
+    d_l2 = jnp.linalg.norm(a - b, axis=-1)
+    np.testing.assert_allclose(np.asarray(geometry.l2_from_cos(d_cos)),
+                               np.asarray(d_l2), rtol=1e-4, atol=1e-5)
+
+
+def test_theorem3_omega():
+    # tan(omega) = tan(alpha_k)/sqrt(k); omega shrinks with k.
+    alpha = 0.8
+    o1 = geometry.mean_angle_omega(alpha, 1)
+    o4 = geometry.mean_angle_omega(alpha, 4)
+    assert o1 == pytest.approx(alpha)
+    assert np.tan(o4) == pytest.approx(np.tan(alpha) / 2)
+
+
+def test_theorem3_monte_carlo():
+    # Sample k points uniformly on the alpha_k-cap *boundary* around a pole in
+    # R^n; the angle of their mean from the pole should match Theorem 3.
+    rng = np.random.default_rng(0)
+    n, k, alpha = 256, 16, 0.9
+    trials = 200
+    angles = []
+    for _ in range(trials):
+        t = rng.normal(size=(k, n - 1))
+        t /= np.linalg.norm(t, axis=-1, keepdims=True)
+        pts = np.concatenate(
+            [np.full((k, 1), np.cos(alpha)), np.sin(alpha) * t], axis=1)
+        m = pts.mean(axis=0)
+        angles.append(np.arccos(m[0] / np.linalg.norm(m)))
+    expected = geometry.mean_angle_omega(alpha, k)
+    assert np.mean(angles) == pytest.approx(expected, rel=0.15)
+
+
+def test_leakage_requires_ot_limits():
+    # Huge eps (tiny perturbation) -> direct path; tiny eps -> OT path.
+    assert not geometry.leakage_requires_ot(5, 10_000, 384, eps=1e7)
+    # n/eps = 3.84 rad certainly exceeds omega < pi/2.
+    assert geometry.leakage_requires_ot(5, 10_000, 384, eps=100.0)

@@ -1,0 +1,280 @@
+"""Model zoo unit tests (reduced sizes, CPU)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import embedder, gnn, layers, moe, recsys, transformer
+
+
+def _tiny_cfg(**kw):
+    base = dict(name="tiny", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                d_ff=128, vocab=997, d_head=16, dtype="float32", remat=False,
+                kv_chunk=32)
+    base.update(kw)
+    return transformer.TransformerConfig(**base)
+
+
+def test_chunked_attention_matches_naive():
+    rng = np.random.default_rng(0)
+    b, s, hq, hkv, d = 2, 48, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    out = layers.chunked_attention(q, k, v, causal=True, kv_chunk=16)
+    # naive reference
+    kr = jnp.repeat(k, hq // hkv, axis=2)
+    vr = jnp.repeat(v, hq // hkv, axis=2)
+    s_ = jnp.einsum("bqhd,bkhd->bhqk", q, kr) / np.sqrt(d)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    s_ = jnp.where(mask[None, None], s_, -jnp.inf)
+    want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s_, -1), vr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_transformer_forward_shapes_no_nans():
+    cfg = _tiny_cfg()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jnp.ones((2, 16), jnp.int32)
+    logits, aux = transformer.forward(params, cfg, tokens)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_transformer_decode_matches_forward():
+    """Prefill + decode must agree with full forward on the same tokens."""
+    cfg = _tiny_cfg()
+    params = transformer.init_params(jax.random.PRNGKey(1), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (1, 12), 0, cfg.vocab)
+    full, _ = transformer.forward(params, cfg, tokens)
+    logits_pre, cache = transformer.prefill(params, cfg, tokens[:, :8],
+                                            max_len=16)
+    np.testing.assert_allclose(np.asarray(logits_pre), np.asarray(full[:, :8]),
+                               rtol=2e-4, atol=2e-4)
+    lg, cache = transformer.decode_step(params, cfg, tokens[:, 8:9], cache)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, 8]),
+                               rtol=2e-4, atol=2e-4)
+    lg, cache = transformer.decode_step(params, cfg, tokens[:, 9:10], cache)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, 9]),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("tp,heads,kv", [
+    (8, 4, 2),    # q-padding -> MHA-ized kv
+    (2, 4, 2),    # no padding needed at all
+    (4, 8, 2),    # consecutive-repeat kv path (like llama3 on tp=16)
+])
+def test_gqa_tp_padding_preserves_math(tp, heads, kv):
+    """tp-padded params (zero extra q heads, mapped kv) == unpadded model."""
+    cfg = _tiny_cfg(n_heads=heads, n_kv_heads=kv, d_model=heads * 16)
+    cfg_pad = _tiny_cfg(n_heads=heads, n_kv_heads=kv, d_model=heads * 16, tp=tp)
+    params = transformer.init_params(jax.random.PRNGKey(3), cfg)
+    spec, pspec = cfg.attn_spec, cfg_pad.attn_spec
+    p = params["layers"]["attn"]
+    src = pspec.kv_head_source()
+
+    def pad_q(w):  # (L, d_model, hq*d) -> zero-pad new heads
+        L, dm, _ = w.shape
+        w4 = w.reshape(L, dm, spec.n_heads, spec.d_head)
+        pad = jnp.zeros((L, dm, pspec.padded_heads - spec.n_heads, spec.d_head),
+                        w.dtype)
+        return jnp.concatenate([w4, pad], 2).reshape(L, dm, -1)
+
+    def map_kv(w):  # gather source kv heads per the spec's mapping
+        L, dm, _ = w.shape
+        w4 = w.reshape(L, dm, spec.n_kv_heads, spec.d_head)
+        return w4[:, :, src, :].reshape(L, dm, -1)
+
+    def pad_o(w):  # (L, hq*d, d_model)
+        L, _, dm = w.shape
+        w4 = w.reshape(L, spec.n_heads, spec.d_head, dm)
+        pad = jnp.zeros((L, pspec.padded_heads - spec.n_heads, spec.d_head, dm),
+                        w.dtype)
+        return jnp.concatenate([w4, pad], 1).reshape(L, -1, dm)
+
+    padded = dict(params)
+    padded["layers"] = dict(params["layers"])
+    padded["layers"]["attn"] = {
+        "wq": pad_q(p["wq"]), "wk": map_kv(p["wk"]), "wv": map_kv(p["wv"]),
+        "wo": pad_o(p["wo"]),
+    }
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0, cfg.vocab)
+    out1, _ = transformer.forward(params, cfg, tokens)
+    out2, _ = transformer.forward(padded, cfg_pad, tokens)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_assigned_arch_head_padding_rules():
+    """The five assigned LMs on the 16-way TP mesh (DESIGN.md table)."""
+    from repro.models.layers import AttentionSpec
+    mk = lambda h, kv: AttentionSpec(d_model=h * 128, n_heads=h,
+                                     n_kv_heads=kv, d_head=128, tp_pad_to=16)
+    assert (mk(32, 8).padded_heads, mk(32, 8).padded_kv_heads) == (32, 16)
+    assert (mk(40, 8).padded_heads, mk(40, 8).padded_kv_heads) == (48, 48)
+    assert (mk(32, 4).padded_heads, mk(32, 4).padded_kv_heads) == (32, 16)
+    assert (mk(24, 8).padded_heads, mk(24, 8).padded_kv_heads) == (32, 32)
+    # every padded count divides by 16
+    for h, kv in ((32, 8), (40, 8), (32, 4), (24, 8)):
+        s = mk(h, kv)
+        assert s.padded_heads % 16 == 0 and s.padded_kv_heads % 16 == 0
+        # mapping is group-consistent for every real q head
+        src = s.kv_head_source()
+        group_p = s.padded_heads // s.padded_kv_heads
+        for q in range(s.n_heads):
+            assert src[q // group_p] == q // (s.n_heads // s.n_kv_heads)
+
+
+def test_moe_forward_and_aux():
+    spec = moe.MoeSpec(d_model=32, d_ff=64, n_experts=6, top_k=2, ep_pad_to=4)
+    assert spec.padded_experts == 8
+    params = moe.moe_params(jax.random.PRNGKey(0), spec, jnp.float32, False)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 32))
+    out, aux = moe.moe_fwd(params, x, spec)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_gracefully():
+    spec = moe.MoeSpec(d_model=16, d_ff=16, n_experts=2, top_k=1,
+                       capacity_factor=0.5)
+    params = moe.moe_params(jax.random.PRNGKey(0), spec, jnp.float32, False)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 16))
+    out, _ = moe.moe_fwd(params, x, spec)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_moe_matches_dense_expert_computation():
+    """With E=1, k=1 and huge capacity, MoE == its single expert's MLP."""
+    spec = moe.MoeSpec(d_model=16, d_ff=32, n_experts=1, top_k=1,
+                       capacity_factor=4.0)
+    params = moe.moe_params(jax.random.PRNGKey(5), spec, jnp.float32, False)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 8, 16))
+    out, _ = moe.moe_fwd(params, x, spec)
+    h = jax.nn.silu(x @ params["w_gate"][0]) * (x @ params["w_up"][0])
+    want = h @ params["w_down"][0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_gnn_forward_and_loss():
+    cfg = gnn.GnnConfig(n_layers=3, d_hidden=32, d_feat=8, n_vars=4,
+                        dtype="float32", remat=False)
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    v, e = 30, 64
+    rng = np.random.default_rng(0)
+    batch = gnn.GraphBatch(
+        node_feats=jnp.asarray(rng.normal(size=(v, 8)), jnp.float32),
+        edge_src=jnp.asarray(rng.integers(0, v, e), jnp.int32),
+        edge_dst=jnp.asarray(rng.integers(0, v, e), jnp.int32),
+        targets=jnp.asarray(rng.normal(size=(v, 4)), jnp.float32))
+    pred = gnn.forward(params, cfg, batch)
+    assert pred.shape == (v, 4)
+    loss = gnn.loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_gnn_neighbor_sampler():
+    rng = np.random.default_rng(1)
+    v, e = 200, 1000
+    src = rng.integers(0, v, e)
+    dst = rng.integers(0, v, e)
+    offsets, nbrs = gnn.build_csr(src, dst, v)
+    assert offsets[-1] == e
+    nodes, s, d = gnn.sample_fanout(rng, offsets, nbrs,
+                                    np.arange(10), fanouts=(5, 3))
+    assert len(s) == len(d) > 0
+    assert s.max() < len(nodes) and d.max() < len(nodes)
+
+
+def test_fm_sum_square_trick():
+    cfg = recsys.FmConfig(n_sparse=5, embed_dim=4, vocab_per_field=100)
+    params = recsys.fm_init(jax.random.PRNGKey(0), cfg)
+    ids = jnp.asarray(np.random.default_rng(0).integers(0, 500, (3, 5)),
+                      jnp.int32)
+    logits = recsys.fm_forward(params, cfg, ids)
+    # brute-force pairwise check
+    emb = np.asarray(recsys.embedding_lookup(params["table"], ids))
+    lin = np.asarray(recsys.embedding_lookup(params["linear"], ids))[..., 0]
+    want = []
+    for b in range(3):
+        tot = float(params["bias"]) + lin[b].sum()
+        for i in range(5):
+            for j in range(i + 1, 5):
+                tot += float(emb[b, i] @ emb[b, j])
+        want.append(tot)
+    np.testing.assert_allclose(np.asarray(logits), want, rtol=1e-4)
+
+
+def test_twotower_loss_and_scoring():
+    cfg = recsys.TwoTowerConfig(embed_dim=16, tower_mlp=(32, 16),
+                                user_vocab=1000, item_vocab=1000,
+                                n_user_feats=3, n_item_feats=2)
+    params = recsys.twotower_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    uf = jnp.asarray(rng.integers(0, 1000, (8, 3)), jnp.int32)
+    itf = jnp.asarray(rng.integers(0, 1000, (8, 2)), jnp.int32)
+    loss = recsys.twotower_loss(params, cfg, uf, itf)
+    assert np.isfinite(float(loss))
+    cands = jnp.asarray(rng.normal(size=(50, 16)), jnp.float32)
+    scores = recsys.twotower_score_candidates(params, cfg, uf[:1], cands)
+    assert scores.shape == (1, 50)
+
+
+def test_dien_forward():
+    cfg = recsys.DienConfig(embed_dim=8, seq_len=12, gru_dim=16, mlp=(20, 8),
+                            item_vocab=500)
+    params = recsys.dien_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    hist = jnp.asarray(rng.integers(0, 500, (4, 12)), jnp.int32)
+    tgt = jnp.asarray(rng.integers(0, 500, (4,)), jnp.int32)
+    logits = recsys.dien_forward(params, cfg, hist, tgt)
+    assert logits.shape == (4,)
+    loss = recsys.dien_loss(params, cfg, hist, tgt,
+                            jnp.asarray([0., 1., 0., 1.]))
+    assert np.isfinite(float(loss))
+
+
+def test_dcnv2_forward():
+    cfg = recsys.DcnV2Config(n_dense=4, n_sparse=6, embed_dim=8,
+                             n_cross_layers=2, mlp=(32, 16),
+                             vocab_per_field=100)
+    params = recsys.dcnv2_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    dense = jnp.asarray(rng.normal(size=(5, 4)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 600, (5, 6)), jnp.int32)
+    logits = recsys.dcnv2_forward(params, cfg, dense, ids)
+    assert logits.shape == (5,)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_embedding_bag_modes():
+    table = jnp.asarray(np.arange(20, dtype=np.float32).reshape(10, 2))
+    ids = jnp.asarray([0, 1, 2, 5], jnp.int32)
+    segs = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    s = recsys.embedding_bag(table, ids, segs, 2, mode="sum")
+    m = recsys.embedding_bag(table, ids, segs, 2, mode="mean")
+    np.testing.assert_allclose(np.asarray(s[0]), [2.0, 4.0])
+    np.testing.assert_allclose(np.asarray(m[1]), [7.0, 8.0])
+
+
+def test_embedder_unit_norm():
+    cfg = embedder.encoder_config(dim=128, vocab=512, n_layers=2)
+    params = embedder.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (3, 10), 0, 512)
+    e = embedder.embed(params, cfg, tokens)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(e), axis=-1), 1.0,
+                               atol=1e-4)
+
+
+def test_abstract_params_match_real_shapes():
+    cfg = _tiny_cfg(moe_experts=4, moe_top_k=2, moe_d_ff=32)
+    real = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    abst = transformer.abstract_params(cfg)
+    real_shapes = jax.tree.map(lambda x: (x.shape, str(x.dtype)), real)
+    abst_shapes = jax.tree.map(lambda x: (x.shape, str(x.dtype)), abst)
+    assert real_shapes == abst_shapes

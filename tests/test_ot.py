@@ -1,0 +1,57 @@
+import secrets
+
+import pytest
+
+from repro.crypto import ot
+
+
+def test_receiver_gets_selected_messages():
+    msgs = [f"document-{i}".encode() * 3 for i in range(12)]
+    got, wire = ot.run_ot(msgs, selected=[2, 7, 11])
+    assert got == [msgs[2], msgs[7], msgs[11]]
+    assert wire > 0
+
+
+def test_non_selected_keys_mismatch():
+    """A cheating receiver cannot decrypt unselected messages."""
+    msgs = [secrets.token_bytes(64) for _ in range(5)]
+    sender = ot.OtSender(messages=msgs)
+    receiver = ot.OtReceiver(selected=[0], total=5)
+    A = sender.round1()
+    bs = receiver.round1(A)
+    enc = sender.round2(bs)
+    # decrypt index 3 with the honest-path key (c_3 was 1)
+    key = ot._hash_key(pow(A, receiver._bs[3], receiver.p))
+    forged = ot._xor(enc[3], ot._keystream(key, 3, len(enc[3])))
+    assert forged != msgs[3]
+
+
+def test_sender_view_independent_of_selection():
+    """B_i are uniformly distributed regardless of c_i: the sender's view for
+    a selected index has the same support as for an unselected one."""
+    msgs = [b"x" * 8 for _ in range(4)]
+    sender = ot.OtSender(messages=msgs)
+    A = sender.round1()
+    r_sel = ot.OtReceiver(selected=[0, 1, 2, 3], total=4)
+    r_none = ot.OtReceiver(selected=[], total=4)
+    bs_sel = r_sel.round1(A)
+    bs_none = r_none.round1(A)
+    # all group elements in range and distinct (overwhelming probability)
+    for b in bs_sel + bs_none:
+        assert 0 < b < ot.MODP_2048_P
+    assert len(set(bs_sel + bs_none)) == 8
+
+
+def test_variable_length_messages():
+    msgs = [b"a", b"bb" * 100, b"ccc" * 1000]
+    got, _ = ot.run_ot(msgs, selected=[1, 2])
+    assert got == [msgs[1], msgs[2]]
+
+
+def test_wire_size_formula():
+    """Appendix A.1: 1.5 rounds, (k'+1) group elements + k' encrypted docs."""
+    k_prime, doc = 8, 256
+    msgs = [secrets.token_bytes(doc) for _ in range(k_prime)]
+    _, wire = ot.run_ot(msgs, selected=[0])
+    group = (ot.MODP_2048_P.bit_length() + 7) // 8
+    assert wire == group * (1 + k_prime) + k_prime * doc

@@ -1,0 +1,54 @@
+import numpy as np
+import pytest
+
+from repro.crypto import paillier
+
+
+@pytest.fixture(scope="module")
+def sk():
+    return paillier.keygen(bits=256)  # small test key; 1024+ in benchmarks
+
+
+def test_roundtrip(sk):
+    for m in (0, 1, 42, sk.pub.n - 1, sk.pub.n // 2):
+        assert paillier.decrypt(sk, paillier.encrypt(sk.pub, m)) == m % sk.pub.n
+
+
+def test_additive_homomorphism(sk):
+    c = paillier.add(sk.pub, paillier.encrypt(sk.pub, 1234),
+                     paillier.encrypt(sk.pub, 4321))
+    assert paillier.decrypt(sk, c) == 5555
+
+
+def test_plain_multiplication(sk):
+    c = paillier.mul_plain(sk.pub, paillier.encrypt(sk.pub, 77), 13)
+    assert paillier.decrypt(sk, c) == 1001
+
+
+def test_probabilistic_encryption(sk):
+    assert paillier.encrypt(sk.pub, 5) != paillier.encrypt(sk.pub, 5)
+
+
+def test_encrypted_dot_matches_plain(sk):
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=32)
+    q /= np.linalg.norm(q)
+    cands = rng.normal(size=(6, 32))
+    cands /= np.linalg.norm(cands, axis=-1, keepdims=True)
+    enc_q = paillier.encrypt_vector(sk.pub, q)
+    scores = paillier.decrypt_scores(
+        sk, paillier.encrypted_scores(sk.pub, enc_q, cands))
+    np.testing.assert_allclose(scores, cands @ q, atol=2e-3)
+
+
+def test_encrypted_dot_negative_values(sk):
+    q = np.array([-0.5, 0.5, -0.5, 0.5])
+    c = np.array([[0.5, 0.5, 0.5, 0.5]])
+    enc_q = paillier.encrypt_vector(sk.pub, q)
+    scores = paillier.decrypt_scores(
+        sk, paillier.encrypted_scores(sk.pub, enc_q, c))
+    assert scores[0] == pytest.approx(0.0, abs=1e-3)
+
+
+def test_ciphertext_size_model(sk):
+    assert sk.pub.ciphertext_bytes() == pytest.approx(2 * 256 / 8, abs=2)

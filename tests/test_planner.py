@@ -1,0 +1,49 @@
+import numpy as np
+import pytest
+
+from repro.core import planner
+
+
+def test_plan_paper_operating_point():
+    p = planner.plan(n=768, N=100_000, k=5, radius=0.03,
+                     radial_quantile=0.5, conservative=False)
+    assert p.eps == pytest.approx(768 / 0.03, rel=1e-6)
+    assert 100 <= p.kprime <= 300
+    assert p.path in ("direct", "ot")
+
+
+def test_plan_requires_exactly_one_knob():
+    with pytest.raises(ValueError):
+        planner.plan(n=384, N=1000, k=5)
+    with pytest.raises(ValueError):
+        planner.plan(n=384, N=1000, k=5, eps=1e4, radius=0.05)
+
+
+def test_kprime_monotone_in_privacy():
+    # Smaller eps (more privacy) => larger search range.
+    kps = [
+        planner.plan(n=384, N=10_000, k=5, eps=e).kprime
+        for e in (50 * 384.0, 20 * 384.0, 10 * 384.0)
+    ]
+    assert kps == sorted(kps)
+
+
+def test_eps_for_kprime_roundtrip():
+    target = 160
+    eps = planner.eps_for_kprime(n=768, N=100_000, k=5, kprime=target)
+    p = planner.plan(n=768, N=100_000, k=5, eps=eps)
+    assert abs(p.kprime - target) / target < 0.25
+
+
+def test_ot_decision_matches_theorem3():
+    # direct when budget loose, OT when tight
+    loose = planner.plan(n=384, N=10_000, k=5, eps=1e7)
+    tight = planner.plan(n=384, N=10_000, k=5, eps=200.0)
+    assert not loose.use_ot
+    assert tight.use_ot
+
+
+def test_plan_quantile_inflates_range():
+    base = planner.plan(n=768, N=100_000, k=5, eps=25_600.0, radial_quantile=0.5)
+    hi = planner.plan(n=768, N=100_000, k=5, eps=25_600.0, radial_quantile=0.9999)
+    assert hi.kprime >= base.kprime

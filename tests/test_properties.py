@@ -1,0 +1,87 @@
+"""Hypothesis property tests on system invariants (beyond DistanceDP)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import geometry
+from repro.crypto import modring
+from repro.crypto.modring import PrimeCtx
+from repro.kernels.scoretopk import ops as st_ops
+from repro.kernels.scoretopk import ref as st_ref
+from repro.models import moe
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=3, max_value=2048),
+       st.floats(min_value=0.01, max_value=3.1))
+def test_cap_fraction_in_unit_interval_and_symmetric(n, alpha):
+    f = float(geometry.cap_fraction_np(alpha, n))
+    assert 0.0 <= f <= 1.0
+    # antipodal symmetry: F(a) + F(pi - a) == 1
+    g = float(geometry.cap_fraction_np(np.pi - alpha, n))
+    assert abs(f + g - 1.0) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=512),
+       st.integers(min_value=1, max_value=50),
+       st.floats(min_value=1e-3, max_value=0.5))
+def test_kprime_containment_invariants(n, k, r):
+    N = 1000
+    k = min(k, N)
+    kp = geometry.kprime_for(k, N, n, r)
+    assert k <= kp <= N
+    # monotone in k
+    assert geometry.kprime_for(min(k + 5, N), N, n, r) >= kp
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_modring_field_properties(seed):
+    """(a*b)*c == a*(b*c), a*(b+c) == a*b + a*c over the NTT prime."""
+    ctx = PrimeCtx.build(modring.find_ntt_primes(2048, 1)[0], 1024)
+    rng = np.random.default_rng(seed)
+    a, b, c = (rng.integers(0, ctx.q, 64).astype(np.int32) for _ in range(3))
+    mm = lambda x, y: np.asarray(modring.mod_mul(x, y, ctx.q, ctx.mu))
+    ma = lambda x, y: np.asarray(modring.mod_add(x, y, ctx.q))
+    np.testing.assert_array_equal(mm(mm(a, b), c), mm(a, mm(b, c)))
+    np.testing.assert_array_equal(mm(a, ma(b, c)), ma(mm(a, b), mm(a, c)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=4),
+       st.integers(min_value=20, max_value=300),
+       st.integers(min_value=1, max_value=20),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_topk_is_exact_for_any_shape(b, n_rows, k, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(b, 16)).astype(np.float32)
+    e = rng.normal(size=(n_rows, 16)).astype(np.float32)
+    out = st_ops.topk_scores(jnp.asarray(q), jnp.asarray(e), k,
+                             tile=64, use_pallas=False)
+    want_v, want_i = st_ref.topk_ref(jnp.asarray(q), jnp.asarray(e),
+                                     min(k, n_rows))
+    np.testing.assert_allclose(np.asarray(out.values), np.asarray(want_v),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=1, max_value=4))
+def test_moe_output_is_convex_combination_scale(seed, top_k):
+    """Router weights are a softmax -> MoE output norm is bounded by the max
+    expert-output norm over routed tokens (no amplification by routing)."""
+    spec = moe.MoeSpec(d_model=16, d_ff=16, n_experts=4, top_k=top_k,
+                       capacity_factor=4.0)
+    params = moe.moe_params(jax.random.PRNGKey(seed % 1000), spec,
+                            jnp.float32, False)
+    x = jax.random.normal(jax.random.PRNGKey(seed % 997), (2, 8, 16))
+    out, aux = moe.moe_fwd(params, x, spec)
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) >= 0.0
+    # with huge capacity nothing is dropped: every token got >= 1 expert
+    # (output not identically zero unless weights make it so)
+    assert out.shape == x.shape

@@ -1,0 +1,111 @@
+"""End-to-end RemoteRAG protocol: recall vs plaintext oracle, both backends,
+both module-2 paths, transcript accounting."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import protocol
+from repro.core.baselines import privacy_conscious_service, privacy_ignorant_service
+from repro.data import synth
+from repro.retrieval.index import FlatIndex
+from repro.retrieval.topk import distributed_topk
+
+
+def _setup(rng, n_docs=2000, dim=384, kind="uniform"):
+    if kind == "uniform":
+        emb = synth.uniform_corpus(rng, n_docs, dim)
+    else:
+        emb = synth.clustered_corpus(rng, n_docs, dim)
+    docs = [f"passage-{i}".encode() for i in range(n_docs)]
+    return FlatIndex.build(emb, documents=docs), emb
+
+
+def _plain_topk(emb, e, k):
+    return np.argsort(-(emb @ e), kind="stable")[:k]
+
+
+@pytest.mark.parametrize("backend", ["rlwe", "paillier"])
+def test_protocol_recall_and_docs(backend):
+    rng = np.random.default_rng(0)
+    index, emb = _setup(rng)
+    k = 5
+    user = protocol.RemoteRagUser(n=384, N=2000, k=k, radius=0.05,
+                                  backend=backend, rng=rng)
+    cloud = protocol.RemoteRagCloud(index, rlwe_params=getattr(
+        user, "rlwe_params", None))
+    e = synth.queries_near_corpus(rng, emb, 1)[0]
+    docs, ids, tr = protocol.run_remoterag(user, cloud, e, jax.random.PRNGKey(0))
+    want = _plain_topk(emb, e, k)
+    assert set(ids.tolist()) == set(want.tolist()), (ids, want)
+    assert docs == [f"passage-{i}".encode() for i in ids]
+    assert tr.total_bytes > 0 and tr.request_bytes > 0
+
+
+def test_protocol_recall_sweep_uniform():
+    """Paper Table 3 (reduced): recall must be 100% across k and r."""
+    rng = np.random.default_rng(1)
+    index, emb = _setup(rng, n_docs=5000, dim=384)
+    for k in (5, 10):
+        for r in (0.03, 0.07):
+            user = protocol.RemoteRagUser(n=384, N=5000, k=k, radius=r,
+                                          backend="rlwe", rng=rng)
+            cloud = protocol.RemoteRagCloud(index, rlwe_params=user.rlwe_params)
+            e = synth.queries_near_corpus(rng, emb, 1)[0]
+            _, ids, _ = protocol.run_remoterag(user, cloud, e,
+                                               jax.random.PRNGKey(k * 100))
+            want = _plain_topk(emb, e, k)
+            recall = len(set(ids.tolist()) & set(want.tolist())) / k
+            assert recall == 1.0, (k, r, recall)
+
+
+def test_ot_path_used_when_budget_tight():
+    rng = np.random.default_rng(2)
+    index, emb = _setup(rng, n_docs=500, dim=64)
+    user = protocol.RemoteRagUser(n=64, N=500, k=3, eps=40.0, backend="rlwe",
+                                  rng=rng)
+    assert user.plan.use_ot
+    cloud = protocol.RemoteRagCloud(index, rlwe_params=user.rlwe_params)
+    e = synth.queries_near_corpus(rng, emb, 1)[0]
+    docs, ids, tr = protocol.run_remoterag(user, cloud, e, jax.random.PRNGKey(7))
+    assert tr.path == "ot" and tr.ot_wire_bytes > 0 and tr.fetch_bytes == 0
+    assert docs == [f"passage-{i}".encode() for i in ids]
+
+
+def test_direct_path_used_when_budget_loose():
+    rng = np.random.default_rng(3)
+    index, emb = _setup(rng, n_docs=500, dim=64)
+    user = protocol.RemoteRagUser(n=64, N=500, k=3, radius=0.05,
+                                  backend="rlwe", rng=rng)
+    assert not user.plan.use_ot
+    cloud = protocol.RemoteRagCloud(index, rlwe_params=user.rlwe_params)
+    e = synth.queries_near_corpus(rng, emb, 1)[0]
+    _, _, tr = protocol.run_remoterag(user, cloud, e, jax.random.PRNGKey(8))
+    assert tr.path == "direct" and tr.fetch_bytes > 0 and tr.ot_wire_bytes == 0
+
+
+def test_perturbed_embedding_differs_from_query():
+    """The cloud must never see e_k: the request carries e_k' != e_k and an
+    encryption of e_k."""
+    rng = np.random.default_rng(4)
+    user = protocol.RemoteRagUser(n=128, N=1000, k=5, radius=0.05,
+                                  backend="rlwe", rng=rng)
+    e = synth.uniform_corpus(rng, 1, 128)[0]
+    req = user.make_request(e, jax.random.PRNGKey(1))
+    d = np.linalg.norm(req.perturbed - e)
+    assert d > 0.01  # the DistanceDP radius
+    assert req.kprime == user.plan.kprime
+
+
+def test_baselines_agree_with_protocol():
+    rng = np.random.default_rng(5)
+    index, emb = _setup(rng, n_docs=300, dim=64)
+    e = synth.queries_near_corpus(rng, emb, 1)[0]
+    ign = privacy_ignorant_service(index, e, 5)
+    con = privacy_conscious_service(index, e, 5, backend="rlwe", rng=rng)
+    want = _plain_topk(emb, e, 5)
+    assert set(ign.ids.tolist()) == set(want.tolist())
+    assert set(con.ids.tolist()) == set(want.tolist())
+    assert con.wire_bytes > ign.wire_bytes  # privacy has a price

@@ -1,0 +1,124 @@
+"""RNS-RLWE additive HE: roundtrip, homomorphism, packed inner products."""
+
+import numpy as np
+import pytest
+
+from repro.crypto import rlwe
+
+
+def _unit(rng, *shape):
+    x = rng.normal(size=shape)
+    return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+
+@pytest.fixture(scope="module")
+def small_params():
+    return rlwe.RlweParams(n_poly=1024, chunk=512)
+
+
+@pytest.fixture(scope="module")
+def default_params():
+    return rlwe.RlweParams()  # N=4096, chunk=1024
+
+
+def test_params_validate():
+    rlwe.RlweParams()  # should not raise
+    with pytest.raises(AssertionError):
+        rlwe.RlweParams(scale_q_bits=16, scale_c_bits=16, t_bits=28)
+
+
+def test_encrypted_dot_small_dim(small_params):
+    rng = np.random.default_rng(0)
+    sk = rlwe.keygen(small_params, rng)
+    n_dim = 384
+    q = _unit(rng, n_dim)
+    cands = _unit(rng, 9, n_dim)  # not a multiple of cands_per_ct (=2)
+    ct = rlwe.encrypt_query(sk, q, rng)
+    packed = rlwe.pack_candidates(small_params, cands)
+    res = rlwe.encrypted_scores(small_params, ct, packed)
+    got = rlwe.decrypt_scores(sk, res)
+    want = cands @ q
+    np.testing.assert_allclose(got, want, atol=2e-3)
+
+
+@pytest.mark.parametrize("n_dim", [384, 768, 1536, 3072])
+def test_encrypted_dot_all_paper_dims(default_params, n_dim):
+    """All five embedding-model dimensions from the paper (Table 5)."""
+    rng = np.random.default_rng(1)
+    sk = rlwe.keygen(default_params, rng)
+    q = _unit(rng, n_dim)
+    cands = _unit(rng, 8, n_dim)
+    ct = rlwe.encrypt_query(sk, q, rng)
+    packed = rlwe.pack_candidates(default_params, cands)
+    got = rlwe.decrypt_scores(sk, rlwe.encrypted_scores(default_params, ct, packed))
+    np.testing.assert_allclose(got, cands @ q, atol=2e-3)
+
+
+def test_ranking_preserved_vs_plaintext(default_params):
+    """The encrypted path must reproduce the exact plaintext top-k ranking."""
+    rng = np.random.default_rng(2)
+    sk = rlwe.keygen(default_params, rng)
+    n_dim, k_prime = 768, 64
+    q = _unit(rng, n_dim)
+    cands = _unit(rng, k_prime, n_dim)
+    ct = rlwe.encrypt_query(sk, q, rng)
+    packed = rlwe.pack_candidates(default_params, cands)
+    got = rlwe.decrypt_scores(sk, rlwe.encrypted_scores(default_params, ct, packed))
+    want_order = np.argsort(-(cands @ q))[:5]
+    got_order = np.argsort(-got)[:5]
+    np.testing.assert_array_equal(got_order, want_order)
+
+
+def test_distances_match_theorem2(default_params):
+    rng = np.random.default_rng(3)
+    sk = rlwe.keygen(default_params, rng)
+    q = _unit(rng, 384)
+    cands = _unit(rng, 4, 384)
+    ct = rlwe.encrypt_query(sk, q, rng)
+    got = rlwe.cosine_distances(
+        rlwe.decrypt_scores(
+            sk, rlwe.encrypted_scores(default_params, ct,
+                                      rlwe.pack_candidates(default_params, cands))))
+    want = 1.0 - cands @ q
+    np.testing.assert_allclose(got, want, atol=2e-3)
+    # Theorem 2: d_l2 = sqrt(2 d_cos)
+    np.testing.assert_allclose(
+        np.linalg.norm(cands - q, axis=-1), np.sqrt(2 * want), rtol=1e-6)
+
+
+def test_additive_homomorphism(small_params):
+    """dec(enc(x) + enc(y)) scores == <x+y, c> via two queries' ciphertext sum."""
+    rng = np.random.default_rng(4)
+    sk = rlwe.keygen(small_params, rng)
+    x = _unit(rng, 256)
+    y = _unit(rng, 256)
+    cands = _unit(rng, 4, 256)
+    cx = rlwe.encrypt_query(sk, x, rng)
+    cy = rlwe.encrypt_query(sk, y, rng)
+    import jax.numpy as jnp
+    qmods = np.array(small_params.primes, np.int64)[None, :, None]
+    c0 = (np.asarray(cx.c0).astype(np.int64) + np.asarray(cy.c0)) % qmods
+    c1 = (np.asarray(cx.c1).astype(np.int64) + np.asarray(cy.c1)) % qmods
+    summed = rlwe.QueryCiphertext(jnp.asarray(c0.astype(np.int32)),
+                                  jnp.asarray(c1.astype(np.int32)), 256)
+    packed = rlwe.pack_candidates(small_params, cands)
+    got = rlwe.decrypt_scores(
+        sk, rlwe.encrypted_scores(small_params, summed, packed))
+    np.testing.assert_allclose(got, cands @ (x + y), atol=4e-3)
+
+
+def test_ciphertext_indistinguishable_without_key(small_params):
+    """Same query under fresh randomness yields different ciphertexts whose
+    difference is full-range — a basic sanity check, not a security proof."""
+    rng = np.random.default_rng(5)
+    sk = rlwe.keygen(small_params, rng)
+    q = _unit(rng, 256)
+    c1 = rlwe.encrypt_query(sk, q, rng)
+    c2 = rlwe.encrypt_query(sk, q, rng)
+    diff = np.asarray(c1.c0).astype(np.int64) - np.asarray(c2.c0).astype(np.int64)
+    assert np.std(diff) > small_params.primes[0] / 10
+
+
+def test_wire_size_accounting(default_params):
+    b = default_params.ciphertext_bytes()
+    assert b == 2 * 3 * 4096 * 20 // 8  # 61,440 B per ciphertext
