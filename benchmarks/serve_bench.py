@@ -1,0 +1,123 @@
+"""Serving-engine benchmark: batched vs sequential QPS and latency.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench
+
+Builds one synthetic corpus, opens a pool of tenant sessions, then pushes the
+same request stream through (a) the sequential one-query-per-step path and
+(b) the micro-batching engine at several batch sizes.  Reports throughput
+(QPS), p50/p99 enqueue-to-result latency, and mean wire KB per request, and
+checks the two paths return identical per-query results (ids + wire bytes).
+
+Default sizes finish in a few minutes on CPU; REPRO_BENCH_FULL=1 scales the
+corpus and request count toward the paper's 10^6-document setting.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import FULL, emit
+from repro.crypto import rlwe
+from repro.data import synth
+from repro.retrieval.index import FlatIndex
+from repro.serve import EngineConfig, ServeEngine
+
+N_DOCS = 200_000 if FULL else 20_000
+DIM = 384 if FULL else 128
+N_REQUESTS = 64 if FULL else 16
+N_TENANTS = 8
+K = 5
+RADIUS = 0.05
+BATCH_SIZES = (1, 4, 8)
+# CPU-friendly ring: the serving hot loop is NTT-bound, and n_poly=1024
+# still fits DIM-dim queries in one chunk (identical protocol semantics).
+RLWE_PARAMS = rlwe.RlweParams(n_poly=1024, chunk=512)
+
+
+def build_engine(index, *, sequential: bool, max_batch: int) -> ServeEngine:
+    from repro.serve.session import SessionManager
+
+    # deterministic seeds: the sequential and batched engines must replay
+    # identical tenant key/noise streams for the per-query parity check
+    engine = ServeEngine(
+        index,
+        config=EngineConfig(max_batch=max_batch, sequential=sequential),
+        sessions=SessionManager(rlwe_params=RLWE_PARAMS,
+                                deterministic_seeds=True))
+    for t in range(N_TENANTS):
+        engine.open_session(f"tenant-{t}", n=DIM, N=N_DOCS, k=K,
+                            radius=RADIUS, backend="rlwe")
+    return engine
+
+
+def run_stream(engine: ServeEngine, queries, *, warmup: bool = True) -> tuple:
+    """Push the stream through once untimed (jit warmup for this engine's
+    batch shapes), then measure the steady-state pass."""
+    from repro.serve.metrics import ServeMetrics
+
+    if warmup:
+        for i, q in enumerate(queries):
+            engine.submit(f"tenant-{i % N_TENANTS}", q,
+                          key=jax.random.PRNGKey(i))
+        engine.drain()
+        engine.metrics = ServeMetrics()
+    t0 = time.monotonic()
+    for i, q in enumerate(queries):
+        engine.submit(f"tenant-{i % N_TENANTS}", q,
+                      key=jax.random.PRNGKey(i))
+    results = engine.drain()
+    wall = time.monotonic() - t0
+    return results, wall
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    emb = synth.uniform_corpus(rng, N_DOCS, DIM)
+    docs = synth.passages(rng, N_DOCS, avg_bytes=256)
+    index = FlatIndex.build(emb, documents=docs)
+    queries = synth.queries_near_corpus(rng, emb, N_REQUESTS)
+
+    print(f"# serve_bench: {N_DOCS} docs x dim {DIM}, {N_REQUESTS} requests "
+          f"from {N_TENANTS} tenants, k={K}")
+
+    seq_engine = build_engine(index, sequential=True, max_batch=1)
+    seq_results, seq_wall = run_stream(seq_engine, queries)
+    seq_qps = len(seq_results) / seq_wall
+    agg = seq_engine.metrics.aggregate
+    emit("serve_sequential", seq_wall / len(seq_results) * 1e6,
+         f"qps={seq_qps:.3f} p50={agg.percentile(50):.3f}s "
+         f"p99={agg.percentile(99):.3f}s "
+         f"wire_kb={agg.total_wire_bytes / agg.count / 1024:.1f}")
+
+    qps_by_bs = {}
+    for bs in BATCH_SIZES:
+        engine = build_engine(index, sequential=False, max_batch=bs)
+        results, wall = run_stream(engine, queries)
+        qps = len(results) / wall
+        qps_by_bs[bs] = qps
+        agg = engine.metrics.aggregate
+        emit(f"serve_batched_b{bs}", wall / len(results) * 1e6,
+             f"qps={qps:.3f} p50={agg.percentile(50):.3f}s "
+             f"p99={agg.percentile(99):.3f}s "
+             f"speedup={qps / seq_qps:.2f}x")
+        # per-query parity with the sequential path
+        for rs, rb in zip(seq_results, results):
+            assert rs.ids.tolist() == rb.ids.tolist(), (
+                f"id mismatch at batch {bs}: {rs.ids} vs {rb.ids}")
+            assert rs.docs == rb.docs
+            assert rs.transcript.total_bytes == rb.transcript.total_bytes, (
+                f"wire mismatch at batch {bs}")
+
+    big = max(bs for bs in BATCH_SIZES if bs >= 8)
+    print(f"# batched (b={big}) {qps_by_bs[big]:.3f} qps vs sequential "
+          f"{seq_qps:.3f} qps ({qps_by_bs[big] / seq_qps:.2f}x)")
+    assert qps_by_bs[big] > seq_qps, \
+        "batched throughput at batch >= 8 must beat sequential"
+
+
+if __name__ == "__main__":
+    main()

@@ -98,18 +98,22 @@ class RemoteRagCloud:
     """Holds the sharded index + documents; executes modules 1, 2a, 2b, 2c."""
 
     def __init__(self, index: FlatIndex, *,
-                 rlwe_params: Optional[rlwe.RlweParams] = None):
+                 rlwe_params: Optional[rlwe.RlweParams] = None,
+                 use_pallas: Optional[bool] = None):
         self.index = index
         self.rlwe_params = rlwe_params or rlwe.RlweParams()
+        self.use_pallas = use_pallas
 
     def handle_request(self, req: Request) -> Reply:
         q = jnp.asarray(req.perturbed, jnp.float32)[None, :]
-        res = distributed_topk(self.index, q, req.kprime)
+        res = distributed_topk(self.index, q, req.kprime,
+                               use_pallas=self.use_pallas)
         cand_ids = np.asarray(res.indices)[0]
         cand_rows = np.asarray(self.index.rows(cand_ids))
         if req.backend == "rlwe":
             packed = rlwe.pack_candidates(self.rlwe_params, cand_rows)
-            enc = rlwe.encrypted_scores(self.rlwe_params, req.enc_query, packed)
+            enc = rlwe.encrypted_scores(self.rlwe_params, req.enc_query, packed,
+                                        use_pallas=self.use_pallas)
         else:
             enc = pai.encrypted_scores(self._paillier_pub, req.enc_query,
                                        cand_rows)
@@ -155,40 +159,59 @@ class RemoteRagUser:
                  rlwe_params: Optional[rlwe.RlweParams] = None,
                  paillier_bits: int = 512,
                  rng: Optional[np.random.Generator] = None,
-                 plan_kwargs: Optional[dict] = None):
+                 plan_kwargs: Optional[dict] = None,
+                 plan: Optional[ProtocolPlan] = None):
         assert backend in ("rlwe", "paillier")
         self.backend = backend
         self.rng = rng or np.random.default_rng(0)
-        self.plan = planner.plan(n=n, N=N, k=k, eps=eps, radius=radius,
-                                 **(plan_kwargs or {}))
+        # Paillier randomness: a caller-provided rng makes key/nonce streams
+        # replayable (serve parity); with no rng the scheme keeps its
+        # `secrets` CSPRNG default instead of inheriting the seed-0 rng.
+        self._pai_rng = rng
+        # `plan` injects a precomputed plan (serve-layer plan cache); the
+        # Theorem-1 planning is host-side scipy work worth skipping for
+        # repeat tenants with identical (n, N, k, eps) knobs.
+        self.plan = plan if plan is not None else planner.plan(
+            n=n, N=N, k=k, eps=eps, radius=radius, **(plan_kwargs or {}))
         if backend == "rlwe":
             self.rlwe_params = rlwe_params or rlwe.RlweParams()
             self.sk = rlwe.keygen(self.rlwe_params, self.rng)
         else:
-            self.sk = pai.keygen(paillier_bits)
+            self.sk = pai.keygen(paillier_bits, rng=self._pai_rng)
 
     # -- module 1 + 2a ------------------------------------------------------
-    def make_request(self, e: np.ndarray, key: jax.Array) -> Request:
+    def encrypt_query(self, e: np.ndarray):
+        """Encrypt the true embedding under this user's key (module 2a,
+        user half).  Shared by make_request and the serve layer's batched
+        path, which perturbs whole batches separately."""
         self._e = np.asarray(e, np.float64)
+        if self.backend == "rlwe":
+            return rlwe.encrypt_query(self.sk, self._e, self.rng)
+        return pai.encrypt_vector(self.sk.pub, self._e, self._pai_rng)
+
+    def make_request(self, e: np.ndarray, key: jax.Array) -> Request:
         pert = distancedp.perturb(key, jnp.asarray(e, jnp.float32),
                                   self.plan.eps)
-        if self.backend == "rlwe":
-            enc = rlwe.encrypt_query(self.sk, self._e, self.rng)
-        else:
-            enc = pai.encrypt_vector(self.sk.pub, self._e)
+        enc = self.encrypt_query(e)
         return Request(perturbed=np.asarray(pert.embedding),
                        kprime=self.plan.kprime, enc_query=enc,
                        backend=self.backend)
 
     # -- decrypt + sort (module 2a end) --------------------------------------
+    def positions_from_scores(self, scores: np.ndarray,
+                              num_candidates: int) -> np.ndarray:
+        """Stable sort of decrypted scores -> local top-k candidate
+        positions (shared by the sequential and batched serving paths)."""
+        scores = scores[: num_candidates]
+        order = np.argsort(-scores, kind="stable")
+        return order[: self.plan.k]
+
     def top_positions(self, reply: Reply) -> np.ndarray:
         if self.backend == "rlwe":
             scores = rlwe.decrypt_scores(self.sk, reply.enc_scores)
         else:
             scores = pai.decrypt_scores(self.sk, reply.enc_scores)
-        scores = scores[: len(reply.candidate_ids)]
-        order = np.argsort(-scores, kind="stable")
-        return order[: self.plan.k]
+        return self.positions_from_scores(scores, len(reply.candidate_ids))
 
     # -- module 2b / 2c ------------------------------------------------------
     def retrieve(self, cloud: RemoteRagCloud, reply: Reply,
@@ -209,14 +232,12 @@ class RemoteRagUser:
 # one-shot driver
 # ---------------------------------------------------------------------------
 
-def run_remoterag(user: RemoteRagUser, cloud: RemoteRagCloud, e: np.ndarray,
-                  key: jax.Array) -> tuple:
-    """Full protocol round; returns (docs, top-k global ids, transcript)."""
-    if user.backend == "paillier":
-        cloud.register_paillier(user.sk.pub)
-    req = user.make_request(e, key)
-    reply = cloud.handle_request(req)
-    positions = user.top_positions(reply)
+def finish_request(user: RemoteRagUser, cloud: RemoteRagCloud, req: Request,
+                   reply: Reply, positions: np.ndarray) -> tuple:
+    """Module 2b/2c + accounting: retrieve the documents at ``positions``
+    and assemble (docs, global ids, transcript).  Shared tail of the
+    sequential driver and the serve layer's batched path — the wire-byte
+    accounting must stay identical between them."""
     docs, extras = user.retrieve(cloud, reply, positions)
     params = user.rlwe_params if user.backend == "rlwe" else None
     kb = user.sk.pub.key_bits if user.backend == "paillier" else 2048
@@ -228,7 +249,18 @@ def run_remoterag(user: RemoteRagUser, cloud: RemoteRagCloud, e: np.ndarray,
     return docs, ids, transcript
 
 
+def run_remoterag(user: RemoteRagUser, cloud: RemoteRagCloud, e: np.ndarray,
+                  key: jax.Array) -> tuple:
+    """Full protocol round; returns (docs, top-k global ids, transcript)."""
+    if user.backend == "paillier":
+        cloud.register_paillier(user.sk.pub)
+    req = user.make_request(e, key)
+    reply = cloud.handle_request(req)
+    positions = user.top_positions(reply)
+    return finish_request(user, cloud, req, reply, positions)
+
+
 __all__ = [
     "Request", "Reply", "FetchDirect", "Documents", "RemoteRagCloud",
-    "RemoteRagUser", "ProtocolTranscript", "run_remoterag",
+    "RemoteRagUser", "ProtocolTranscript", "finish_request", "run_remoterag",
 ]

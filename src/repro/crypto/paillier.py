@@ -26,9 +26,29 @@ import numpy as np
 from repro.crypto.modring import is_prime
 
 
-def _rand_prime(bits: int, rng: secrets.SystemRandom | None = None) -> int:
+def _randbits(bits: int, rng: np.random.Generator | None = None) -> int:
+    """`secrets`-backed by default; an np.random.Generator makes key and
+    encryption randomness *deterministic* — for reproducible benchmarking /
+    replay parity only, not for real deployments."""
+    if rng is None:
+        return secrets.randbits(bits)
+    nbytes = (bits + 7) // 8
+    return int.from_bytes(rng.bytes(nbytes), "big") >> (nbytes * 8 - bits)
+
+
+def _randbelow(n: int, rng: np.random.Generator | None = None) -> int:
+    if rng is None:
+        return secrets.randbelow(n)
+    bits = n.bit_length()
     while True:
-        cand = secrets.randbits(bits) | (1 << (bits - 1)) | 1
+        r = _randbits(bits, rng)
+        if r < n:
+            return r
+
+
+def _rand_prime(bits: int, rng: np.random.Generator | None = None) -> int:
+    while True:
+        cand = _randbits(bits, rng) | (1 << (bits - 1)) | 1
         if is_prime(cand):
             return cand
 
@@ -54,11 +74,12 @@ class PaillierSecretKey:
     mu: int    # (L(g^lam mod n^2))^{-1} mod n
 
 
-def keygen(bits: int = 1024) -> PaillierSecretKey:
+def keygen(bits: int = 1024,
+           rng: np.random.Generator | None = None) -> PaillierSecretKey:
     """Generate a Paillier keypair with an n of ~`bits` bits."""
     while True:
-        p = _rand_prime(bits // 2)
-        q = _rand_prime(bits // 2)
+        p = _rand_prime(bits // 2, rng)
+        q = _rand_prime(bits // 2, rng)
         if p != q:
             break
     n = p * q
@@ -70,11 +91,12 @@ def keygen(bits: int = 1024) -> PaillierSecretKey:
     return PaillierSecretKey(pub=pub, lam=lam, mu=mu)
 
 
-def encrypt(pub: PaillierPublicKey, m: int) -> int:
+def encrypt(pub: PaillierPublicKey, m: int,
+            rng: np.random.Generator | None = None) -> int:
     """Enc(m) = (1 + mn) * r^n mod n^2  (g = n+1 shortcut)."""
     m %= pub.n
     while True:
-        r = secrets.randbelow(pub.n)
+        r = _randbelow(pub.n, rng)
         if r and math.gcd(r, pub.n) == 1:
             break
     return (1 + m * pub.n) % pub.n_sq * pow(r, pub.n, pub.n_sq) % pub.n_sq
@@ -120,9 +142,11 @@ def _decode(m: int, n: int, frac_bits: int) -> float:
     return m / (1 << frac_bits)
 
 
-def encrypt_vector(pub: PaillierPublicKey, e: np.ndarray) -> list:
+def encrypt_vector(pub: PaillierPublicKey, e: np.ndarray,
+                   rng: np.random.Generator | None = None) -> list:
     """[[e_k]]: componentwise encryption of the query embedding."""
-    return [encrypt(pub, _encode(v, pub.n)) for v in np.asarray(e, np.float64)]
+    return [encrypt(pub, _encode(v, pub.n), rng)
+            for v in np.asarray(e, np.float64)]
 
 
 def encrypted_dot(pub: PaillierPublicKey, enc_query: Sequence[int],

@@ -217,29 +217,38 @@ def encrypt_query(sk: RlweSecretKey, e: np.ndarray,
         c0=jnp.asarray(np.stack(c0s)), c1=jnp.asarray(np.stack(c1s)), n_dim=n_dim)
 
 
-def decrypt_scores(sk: RlweSecretKey, res: ScoreCiphertexts) -> np.ndarray:
-    """Decrypt packed inner products -> float scores (len num_cands)."""
-    p = sk.params
-    num_ct = res.c0.shape[0]
-    # d = c0 - c1 * s per prime (batched over result ciphertexts)
-    d_p = []
-    for i, ctx in enumerate(p.ctxs):
-        c1s = ntt_ops.ntt_inv(
-            ntt_ops.pointwise_mul(
-                ntt_ops.ntt_fwd(res.c1[:, i, :], ctx), sk.s_ntt[i][None, :], ctx),
-            ctx)
-        d = modring.mod_sub(res.c0[:, i, :], c1s, ctx.q)
-        d_p.append(np.asarray(d).astype(np.int64))
-    d_rns = np.stack(d_p, axis=1)  # (num_ct, P, N)
+def decrypt_rns(params: RlweParams, s_ntt: jnp.ndarray, c0: jnp.ndarray,
+                c1: jnp.ndarray, *, use_pallas=None) -> np.ndarray:
+    """RNS phase of decryption: d = c0 - c1*s per prime.
 
-    # CRT reconstruct only the extraction coefficients (Python bignums)
-    stride = p.stride(res.n_dim)
-    cpt = p.cands_per_ct(res.n_dim)
+    ``c0``/``c1`` are (..., P, N); ``s_ntt`` broadcasts against the leading
+    dims of NTT(c1) — pass (P, N) for one key or (B, 1, P, N)-style stacks
+    for a batch of per-tenant keys.  Returns int64 (..., P, N).
+    """
+    d_p = []
+    for i, ctx in enumerate(params.ctxs):
+        f1 = ntt_ops.ntt_fwd(c1[..., i, :], ctx, use_pallas=use_pallas)
+        sb = jnp.broadcast_to(s_ntt[..., i, :], f1.shape)
+        c1s = ntt_ops.ntt_inv(
+            ntt_ops.pointwise_mul(f1, sb, ctx, use_pallas=use_pallas), ctx,
+            use_pallas=use_pallas)
+        d = modring.mod_sub(c0[..., i, :], c1s, ctx.q)
+        d_p.append(np.asarray(d).astype(np.int64))
+    return np.stack(d_p, axis=-2)
+
+
+def extract_scores(params: RlweParams, d_rns: np.ndarray, n_dim: int,
+                   num_cands: int) -> np.ndarray:
+    """CRT-reconstruct the extraction coefficients of d_rns (num_ct, P, N)
+    (Python bignums) -> float scores (num_cands,)."""
+    p = params
+    stride = p.stride(n_dim)
+    cpt = p.cands_per_ct(n_dim)
     g = [p.big_q // q for q in p.primes]
     h = [pow(gi % qi, -1, qi) for gi, qi in zip(g, p.primes)]
     scale = float(p.scale_q * p.scale_c)
-    out = np.zeros(res.num_cands, np.float64)
-    for cand in range(res.num_cands):
+    out = np.zeros(num_cands, np.float64)
+    for cand in range(num_cands):
         ct_i, slot = divmod(cand, cpt)
         coeff = slot * stride + p.chunk - 1
         big = 0
@@ -255,69 +264,113 @@ def decrypt_scores(sk: RlweSecretKey, res: ScoreCiphertexts) -> np.ndarray:
     return out
 
 
+def decrypt_scores(sk: RlweSecretKey, res: ScoreCiphertexts) -> np.ndarray:
+    """Decrypt packed inner products -> float scores (len num_cands)."""
+    d_rns = decrypt_rns(sk.params, sk.s_ntt, res.c0, res.c1)
+    return extract_scores(sk.params, d_rns, res.n_dim, res.num_cands)
+
+
 # ---------------------------------------------------------------------------
 # cloud side: pack candidates, encrypted scoring
 # ---------------------------------------------------------------------------
 
-def pack_candidates(params: RlweParams, cands: np.ndarray) -> PackedCandidates:
-    """Pack candidate embeddings (num_cands, n_dim) into NTT-domain plaintexts."""
-    num_cands, n_dim = cands.shape
+def pack_candidates_batch(params: RlweParams,
+                          cands: np.ndarray) -> jnp.ndarray:
+    """Pack (B, num_cands, n_dim) candidate rows -> (B, num_ct, chunks, P, N)
+    NTT-domain plaintexts.  The reversed placement (p[o + chunk-1 - j] =
+    seg[j]) vectorizes over B; the NTT batches all leading dims."""
+    bsz, num_cands, n_dim = cands.shape
     chunks = params.num_chunks(n_dim)
     stride = params.stride(n_dim)
     cpt = params.cands_per_ct(n_dim)
     num_ct = -(-num_cands // cpt)
-    ints = _fixed_point(cands, params.scale_c)  # (num_cands, n_dim)
+    ints = _fixed_point(cands, params.scale_c)  # (B, num_cands, n_dim)
 
-    polys = np.zeros((num_ct, chunks, params.n_poly), np.int64)
+    polys = np.zeros((bsz, num_ct, chunks, params.n_poly), np.int64)
     for cand in range(num_cands):
         ct_i, slot = divmod(cand, cpt)
         o = slot * stride
         for c in range(chunks):
-            seg = ints[cand, c * params.chunk:(c + 1) * params.chunk]
-            # reversed placement: p[o + chunk-1 - j] = seg[j]
-            idx = o + params.chunk - 1 - np.arange(len(seg))
-            polys[ct_i, c, idx] = seg
-    rns = _to_rns(polys, params)  # (P, num_ct, chunks, N)
+            seg = ints[:, cand, c * params.chunk:(c + 1) * params.chunk]
+            idx = o + params.chunk - 1 - np.arange(seg.shape[1])
+            polys[:, ct_i, c, idx] = seg
+    rns = _to_rns(polys, params)  # (P, B, num_ct, chunks, N)
     ntt_polys = np.stack([
         np.asarray(ntt_ops.ntt_fwd(jnp.asarray(rns[i]), ctx))
         for i, ctx in enumerate(params.ctxs)
-    ])  # (P, num_ct, chunks, N)
-    return PackedCandidates(
-        polys=jnp.asarray(np.transpose(ntt_polys, (1, 2, 0, 3))),  # (ct, chunk, P, N)
-        n_dim=n_dim, num_cands=num_cands)
+    ])  # (P, B, num_ct, chunks, N)
+    return jnp.asarray(np.transpose(ntt_polys, (1, 2, 3, 0, 4)))
+
+
+def pack_candidates(params: RlweParams, cands: np.ndarray) -> PackedCandidates:
+    """Pack candidate embeddings (num_cands, n_dim) into NTT-domain
+    plaintexts (the B=1 slice of the batch packer — one source of truth)."""
+    num_cands, n_dim = cands.shape
+    polys = pack_candidates_batch(params, np.asarray(cands)[None])[0]
+    return PackedCandidates(polys=polys, n_dim=n_dim, num_cands=num_cands)
+
+
+def encrypted_scores_batch(params: RlweParams,
+                           q_cts: Sequence[QueryCiphertext],
+                           packed: jnp.ndarray, num_cands: int, n_dim: int,
+                           *, use_pallas=None) -> list:
+    """Batched ct (x) p: B query ciphertexts against (B, num_ct, chunks, P,
+    N) packed candidates, chunk-summed in the NTT domain — one NTT dispatch
+    per prime for the whole batch.
+
+    This is the cloud's entire encrypted workload: 2 * chunks forward NTTs
+    per query (amortized over all candidates), one Hadamard modmul per
+    (lane, result-ct, chunk, component, prime), and 2 inverse NTTs per
+    result ct.  Returns a list of B ScoreCiphertexts.
+    """
+    c0 = jnp.stack([q.c0 for q in q_cts])  # (B, chunks, P, N)
+    c1 = jnp.stack([q.c1 for q in q_cts])
+    c0_out, c1_out = [], []
+    for i, ctx in enumerate(params.ctxs):
+        f0 = ntt_ops.ntt_fwd(c0[:, :, i, :], ctx, use_pallas=use_pallas)
+        f1 = ntt_ops.ntt_fwd(c1[:, :, i, :], ctx, use_pallas=use_pallas)
+        pk = packed[:, :, :, i, :]                 # (B, num_ct, chunks, N)
+        f0b = jnp.broadcast_to(f0[:, None], pk.shape)
+        f1b = jnp.broadcast_to(f1[:, None], pk.shape)
+        prod0 = ntt_ops.pointwise_mul(pk, f0b, ctx, use_pallas=use_pallas)
+        prod1 = ntt_ops.pointwise_mul(pk, f1b, ctx, use_pallas=use_pallas)
+        # homomorphic chunk-sum in NTT domain (mod-add over chunk axis)
+        acc0 = prod0[:, :, 0, :]
+        acc1 = prod1[:, :, 0, :]
+        for c in range(1, prod0.shape[2]):
+            acc0 = modring.mod_add(acc0, prod0[:, :, c, :], ctx.q)
+            acc1 = modring.mod_add(acc1, prod1[:, :, c, :], ctx.q)
+        c0_out.append(ntt_ops.ntt_inv(acc0, ctx, use_pallas=use_pallas))
+        c1_out.append(ntt_ops.ntt_inv(acc1, ctx, use_pallas=use_pallas))
+    all0 = jnp.stack(c0_out, axis=2)               # (B, num_ct, P, N)
+    all1 = jnp.stack(c1_out, axis=2)
+    return [ScoreCiphertexts(c0=all0[b], c1=all1[b], n_dim=n_dim,
+                             num_cands=num_cands)
+            for b in range(all0.shape[0])]
 
 
 def encrypted_scores(params: RlweParams, q_ct: QueryCiphertext,
                      packed: PackedCandidates, *,
                      use_pallas=None) -> ScoreCiphertexts:
-    """ct (x) p per candidate block, summed over chunks in the NTT domain.
-
-    This is the cloud's entire encrypted workload: 2 * chunks forward NTTs of
-    the query (amortized over all candidates), one Hadamard modmul per
-    (result-ct, chunk, component, prime), and 2 inverse NTTs per result ct.
-    """
+    """ct (x) p per candidate block (the B=1 slice of the batch version)."""
     assert q_ct.n_dim == packed.n_dim
-    num_ct = packed.polys.shape[0]
-    c0_out, c1_out = [], []
-    for i, ctx in enumerate(params.ctxs):
-        f0 = ntt_ops.ntt_fwd(q_ct.c0[:, i, :], ctx, use_pallas=use_pallas)
-        f1 = ntt_ops.ntt_fwd(q_ct.c1[:, i, :], ctx, use_pallas=use_pallas)
-        pk = packed.polys[:, :, i, :]                      # (num_ct, chunks, N)
-        f0b = jnp.broadcast_to(f0[None], pk.shape)
-        f1b = jnp.broadcast_to(f1[None], pk.shape)
-        prod0 = ntt_ops.pointwise_mul(pk, f0b, ctx, use_pallas=use_pallas)
-        prod1 = ntt_ops.pointwise_mul(pk, f1b, ctx, use_pallas=use_pallas)
-        # homomorphic chunk-sum in NTT domain (mod-add over chunk axis)
-        acc0 = prod0[:, 0, :]
-        acc1 = prod1[:, 0, :]
-        for c in range(1, prod0.shape[1]):
-            acc0 = modring.mod_add(acc0, prod0[:, c, :], ctx.q)
-            acc1 = modring.mod_add(acc1, prod1[:, c, :], ctx.q)
-        c0_out.append(ntt_ops.ntt_inv(acc0, ctx, use_pallas=use_pallas))
-        c1_out.append(ntt_ops.ntt_inv(acc1, ctx, use_pallas=use_pallas))
-    return ScoreCiphertexts(
-        c0=jnp.stack(c0_out, axis=1), c1=jnp.stack(c1_out, axis=1),
-        n_dim=q_ct.n_dim, num_cands=packed.num_cands)
+    return encrypted_scores_batch(
+        params, [q_ct], packed.polys[None], num_cands=packed.num_cands,
+        n_dim=packed.n_dim, use_pallas=use_pallas)[0]
+
+
+def decrypt_scores_batch(sks: Sequence[RlweSecretKey],
+                         cts: Sequence[ScoreCiphertexts],
+                         *, use_pallas=None) -> list:
+    """Decrypt B score ciphertexts under B (distinct) tenant keys with one
+    NTT dispatch per prime; CRT extraction stays per-lane (host bignums)."""
+    params = sks[0].params
+    c0 = jnp.stack([c.c0 for c in cts])            # (B, num_ct, P, N)
+    c1 = jnp.stack([c.c1 for c in cts])
+    s_ntt = jnp.stack([sk.s_ntt for sk in sks])[:, None]  # (B, 1, P, N)
+    d_rns = decrypt_rns(params, s_ntt, c0, c1, use_pallas=use_pallas)
+    return [extract_scores(params, d_rns[b], ct.n_dim, ct.num_cands)
+            for b, ct in enumerate(cts)]
 
 
 def cosine_distances(scores: np.ndarray) -> np.ndarray:
@@ -328,5 +381,7 @@ def cosine_distances(scores: np.ndarray) -> np.ndarray:
 __all__ = [
     "RlweParams", "RlweSecretKey", "QueryCiphertext", "PackedCandidates",
     "ScoreCiphertexts", "keygen", "encrypt_query", "decrypt_scores",
-    "pack_candidates", "encrypted_scores", "cosine_distances",
+    "decrypt_scores_batch", "decrypt_rns", "extract_scores",
+    "pack_candidates", "pack_candidates_batch", "encrypted_scores",
+    "encrypted_scores_batch", "cosine_distances",
 ]

@@ -7,6 +7,8 @@ round-trips HBM between stages on real hardware.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 
 from repro.crypto.modring import PrimeCtx
@@ -16,6 +18,27 @@ from repro.kernels.ntt import ref as _ref
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# PrimeCtx instances are interned per (q, n) and hash by identity, so they
+# are valid static args: jitting here collapses the ~log2(N) stages of eager
+# jnp dispatch in the reference path into one compiled call per shape —
+# the serving hot loop on CPU is NTT-bound.
+@functools.partial(jax.jit, static_argnames=("ctx",))
+def _ntt_fwd_ref(x, ctx: PrimeCtx):
+    return _ref.ntt_fwd_ref(x, ctx)
+
+
+@functools.partial(jax.jit, static_argnames=("ctx",))
+def _ntt_inv_ref(x, ctx: PrimeCtx):
+    return _ref.ntt_inv_ref(x, ctx)
+
+
+@functools.partial(jax.jit, static_argnames=("ctx",))
+def _pointwise_mul_ref(a, b, ctx: PrimeCtx):
+    from repro.crypto import modring
+
+    return modring.mod_mul(a, b, ctx.q, ctx.mu)
 
 
 def _resolve(use_pallas):
@@ -30,7 +53,7 @@ def ntt_fwd(x, ctx: PrimeCtx, *, use_pallas=None):
     """Forward negacyclic NTT, (..., N) int32 in [0, q) -> bit-rev NTT domain."""
     use_pallas = _resolve(use_pallas)
     if not use_pallas:
-        return _ref.ntt_fwd_ref(x, ctx)
+        return _ntt_fwd_ref(x, ctx)
     lead = x.shape[:-1]
     flat = x.reshape((-1, ctx.n))
     out = _kern.ntt_pallas(flat, ctx, inverse=False, interpret=_interpret())
@@ -41,7 +64,7 @@ def ntt_inv(x, ctx: PrimeCtx, *, use_pallas=None):
     """Inverse negacyclic NTT, bit-rev NTT domain -> coefficient domain."""
     use_pallas = _resolve(use_pallas)
     if not use_pallas:
-        return _ref.ntt_inv_ref(x, ctx)
+        return _ntt_inv_ref(x, ctx)
     lead = x.shape[:-1]
     flat = x.reshape((-1, ctx.n))
     out = _kern.ntt_pallas(flat, ctx, inverse=True, interpret=_interpret())
@@ -52,9 +75,7 @@ def pointwise_mul(a, b, ctx: PrimeCtx, *, use_pallas=None):
     """Hadamard modular product in the NTT domain."""
     use_pallas = _resolve(use_pallas)
     if not use_pallas:
-        from repro.crypto import modring
-
-        return modring.mod_mul(a, b, ctx.q, ctx.mu)
+        return _pointwise_mul_ref(a, b, ctx)
     lead = a.shape[:-1]
     fa = a.reshape((-1, ctx.n))
     fb = b.reshape((-1, ctx.n))

@@ -1,11 +1,13 @@
 """Serving driver: the private RAG service end to end.
 
-Builds a synthetic corpus + FlatIndex, instantiates the RemoteRAG cloud and a
-user, and serves a stream of queries through the full protocol (Module 1
-DistanceDP + range limitation, Module 2a encrypted re-rank, Module 2b/2c
-retrieval), printing latency and wire-size stats per request.
+Builds a synthetic corpus + FlatIndex, spins up the micro-batching
+`repro.serve` engine with a pool of tenant sessions, and serves a stream of
+queries through the full protocol (Module 1 DistanceDP + range limitation,
+Module 2a encrypted re-rank, Module 2b/2c retrieval), printing latency and
+wire-size stats per request plus the per-tenant engine metrics.
 
-`python -m repro.launch.serve --n-docs 20000 --requests 5 --backend rlwe`
+`python -m repro.launch.serve --n-docs 20000 --requests 8 --backend rlwe`
+`... --no-batch` runs the sequential one-query-at-a-time comparison path.
 """
 
 from __future__ import annotations
@@ -18,9 +20,9 @@ import numpy as np
 
 import jax
 
-from repro.core import protocol
 from repro.data import synth
 from repro.retrieval.index import FlatIndex
+from repro.serve import EngineConfig, ServeEngine
 
 
 def main() -> None:
@@ -29,11 +31,18 @@ def main() -> None:
     ap.add_argument("--dim", type=int, default=384)
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--radius", type=float, default=0.05)
-    ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--tenants", type=int, default=4)
     ap.add_argument("--backend", choices=("rlwe", "paillier"), default="rlwe")
     ap.add_argument("--corpus", choices=("uniform", "clustered"),
                     default="uniform")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=20.0)
+    ap.add_argument("--no-batch", action="store_true",
+                    help="sequential comparison path (one query per step)")
     args = ap.parse_args()
+    if args.tenants < 1 or args.requests < 1:
+        ap.error("--tenants and --requests must be >= 1")
 
     rng = np.random.default_rng(0)
     gen = (synth.uniform_corpus if args.corpus == "uniform"
@@ -42,35 +51,43 @@ def main() -> None:
     docs = synth.passages(rng, args.n_docs, avg_bytes=256)
     index = FlatIndex.build(emb, documents=docs)
 
-    user = protocol.RemoteRagUser(n=args.dim, N=args.n_docs, k=args.k,
-                                  radius=args.radius, backend=args.backend,
-                                  rng=rng)
-    cloud = protocol.RemoteRagCloud(
-        index, rlwe_params=getattr(user, "rlwe_params", None))
-    queries = synth.queries_near_corpus(rng, emb, args.requests)
-
+    engine = ServeEngine(index, config=EngineConfig(
+        max_batch=1 if args.no_batch else args.max_batch,
+        max_wait_s=args.max_wait_ms / 1e3,
+        sequential=args.no_batch))
+    for t in range(args.tenants):
+        sess = engine.open_session(f"tenant-{t}", n=args.dim, N=args.n_docs,
+                                   k=args.k, radius=args.radius,
+                                   backend=args.backend)
+    plan = sess.plan
     print(json.dumps({"plan": {
-        "eps": user.plan.eps, "kprime": user.plan.kprime,
-        "path": user.plan.path, "radius": user.plan.radius}}))
+        "eps": plan.eps, "kprime": plan.kprime, "path": plan.path,
+        "radius": plan.radius,
+        "plan_cache": {"hits": engine.sessions.plan_cache.hits,
+                       "misses": engine.sessions.plan_cache.misses}}}))
 
-    stats = []
+    queries = synth.queries_near_corpus(rng, emb, args.requests)
+    t0 = time.monotonic()
     for i, q in enumerate(queries):
-        t0 = time.monotonic()
-        docs_out, ids, tr = protocol.run_remoterag(
-            user, cloud, q, jax.random.PRNGKey(i))
-        dt = time.monotonic() - t0
+        engine.submit(f"tenant-{i % args.tenants}", q,
+                      key=jax.random.PRNGKey(i))
+    results = engine.drain()
+    wall = time.monotonic() - t0
+
+    for res in results:
+        q = queries[res.request_id]
         plain = np.argsort(-(emb @ q), kind="stable")[: args.k]
-        recall = len(set(ids.tolist()) & set(plain.tolist())) / args.k
-        stats.append({"request": i, "latency_s": round(dt, 3),
-                      "recall": recall, "wire_bytes": tr.total_bytes,
-                      "path": tr.path})
-        print(json.dumps(stats[-1]))
-    lat = [s["latency_s"] for s in stats]
-    print(json.dumps({"summary": {
-        "mean_latency_s": round(float(np.mean(lat)), 3),
-        "mean_recall": float(np.mean([s["recall"] for s in stats])),
-        "mean_wire_kb": round(float(np.mean(
-            [s["wire_bytes"] for s in stats])) / 1024, 2)}}))
+        recall = len(set(res.ids.tolist()) & set(plain.tolist())) / args.k
+        print(json.dumps({
+            "request": res.request_id, "tenant": res.tenant,
+            "latency_s": round(res.latency_s, 3),
+            "batch_size": res.batch_size, "recall": recall,
+            "wire_bytes": res.transcript.total_bytes,
+            "path": res.transcript.path}))
+    summary = engine.metrics.summary()
+    summary["aggregate"]["qps"] = round(len(results) / wall, 3)
+    print(json.dumps({"summary": summary["aggregate"],
+                      "num_batches": summary["num_batches"]}))
 
 
 if __name__ == "__main__":

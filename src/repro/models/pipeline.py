@@ -24,7 +24,7 @@ from jax.sharding import PartitionSpec as P
 
 
 def pipeline_apply(stage_params, x_micro, stage_fn: Callable, *, mesh,
-                   axis: str = "pod", inner_specs=P(), auto_axes=()):
+                   axis: str = "pod", inner_specs=P()):
     """Run the pipeline.
 
     stage_params: pytree, leaves (S*per_stage, ...) sharded P(axis) on dim 0
@@ -71,15 +71,10 @@ def pipeline_apply(stage_params, x_micro, stage_fn: Callable, *, mesh,
         return jax.lax.psum(out * mask, axis)
 
     in_leaf_spec = jax.tree.map(lambda _: P(axis), stage_params)
-    if auto_axes:
-        # manual only over the pipeline axis; GSPMD keeps handling the rest
-        # (jax.shard_map partial-manual via axis_names)
-        return jax.shard_map(
-            body, mesh=mesh,
-            in_specs=(in_leaf_spec, inner_specs),
-            out_specs=inner_specs,
-            axis_names=frozenset({axis}), check_vma=False,
-        )(stage_params, x_micro)
+    # Fully manual over every mesh axis: partial-manual (auto=) lowering of
+    # this schedule trips XLA's PartitionId/manual-subgroup limitations on the
+    # pinned jax version, so non-pipeline axes are handled by `inner_specs`
+    # instead (shard the microbatch dim there; unmentioned axes replicate).
     return shard_map(
         body, mesh=mesh,
         in_specs=(in_leaf_spec, inner_specs),

@@ -320,9 +320,10 @@ def pipeline_forward(params, cfg: TransformerConfig, tokens, *, mesh,
                      n_micro: int = 8, axis: str = "pod"):
     """GPipe training forward: layer stack split into mesh.shape[axis]
     stages (stacked layer params sharded P(axis) on dim 0), microbatches
-    streamed with ppermute; data/model sharding inside stages stays
-    GSPMD-auto.  Embed/unembed run outside the pipeline (pod-replicated).
-    """
+    streamed with ppermute.  The pipeline region is fully manual: the
+    per-microbatch batch dim shards over the remaining batch axes (when it
+    divides), everything else — including any TP axis — replicates inside
+    stages.  Embed/unembed run outside the pipeline (pod-replicated)."""
     from repro.models.pipeline import pipeline_apply
 
     b, s = tokens.shape
@@ -345,10 +346,15 @@ def pipeline_forward(params, cfg: TransformerConfig, tokens, *, mesh,
                             unroll=cfg.scan_unroll)
         return h
 
-    rest = tuple(a for a in mesh.axis_names if a != axis)
+    # shard the per-microbatch batch dim over the non-pipeline batch axes
+    # when it divides evenly; remaining axes (e.g. TP) replicate inside the
+    # manual pipeline region.
+    rest = tuple(a for a in (cfg.batch_axes or ()) if a != axis)
+    mb = b // n_micro
+    rest_devices = math.prod(mesh.shape[a] for a in rest) if rest else 1
+    mb_spec = rest if rest and mb % rest_devices == 0 else None
     out = pipeline_apply(params["layers"], xm, stage_fn, mesh=mesh,
-                         axis=axis, inner_specs=P(None, None, None, None),
-                         auto_axes=rest)
+                         axis=axis, inner_specs=P(None, mb_spec, None, None))
     x = out.reshape(b, s, d)
     x = layers.rms_norm(x, params["final_norm"])
     logits = jnp.einsum("bsm,mv->bsv", x, params["unembed"])

@@ -1,0 +1,28 @@
+"""Batched multi-tenant serving engine for the RemoteRAG protocol.
+
+Layers (bottom up):
+
+  batching.py   stacked-batch primitives: vmapped DistanceDP perturbation,
+                batched score-top-k' over the shared index, and batched RLWE
+                score encryption / decryption (one NTT dispatch per prime for
+                the whole batch, per-tenant secret keys).
+  session.py    per-tenant state: keys, protocol plan (via a PlanCache keyed
+                on the planning knobs so repeat tenants skip Theorem-1 work).
+  engine.py     micro-batching request engine: size/deadline triggers form
+                per-step batches grouped by (backend, n, k'); each step runs
+                the full protocol for the batch.
+  metrics.py    per-tenant latency percentiles + wire-byte accounting built
+                on Request.nbytes / Reply.nbytes.
+
+The batched path is bit-compatible with the one-query `run_remoterag` driver:
+identical docs, ids and wire bytes at any batch size (tests/test_serve.py).
+"""
+
+from repro.serve.engine import EngineConfig, ServeEngine, ServeResult
+from repro.serve.metrics import ServeMetrics
+from repro.serve.session import PlanCache, Session, SessionManager
+
+__all__ = [
+    "EngineConfig", "ServeEngine", "ServeResult", "ServeMetrics",
+    "PlanCache", "Session", "SessionManager",
+]

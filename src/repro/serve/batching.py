@@ -1,0 +1,74 @@
+"""Stacked-batch protocol primitives for the serving engine.
+
+Every function here is the B-query generalization of an existing single-query
+op, built so each lane is *bit-identical* to the unbatched call:
+
+  * perturb_batch       jax.vmap of distancedp.perturb over per-request PRNG
+                        keys (and per-tenant eps) — vmap semantics guarantee
+                        lane b equals perturb(keys[b], E[b], eps[b]).
+  * topk_batch          one score-top-k' kernel invocation with B resident
+                        queries instead of B invocations with one.
+  * pack_candidates_batch / encrypted_scores_batch / decrypt_scores_batch
+                        the RLWE cloud/user crypto with a leading batch axis:
+                        one NTT dispatch per prime for the whole batch.  All
+                        ops are exact integer arithmetic, so lanes match the
+                        sequential path exactly (including wire bytes).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distancedp
+from repro.crypto import rlwe
+from repro.retrieval.index import FlatIndex
+from repro.retrieval.topk import SearchResult, distributed_topk
+
+
+# ---------------------------------------------------------------------------
+# module 1: vmapped DistanceDP
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _perturb_lanes(keys, E, epss):
+    return jax.vmap(
+        lambda key, e, eps: distancedp.perturb(key, e, eps).embedding
+    )(keys, E, epss)
+
+
+def perturb_batch(keys: Sequence[jax.Array], E: np.ndarray,
+                  epss: Sequence[float]) -> np.ndarray:
+    """(B,) PRNG keys + (B, n) embeddings + (B,) budgets -> (B, n) e'."""
+    out = _perturb_lanes(jnp.stack(list(keys)),
+                         jnp.asarray(E, jnp.float32),
+                         jnp.asarray(np.asarray(epss), jnp.float32))
+    return np.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# module 2a cloud: batched top-k' + batched encrypted re-rank
+# ---------------------------------------------------------------------------
+
+def topk_batch(index: FlatIndex, perturbed: np.ndarray, kprime: int,
+               *, use_pallas=None) -> SearchResult:
+    """All B perturbed queries through the score-top-k kernel in one call."""
+    q = jnp.asarray(perturbed, jnp.float32)
+    return distributed_topk(index, q, kprime, use_pallas=use_pallas)
+
+
+# The batched RLWE re-rank crypto lives with the scheme (crypto/rlwe.py);
+# the single-query ops there are defined as the B=1 slices of the batch
+# versions, so there is exactly one implementation of each. Re-exported
+# here because this module is the serve layer's batching surface.
+pack_candidates_batch = rlwe.pack_candidates_batch
+encrypted_scores_batch = rlwe.encrypted_scores_batch
+decrypt_scores_batch = rlwe.decrypt_scores_batch
+
+
+__all__ = ["perturb_batch", "topk_batch", "pack_candidates_batch",
+           "encrypted_scores_batch", "decrypt_scores_batch"]

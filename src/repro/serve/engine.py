@@ -1,0 +1,247 @@
+"""Micro-batching request engine for the RemoteRAG protocol.
+
+Requests enqueue via `submit`; `step` forms at most one batch per call using
+two triggers — size (a compatible group reached `max_batch`) and deadline
+(the group's oldest request waited `max_wait_s`) — and runs the full protocol
+for that batch:
+
+  module 1    vmapped DistanceDP perturbation (per-request PRNG keys)
+  module 2a   per-tenant query encryption (host), ONE batched score-top-k'
+              kernel invocation over the shared index, batched RLWE re-rank
+              and batched decryption under per-tenant keys
+  module 2b/c direct fetch or k-of-k' OT per request (host)
+
+Batches group by (backend, n, k'): the stacked crypto needs equal ciphertext
+shapes, which (n, k') pins down.  Every lane is bit-identical to the
+sequential `protocol.run_remoterag` driver — same docs, ids and wire bytes —
+so `EngineConfig(sequential=True)` exists purely as the latency/throughput
+comparison path.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import secrets
+import time
+from typing import Deque, Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+
+from repro.core import protocol
+from repro.crypto import paillier as pai
+from repro.retrieval.index import FlatIndex
+from repro.serve import batching
+from repro.serve.metrics import ServeMetrics
+from repro.serve.session import Session, SessionManager
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 8          # size trigger
+    max_wait_s: float = 0.02    # deadline trigger (age of a group's head)
+    sequential: bool = False    # comparison path: loop run_remoterag
+    use_pallas: Optional[bool] = None
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    request_id: int
+    tenant: str
+    embedding: np.ndarray
+    key: jax.Array
+    t_enqueue: float
+
+
+@dataclasses.dataclass
+class ServeResult:
+    request_id: int
+    tenant: str
+    docs: List[bytes]
+    ids: np.ndarray
+    transcript: protocol.ProtocolTranscript
+    latency_s: float
+    batch_size: int
+
+
+class ServeEngine:
+    """Multi-tenant front end over one RemoteRagCloud."""
+
+    def __init__(self, index: FlatIndex, *, config: EngineConfig = None,
+                 sessions: Optional[SessionManager] = None,
+                 clock=time.monotonic):
+        self.config = EngineConfig() if config is None else config
+        # `is None` (not truthiness): an empty SessionManager has len 0
+        self.sessions = SessionManager() if sessions is None else sessions
+        self.cloud = protocol.RemoteRagCloud(
+            index, rlwe_params=self.sessions.rlwe_params,
+            use_pallas=self.config.use_pallas)
+        self.metrics = ServeMetrics()
+        self._clock = clock
+        self._ids = itertools.count()
+        # per-group FIFO queues keyed once at submit: dispatch pops from a
+        # group head instead of rescanning/rewriting one global list
+        self._queues: Dict[tuple, Deque[ServeRequest]] = {}
+
+    # -- session + queue ----------------------------------------------------
+
+    def open_session(self, tenant: str, **session_kwargs) -> Session:
+        return self.sessions.open(tenant, **session_kwargs)
+
+    def submit(self, tenant: str, embedding: np.ndarray,
+               key: Optional[jax.Array] = None) -> int:
+        """Enqueue one query for `tenant` (session must be open).  Returns a
+        request id; results come back from step()/drain().
+
+        ``key`` seeds the DistanceDP noise.  The default draws OS entropy —
+        a predictable key (e.g. the request counter) would let the cloud
+        replay the noise and strip the perturbation; pass an explicit key
+        only for replay/parity setups.
+        """
+        assert tenant in self.sessions, f"no session for tenant {tenant!r}"
+        rid = next(self._ids)
+        if key is None:
+            key = jax.random.PRNGKey(secrets.randbits(63))
+        sess = self.sessions.get(tenant)
+        group = (sess.backend, np.shape(embedding)[-1], sess.plan.kprime)
+        self._queues.setdefault(group, collections.deque()).append(
+            ServeRequest(
+                request_id=rid, tenant=tenant,
+                embedding=np.asarray(embedding, np.float32), key=key,
+                t_enqueue=self._clock()))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # -- dispatch -----------------------------------------------------------
+
+    def step(self, *, force: bool = False) -> List[ServeResult]:
+        """Dispatch at most one batch if a trigger fired (or `force`).
+
+        Among triggered groups the one with the oldest head request wins —
+        a group that keeps hitting the size trigger must not starve another
+        group whose deadline expired."""
+        now = self._clock()
+        cfg = self.config
+        chosen = None
+        for key, group in self._queues.items():
+            size_hit = len(group) >= cfg.max_batch
+            deadline_hit = (now - group[0].t_enqueue) >= cfg.max_wait_s
+            if (size_hit or deadline_hit or force) and (
+                    chosen is None
+                    or group[0].t_enqueue
+                    < self._queues[chosen][0].t_enqueue):
+                chosen = key
+        if chosen is None:
+            return []
+        group = self._queues[chosen]
+        batch = [group.popleft()
+                 for _ in range(min(cfg.max_batch, len(group)))]
+        if not group:
+            del self._queues[chosen]
+        return self._dispatch(batch)
+
+    def drain(self) -> List[ServeResult]:
+        """Flush the queue completely (batch by batch); results in request
+        order."""
+        out: List[ServeResult] = []
+        while self._queues:
+            out.extend(self.step(force=True))
+        return sorted(out, key=lambda r: r.request_id)
+
+    def _dispatch(self, batch: Sequence[ServeRequest]) -> List[ServeResult]:
+        self.metrics.record_batch(len(batch))
+        if self.config.sequential:
+            results = [self._run_one(r) for r in batch]
+        else:
+            results = self._run_batched(batch)
+        for res in results:
+            self.metrics.record(res.tenant, latency_s=res.latency_s,
+                                batch_size=res.batch_size,
+                                transcript=res.transcript)
+        return results
+
+    # -- sequential comparison path ----------------------------------------
+
+    def _run_one(self, req: ServeRequest) -> ServeResult:
+        sess = self.sessions.get(req.tenant)
+        docs, ids, tr = protocol.run_remoterag(sess.user, self.cloud,
+                                               req.embedding, req.key)
+        sess.num_requests += 1
+        return ServeResult(request_id=req.request_id, tenant=req.tenant,
+                           docs=docs, ids=ids, transcript=tr,
+                           latency_s=self._clock() - req.t_enqueue,
+                           batch_size=1)
+
+    # -- batched protocol path ---------------------------------------------
+
+    def _run_batched(self, batch: Sequence[ServeRequest]) -> List[ServeResult]:
+        sessions = [self.sessions.get(r.tenant) for r in batch]
+        users = [s.user for s in sessions]
+        backend = users[0].backend
+        kprime = users[0].plan.kprime
+        params = self.sessions.rlwe_params
+
+        # module 1: vmapped DistanceDP over per-request keys / per-tenant eps
+        E = np.stack([r.embedding for r in batch])
+        pert = batching.perturb_batch([r.key for r in batch], E,
+                                      [u.plan.eps for u in users])
+
+        # module 2a, user half: encrypt queries (host, submission order so
+        # each tenant's rng stream matches the sequential path)
+        wire_reqs = [
+            protocol.Request(perturbed=pb, kprime=kprime,
+                             enc_query=user.encrypt_query(req.embedding),
+                             backend=backend)
+            for user, req, pb in zip(users, batch, pert)]
+
+        # module 2a, cloud half: one top-k' kernel call for all lanes ...
+        res = batching.topk_batch(self.cloud.index, pert, kprime,
+                                  use_pallas=self.config.use_pallas)
+        cand_ids = np.asarray(res.indices)                    # (B, k')
+        rows = np.asarray(self.cloud.index.rows(cand_ids.reshape(-1)))
+        cand_rows = rows.reshape(len(batch), kprime, -1)
+        # ... and one batched encrypted re-rank
+        if backend == "rlwe":
+            packed = batching.pack_candidates_batch(params, cand_rows)
+            encs = batching.encrypted_scores_batch(
+                params, [w.enc_query for w in wire_reqs], packed,
+                num_cands=kprime, n_dim=cand_rows.shape[-1],
+                use_pallas=self.config.use_pallas)
+        else:
+            encs = [pai.encrypted_scores(u.sk.pub, w.enc_query, cr)
+                    for u, w, cr in zip(users, wire_reqs, cand_rows)]
+        replies = [protocol.Reply(candidate_ids=cand_ids[b], enc_scores=encs[b])
+                   for b in range(len(batch))]
+
+        # back on the users: batched decryption (per-tenant keys) + sort
+        if backend == "rlwe":
+            scores_list = batching.decrypt_scores_batch(
+                [u.sk for u in users], encs,
+                use_pallas=self.config.use_pallas)
+        else:
+            scores_list = [pai.decrypt_scores(u.sk, e)
+                           for u, e in zip(users, encs)]
+
+        results = []
+        for sess, user, req, wreq, reply, scores in zip(
+                sessions, users, batch, wire_reqs, replies, scores_list):
+            positions = user.positions_from_scores(
+                scores, len(reply.candidate_ids))
+            docs, ids, tr = protocol.finish_request(
+                user, self.cloud, wreq, reply, positions)
+            sess.num_requests += 1
+            results.append(ServeResult(
+                request_id=req.request_id, tenant=req.tenant, docs=docs,
+                ids=ids, transcript=tr,
+                latency_s=self._clock() - req.t_enqueue,
+                batch_size=len(batch)))
+        return results
+
+
+__all__ = ["EngineConfig", "ServeRequest", "ServeResult", "ServeEngine"]

@@ -1,0 +1,95 @@
+"""Per-tenant serving metrics: latency percentiles + wire-byte accounting.
+
+Latency is measured enqueue -> result (queue wait included, the number a
+tenant actually experiences under micro-batching).  Wire bytes come from the
+protocol transcripts, i.e. the same Request.nbytes / Reply.nbytes accounting
+the paper's Table 2 uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.protocol import ProtocolTranscript
+
+
+@dataclasses.dataclass
+class TenantStats:
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    batch_sizes: List[int] = dataclasses.field(default_factory=list)
+    request_bytes: int = 0
+    reply_bytes: int = 0
+    fetch_bytes: int = 0
+    docs_bytes: int = 0
+    ot_wire_bytes: int = 0
+    direct_count: int = 0
+    ot_count: int = 0
+
+    @property
+    def count(self) -> int:
+        return len(self.latencies_s)
+
+    @property
+    def total_wire_bytes(self) -> int:
+        return (self.request_bytes + self.reply_bytes + self.fetch_bytes
+                + self.docs_bytes + self.ot_wire_bytes)
+
+    def percentile(self, q: float) -> float:
+        return float(np.percentile(self.latencies_s, q))
+
+    def summary(self) -> dict:
+        return {
+            "count": self.count,
+            "p50_latency_s": round(self.percentile(50), 4),
+            "p99_latency_s": round(self.percentile(99), 4),
+            "mean_latency_s": round(float(np.mean(self.latencies_s)), 4),
+            "mean_batch_size": round(float(np.mean(self.batch_sizes)), 2),
+            "mean_wire_kb": round(
+                self.total_wire_bytes / max(self.count, 1) / 1024, 2),
+            "paths": {"direct": self.direct_count, "ot": self.ot_count},
+        }
+
+
+class ServeMetrics:
+    """Accumulates TenantStats per tenant plus a process-wide aggregate."""
+
+    def __init__(self) -> None:
+        self.tenants: Dict[str, TenantStats] = {}
+        self.aggregate = TenantStats()
+        self.dispatch_sizes: List[int] = []
+
+    @property
+    def num_batches(self) -> int:
+        return len(self.dispatch_sizes)
+
+    def record_batch(self, size: int) -> None:
+        self.dispatch_sizes.append(size)
+
+    def record(self, tenant: str, *, latency_s: float, batch_size: int,
+               transcript: ProtocolTranscript) -> None:
+        for stats in (self.tenants.setdefault(tenant, TenantStats()),
+                      self.aggregate):
+            stats.latencies_s.append(latency_s)
+            stats.batch_sizes.append(batch_size)
+            stats.request_bytes += transcript.request_bytes
+            stats.reply_bytes += transcript.reply_bytes
+            stats.fetch_bytes += transcript.fetch_bytes
+            stats.docs_bytes += transcript.docs_bytes
+            stats.ot_wire_bytes += transcript.ot_wire_bytes
+            if transcript.path == "ot":
+                stats.ot_count += 1
+            else:
+                stats.direct_count += 1
+
+    def summary(self) -> dict:
+        out = {"aggregate": (self.aggregate.summary()
+                             if self.aggregate.count else {"count": 0}),
+               "num_batches": self.num_batches,
+               "tenants": {t: s.summary() for t, s in self.tenants.items()}}
+        return out
+
+
+__all__ = ["TenantStats", "ServeMetrics"]

@@ -8,6 +8,9 @@ import jax.numpy as jnp
 
 from repro.models import embedder, gnn, layers, moe, recsys, transformer
 
+# multi-minute on CPU even at reduced sizes; run with `pytest -m ""`
+pytestmark = pytest.mark.slow
+
 
 def _tiny_cfg(**kw):
     base = dict(name="tiny", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,

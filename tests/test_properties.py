@@ -1,6 +1,9 @@
 """Hypothesis property tests on system invariants (beyond DistanceDP)."""
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax

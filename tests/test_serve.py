@@ -1,0 +1,161 @@
+"""repro.serve engine: batched == sequential parity, micro-batch triggers,
+plan cache, metrics accounting."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.crypto import rlwe
+from repro.data import synth
+from repro.retrieval.index import FlatIndex
+from repro.serve import EngineConfig, ServeEngine
+from repro.serve.session import PlanCache, SessionManager
+
+N_DOCS, DIM, K = 1500, 64, 4
+N_REQ = 8
+TENANTS = ("alice", "bob", "carol")
+# small ring keeps the CPU NTTs fast; semantics identical to the default
+PARAMS = rlwe.RlweParams(n_poly=1024, chunk=512)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(0)
+    emb = synth.uniform_corpus(rng, N_DOCS, DIM)
+    docs = [f"passage-{i}".encode() for i in range(N_DOCS)]
+    index = FlatIndex.build(emb, documents=docs)
+    queries = synth.queries_near_corpus(rng, emb, N_REQ)
+    return index, emb, queries
+
+
+def _build(index, *, sequential, max_batch, clock=None):
+    kw = {"clock": clock} if clock is not None else {}
+    eng = ServeEngine(
+        index,
+        config=EngineConfig(max_batch=max_batch, max_wait_s=30.0,
+                            sequential=sequential),
+        sessions=SessionManager(rlwe_params=PARAMS,
+                                deterministic_seeds=True), **kw)
+    for t in TENANTS:
+        eng.open_session(t, n=DIM, N=N_DOCS, k=K, radius=0.05,
+                         backend="rlwe")
+    return eng
+
+
+def _run(index, queries, *, sequential, max_batch):
+    eng = _build(index, sequential=sequential, max_batch=max_batch)
+    for i, q in enumerate(queries):
+        eng.submit(TENANTS[i % len(TENANTS)], q, key=jax.random.PRNGKey(i))
+    return eng, eng.drain()
+
+
+def test_batched_matches_sequential_across_batch_sizes(corpus):
+    """Same docs / ids / wire bytes at batch sizes 1, 3, 8 as the sequential
+    run_remoterag path — the batched crypto is bit-compatible."""
+    index, emb, queries = corpus
+    _, seq = _run(index, queries, sequential=True, max_batch=1)
+    assert [r.batch_size for r in seq] == [1] * N_REQ
+    for max_batch in (1, 3, 8):
+        eng, got = _run(index, queries, sequential=False,
+                        max_batch=max_batch)
+        assert len(got) == N_REQ
+        assert max(r.batch_size for r in got) == min(max_batch, N_REQ)
+        for rs, rb in zip(seq, got):
+            assert rs.request_id == rb.request_id
+            assert rs.ids.tolist() == rb.ids.tolist()
+            assert rs.docs == rb.docs
+            assert (rs.transcript.total_bytes
+                    == rb.transcript.total_bytes)
+            assert (rs.transcript.request_bytes
+                    == rb.transcript.request_bytes)
+            assert rs.transcript.reply_bytes == rb.transcript.reply_bytes
+
+
+def test_batched_results_match_plaintext_oracle(corpus):
+    index, emb, queries = corpus
+    _, got = _run(index, queries, sequential=False, max_batch=8)
+    for res in got:
+        q = queries[res.request_id]
+        oracle = np.argsort(-(emb @ q), kind="stable")[:K]
+        assert set(res.ids.tolist()) == set(oracle.tolist())
+        assert res.docs == [f"passage-{i}".encode() for i in res.ids]
+
+
+def test_plan_cache_hits_for_repeat_tenants():
+    cache = PlanCache()
+    mgr = SessionManager(rlwe_params=PARAMS, plan_cache=cache)
+    a = mgr.open("a", n=DIM, N=N_DOCS, k=K, radius=0.05)
+    assert (cache.hits, cache.misses) == (0, 1)
+    b = mgr.open("b", n=DIM, N=N_DOCS, k=K, radius=0.05)
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert a.plan is b.plan          # cached object reused, no re-planning
+    assert a.user.sk is not b.user.sk  # but keys stay per-tenant
+    mgr.open("c", n=DIM, N=N_DOCS, k=K, radius=0.09)
+    assert cache.misses == 2         # different knobs -> new plan
+    # re-opening an existing tenant with identical knobs is a no-op ...
+    assert mgr.open("a", n=DIM, N=N_DOCS, k=K, radius=0.05) is a
+    # ... but changing the knobs of a live session is an error
+    with pytest.raises(ValueError, match="different knobs"):
+        mgr.open("a", n=DIM, N=N_DOCS, k=K, radius=0.09)
+
+
+def test_paillier_batched_matches_sequential(corpus):
+    """The paillier backend batches the top-k' search (crypto stays
+    per-lane); parity must hold there too, incl. deterministic keygen."""
+    index, emb, queries = corpus
+
+    def run(sequential):
+        eng = ServeEngine(
+            index,
+            config=EngineConfig(max_batch=4, max_wait_s=30.0,
+                                sequential=sequential),
+            sessions=SessionManager(rlwe_params=PARAMS,
+                                    deterministic_seeds=True))
+        for t in TENANTS[:2]:
+            eng.open_session(t, n=DIM, N=N_DOCS, k=K, radius=0.05,
+                             backend="paillier", paillier_bits=256)
+        for i in range(4):
+            eng.submit(TENANTS[i % 2], queries[i], key=jax.random.PRNGKey(i))
+        return eng.drain()
+
+    seq, got = run(True), run(False)
+    assert [r.batch_size for r in got] == [4] * 4
+    for rs, rb in zip(seq, got):
+        assert rs.ids.tolist() == rb.ids.tolist()
+        assert rs.docs == rb.docs
+        assert rs.transcript.total_bytes == rb.transcript.total_bytes
+
+
+def test_size_and_deadline_triggers(corpus):
+    index, _, queries = corpus
+    now = [0.0]
+    eng = _build(index, sequential=False, max_batch=3,
+                 clock=lambda: now[0])
+    eng.config = EngineConfig(max_batch=3, max_wait_s=5.0, sequential=False)
+    eng.submit("alice", queries[0], key=jax.random.PRNGKey(0))
+    eng.submit("bob", queries[1], key=jax.random.PRNGKey(1))
+    assert eng.step() == []          # neither trigger fired
+    assert eng.pending == 2
+    eng.submit("carol", queries[2], key=jax.random.PRNGKey(2))
+    out = eng.step()                 # size trigger: 3 == max_batch
+    assert len(out) == 3 and eng.pending == 0
+    eng.submit("alice", queries[3], key=jax.random.PRNGKey(3))
+    assert eng.step() == []
+    now[0] += 6.0                    # age past the deadline
+    out = eng.step()
+    assert len(out) == 1 and out[0].batch_size == 1
+
+
+def test_metrics_accounting(corpus):
+    index, _, queries = corpus
+    eng, got = _run(index, queries, sequential=False, max_batch=8)
+    summary = eng.metrics.summary()
+    agg = summary["aggregate"]
+    assert agg["count"] == N_REQ
+    assert set(summary["tenants"]) == set(TENANTS)
+    per_tenant = sum(s["count"] for s in summary["tenants"].values())
+    assert per_tenant == N_REQ
+    want_wire = sum(r.transcript.total_bytes for r in got)
+    assert eng.metrics.aggregate.total_wire_bytes == want_wire
+    assert agg["p99_latency_s"] >= agg["p50_latency_s"] >= 0
