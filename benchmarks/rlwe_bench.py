@@ -1,0 +1,111 @@
+"""Encrypted re-rank hot path: cold per-request packing vs the NTT-domain
+candidate cache, XLA fallback vs fused Pallas kernel, batch 1 / 8.
+
+Beyond the usual CSV rows this writes machine-readable ``BENCH_rlwe.json``
+(path override: BENCH_RLWE_JSON) so the perf trajectory is trackable across
+PRs; ``scripts/check_bench_regression.py`` gates CI on cached > cold.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import FULL, emit, timeit
+from repro.crypto import rlwe
+
+OUT_PATH = os.environ.get("BENCH_RLWE_JSON", "BENCH_rlwe.json")
+
+
+def _unit(rng, *shape):
+    x = rng.normal(size=shape)
+    return (x / np.linalg.norm(x, axis=-1, keepdims=True)).astype(np.float32)
+
+
+def run() -> None:
+    if FULL:
+        params = rlwe.RlweParams()                    # N=4096, chunk=1024
+        n_dim, num_docs, kprime = 3072, 20_000, 115   # paper Table 5 regime
+    else:
+        # n_dim=3072 (text-embedding-3-large, Table 5): 6 chunks per doc —
+        # the regime where cold per-request packing + forward NTTs dominate
+        params = rlwe.RlweParams(n_poly=1024, chunk=512)
+        n_dim, num_docs, kprime = 3072, 512, 32
+    rng = np.random.default_rng(0)
+    docs = _unit(rng, num_docs, n_dim)
+    sk = rlwe.keygen(params, rng)
+
+    builds = []
+    build_us = timeit(
+        lambda: builds.append(rlwe.build_candidate_cache(params, docs)),
+        repeat=1, warmup=0)
+    cache = builds[0]
+    emit("rlwe/cache_build", build_us,
+         f"{cache.nbytes / 2**20:.1f}MiB/{num_docs}docs")
+
+    results = {}
+    for bsz in (1, 8):
+        queries = _unit(rng, bsz, n_dim)
+        q_cts = [rlwe.encrypt_query(sk, q, rng) for q in queries]
+        ids = rng.integers(0, num_docs, size=(bsz, kprime))
+        rows = docs[ids]
+
+        def cold():
+            packed = rlwe.pack_candidates_batch(params, rows)
+            out = rlwe.encrypted_scores_batch_stacked(
+                params, q_cts, packed, kprime, n_dim, use_pallas=False)
+            jax.block_until_ready(out.c0)
+
+        def cached():
+            out = rlwe.encrypted_scores_cached_batch(
+                params, q_cts, cache, ids, use_pallas=False)
+            jax.block_until_ready(out.c0)
+
+        def fused():
+            out = rlwe.encrypted_scores_cached_batch(
+                params, q_cts, cache, ids, use_pallas=True)
+            jax.block_until_ready(out.c0)
+
+        cold_us = timeit(cold, repeat=9, warmup=2)
+        cached_us = timeit(cached, repeat=9, warmup=2)
+        # interpret-mode Pallas off-TPU: correctness/overhead tracking only
+        fused_us = timeit(fused, repeat=3)
+        qps = bsz / (cached_us / 1e6)
+        speedup = cold_us / cached_us
+        emit(f"rlwe/score_cold_b{bsz}", cold_us, f"k'={kprime}")
+        emit(f"rlwe/score_cached_b{bsz}", cached_us,
+             f"{speedup:.1f}x_vs_cold")
+        emit(f"rlwe/score_cached_fused_b{bsz}", fused_us,
+             "interpret" if jax.default_backend() != "tpu" else "tpu")
+        emit(f"rlwe/qps_cached_b{bsz}", cached_us, f"{qps:.1f}qps")
+        results[f"batch{bsz}"] = {
+            "cold_pack_us": cold_us,
+            "cached_us": cached_us,
+            "cached_fused_us": fused_us,
+            "speedup_cached_vs_cold": speedup,
+            "per_request_cold_us": cold_us / bsz,
+            "per_request_cached_us": cached_us / bsz,
+            "cached_qps": qps,
+        }
+
+    payload = {
+        "bench": "rlwe_rerank",
+        "backend": jax.default_backend(),
+        "config": {"n_poly": params.n_poly, "num_primes": params.num_primes,
+                   "chunk": params.chunk, "n_dim": n_dim,
+                   "num_docs": num_docs, "kprime": kprime,
+                   "cache_bytes": cache.nbytes,
+                   "cache_build_us": build_us, "full": FULL},
+        "results": results,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {OUT_PATH}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

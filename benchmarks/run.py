@@ -19,11 +19,11 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig4_privacy, fig5_modules, fig6_hyper,
-                            kernels_bench, table2_comm, table3_recall,
-                            table4_efficiency)
+                            kernels_bench, rlwe_bench, table2_comm,
+                            table3_recall, table4_efficiency)
 
     modules = [table2_comm, table3_recall, table4_efficiency, fig4_privacy,
-               fig5_modules, fig6_hyper, kernels_bench]
+               fig5_modules, fig6_hyper, kernels_bench, rlwe_bench]
     print("name,us_per_call,derived")
     failures = 0
     for mod in modules:

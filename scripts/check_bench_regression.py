@@ -1,0 +1,47 @@
+#!/usr/bin/env python3
+"""CI gate on the encrypted re-rank perf trajectory.
+
+Reads BENCH_rlwe.json (written by ``python -m benchmarks.run --only rlwe``)
+and fails if cached scoring is not faster than cold per-request packing at
+any recorded batch size.
+
+    scripts/check_bench_regression.py [BENCH_rlwe.json] [min_speedup=1.0]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_rlwe.json"
+    min_speedup = float(sys.argv[2]) if len(sys.argv) > 2 else 1.0
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError) as e:   # missing file or truncated JSON
+        print(f"FAIL: cannot read {path}: {e}", file=sys.stderr)
+        return 2
+    results = data.get("results", {})
+    if not results:
+        print(f"FAIL: {path} has no results", file=sys.stderr)
+        return 2
+    failures = 0
+    for name in sorted(results):
+        row = results[name]
+        speedup = row.get("speedup_cached_vs_cold")
+        if speedup is None or speedup < min_speedup:
+            print(f"FAIL {name}: cached speedup {speedup} < {min_speedup} "
+                  f"(cold {row.get('cold_pack_us')}us, "
+                  f"cached {row.get('cached_us')}us)", file=sys.stderr)
+            failures += 1
+        else:
+            print(f"ok   {name}: cached {speedup:.2f}x faster than cold "
+                  f"({row.get('cached_us'):.0f}us vs "
+                  f"{row.get('cold_pack_us'):.0f}us)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

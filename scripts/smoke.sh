@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# CI smoke job: tier-1 tests (slow excluded) + optional perf regression gate.
+#
+#   scripts/smoke.sh                 # pytest -m "not slow"
+#   SMOKE_BENCH=1 scripts/smoke.sh   # ... plus rlwe bench + regression check
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -q -m "not slow" "$@"
+
+if [[ "${SMOKE_BENCH:-0}" == "1" ]]; then
+  python -m benchmarks.run --only rlwe
+  python scripts/check_bench_regression.py BENCH_rlwe.json
+fi

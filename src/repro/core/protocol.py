@@ -95,26 +95,49 @@ class Documents:
 # ---------------------------------------------------------------------------
 
 class RemoteRagCloud:
-    """Holds the sharded index + documents; executes modules 1, 2a, 2b, 2c."""
+    """Holds the sharded index + documents; executes modules 1, 2a, 2b, 2c.
+
+    The RLWE re-rank runs against the index's NTT-domain candidate cache
+    (built once per (index, params) and shared across clouds/engines), so
+    the per-request encrypted workload touches only per-request data —
+    ``use_candidate_cache=False`` restores cold per-request packing (the
+    reference path; bit-identical outputs either way)."""
 
     def __init__(self, index: FlatIndex, *,
                  rlwe_params: Optional[rlwe.RlweParams] = None,
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None,
+                 use_candidate_cache: bool = True):
         self.index = index
         self.rlwe_params = rlwe_params or rlwe.RlweParams()
         self.use_pallas = use_pallas
+        self.use_candidate_cache = use_candidate_cache
+
+    @property
+    def candidate_cache(self) -> Optional[rlwe.CandidateCache]:
+        """The index's cache for this cloud's params (None when disabled).
+        Built lazily so paillier-only clouds never pay for it."""
+        if not self.use_candidate_cache:
+            return None
+        return self.index.candidate_cache(self.rlwe_params)
 
     def handle_request(self, req: Request) -> Reply:
         q = jnp.asarray(req.perturbed, jnp.float32)[None, :]
         res = distributed_topk(self.index, q, req.kprime,
                                use_pallas=self.use_pallas)
         cand_ids = np.asarray(res.indices)[0]
-        cand_rows = np.asarray(self.index.rows(cand_ids))
         if req.backend == "rlwe":
-            packed = rlwe.pack_candidates(self.rlwe_params, cand_rows)
-            enc = rlwe.encrypted_scores(self.rlwe_params, req.enc_query, packed,
-                                        use_pallas=self.use_pallas)
+            cache = self.candidate_cache
+            if cache is not None:
+                enc = rlwe.encrypted_scores_cached(
+                    self.rlwe_params, req.enc_query, cache, cand_ids,
+                    use_pallas=self.use_pallas)
+            else:
+                cand_rows = np.asarray(self.index.rows(cand_ids))
+                packed = rlwe.pack_candidates(self.rlwe_params, cand_rows)
+                enc = rlwe.encrypted_scores(self.rlwe_params, req.enc_query,
+                                            packed, use_pallas=self.use_pallas)
         else:
+            cand_rows = np.asarray(self.index.rows(cand_ids))
             enc = pai.encrypted_scores(self._paillier_pub, req.enc_query,
                                        cand_rows)
         return Reply(candidate_ids=cand_ids, enc_scores=enc)

@@ -180,6 +180,16 @@ def mod_sub(a, b, q: int):
     return jnp.where(d < 0, d + jnp.int32(q), d)
 
 
+def mod_sum(x, q: int, mu: int, axis: int):
+    """Modular reduction of a sum along ``axis`` in one shot: terms in [0, q)
+    are accumulated in raw int32 and Barrett-reduced once, which is exact as
+    long as the accumulator cannot wrap — shape[axis] * (q-1) < 2^31, i.e.
+    up to 2^11 terms at q < 2^20.  Bit-identical to a chain of mod_add."""
+    terms = x.shape[axis]
+    assert terms * (q - 1) < 2**31, f"mod_sum overflow: {terms} terms at q={q}"
+    return barrett_reduce(jnp.sum(x, axis=axis), q, mu)
+
+
 # ---------------------------------------------------------------------------
 # numpy int64 oracles (independent implementation for tests)
 # ---------------------------------------------------------------------------
@@ -214,6 +224,7 @@ __all__ = [
     "mod_mul",
     "mod_add",
     "mod_sub",
+    "mod_sum",
     "mod_mul_np",
     "negacyclic_mul_np",
 ]

@@ -19,6 +19,12 @@ o_b + chunk - 1 of ct (x) p is exactly <query_chunk, cand_chunk>.  Chunks of
 dimension > chunk_size are summed homomorphically.  Multiple candidates share
 one ciphertext via block stride (N/stride candidates per result ciphertext).
 
+The per-document half of that packing (reverse placement + forward NTT) is
+request-invariant, so it is hoisted into an NTT-domain `CandidateCache`
+built once per index; at request time a candidate's block offset is realized
+as a pointwise monomial-twiddle rotate in the NTT domain (bit-identical to
+fresh packing — see CandidateCache / encrypted_scores_cached_batch).
+
 Correctness budget (validated in `RlweParams.validate`): every *extraction*
 coefficient of m*p is an inner product of unit-norm vectors scaled by
 Delta_q*Delta_c (Cauchy-Schwarz) and therefore < t/2; mod-t wraps can only
@@ -36,11 +42,13 @@ from typing import Sequence
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.crypto import modring
 from repro.crypto.modring import PrimeCtx
 from repro.kernels.ntt import ops as ntt_ops
+from repro.kernels.ntt import ref as ntt_ref
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -147,6 +155,30 @@ class ScoreCiphertexts:
     c1: jnp.ndarray
     n_dim: int
     num_cands: int
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ScoreCiphertextBatch:
+    """B stacked score ciphertexts: (B, num_ct, P, N) int32 per component.
+
+    The serving path keeps this stacked form end-to-end (scoring ->
+    decryption) so no per-lane device work happens; `lane`/`lanes` hand out
+    per-request views for the wire messages."""
+    c0: jnp.ndarray
+    c1: jnp.ndarray
+    n_dim: int
+    num_cands: int
+
+    @property
+    def batch(self) -> int:
+        return self.c0.shape[0]
+
+    def lane(self, b: int) -> ScoreCiphertexts:
+        return ScoreCiphertexts(c0=self.c0[b], c1=self.c1[b],
+                                n_dim=self.n_dim, num_cands=self.num_cands)
+
+    def lanes(self) -> list:
+        return [self.lane(b) for b in range(self.batch)]
 
 
 # ---------------------------------------------------------------------------
@@ -271,6 +303,177 @@ def decrypt_scores(sk: RlweSecretKey, res: ScoreCiphertexts) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# cloud side: NTT-domain candidate cache (build once, serve many)
+# ---------------------------------------------------------------------------
+
+def params_key(params: RlweParams) -> tuple:
+    """Value identity of an RlweParams: two instances with the same key are
+    interchangeable for packing/scoring (primes derive from n_poly+num_primes)."""
+    return (params.n_poly, params.num_primes, params.t_bits,
+            params.scale_q_bits, params.scale_c_bits, params.eta, params.chunk)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CandidateCache:
+    """Per-document NTT-domain plaintexts, packed once at index-build time.
+
+    ``polys[d, c]`` holds document d's chunk c reverse-packed at slot 0
+    (p[chunk-1-j] = seg[j]) and forward-NTT'd per prime: (num_docs, chunks,
+    P, N) int32 — 4*P*N bytes per chunk per document (48 KiB/doc/chunk at
+    the default N=4096, P=3).  Realizing document d at slot s of a result
+    ciphertext is a pointwise multiply by ``twiddles[:, s]``, the NTT-domain
+    diagonal of the monomial X^{s*stride}: the slot-0 support [0, chunk)
+    never crosses X^N + 1 for s < cands_per_ct, so X^{s*stride} * base is
+    exactly the polynomial the cold packer would have built, and the NTT is
+    a ring isomorphism — cached scoring is bit-identical to fresh packing.
+
+    ``stride``/``cands_per_ct``/``num_chunks`` are hoisted out of the hot
+    loops; `check_compatible` rejects reuse under different ``RlweParams``
+    (the build-once/serve-many contract is per (index, params-value) pair).
+    """
+    params: RlweParams
+    polys: jnp.ndarray             # (num_docs, chunks, P, N) int32, NTT domain
+    twiddles: jnp.ndarray          # (P, cands_per_ct, N) int32, NTT(X^{s*stride})
+    n_dim: int
+    num_docs: int
+    stride: int
+    cands_per_ct: int
+    num_chunks: int
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.polys.size) * 4
+
+    def check_compatible(self, params: RlweParams, n_dim=None) -> None:
+        if params_key(params) != params_key(self.params):
+            raise ValueError(
+                f"candidate cache was built for RlweParams "
+                f"{params_key(self.params)} but scoring uses "
+                f"{params_key(params)}; rebuild the cache for these params")
+        if n_dim is not None and n_dim != self.n_dim:
+            raise ValueError(
+                f"candidate cache packs n_dim={self.n_dim} but the query "
+                f"has n_dim={n_dim}")
+
+
+def build_candidate_cache(params: RlweParams,
+                          embeddings: np.ndarray) -> CandidateCache:
+    """Precompute the NTT-domain plaintexts of every document (slot 0) plus
+    the per-slot monomial twiddles.  One vectorized host pack + one forward
+    NTT per prime for the whole corpus; after this the server's encrypted
+    workload touches only per-request data."""
+    emb = np.asarray(embeddings)
+    num_docs, n_dim = emb.shape
+    chunks = params.num_chunks(n_dim)
+    stride = params.stride(n_dim)
+    cpt = params.cands_per_ct(n_dim)
+    # slot/chunk accumulators in the scoring kernels sum cpt*chunks raw
+    # int32 terms in [0, q) before one Barrett reduction
+    assert cpt * chunks * (params.primes[0] - 1) < 2**31, \
+        "cpt*chunks too large for the int32 accumulator"
+    # pack + NTT in document blocks: peak transient host memory is one
+    # ~64 MiB int64 staging buffer (plus its RNS copy), not 3x the corpus
+    block = max(1, (1 << 23) // (chunks * params.n_poly))
+    parts = []
+    for lo in range(0, num_docs, block):
+        seg_emb = emb[lo:lo + block]
+        ints = _fixed_point(seg_emb, params.scale_c)      # (b, n_dim)
+        polys = np.zeros((len(seg_emb), chunks, params.n_poly), np.int64)
+        for c in range(chunks):
+            seg = ints[:, c * params.chunk:(c + 1) * params.chunk]
+            polys[:, c, params.chunk - 1 - np.arange(seg.shape[1])] = seg
+        rns = _to_rns(polys, params)                      # (P, b, chunks, N)
+        parts.append(jnp.stack([
+            ntt_ops.ntt_fwd(jnp.asarray(rns[i]), ctx)
+            for i, ctx in enumerate(params.ctxs)
+        ], axis=2))                                       # (b, chunks, P, N)
+    cache_polys = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    mono = np.zeros((cpt, params.n_poly), np.int64)
+    mono[np.arange(cpt), np.arange(cpt) * stride] = 1
+    mrns = _to_rns(mono, params)                          # (P, cpt, N)
+    twiddles = jnp.stack([
+        ntt_ops.ntt_fwd(jnp.asarray(mrns[i]), ctx)
+        for i, ctx in enumerate(params.ctxs)
+    ])                                                    # (P, cpt, N)
+    return CandidateCache(params=params, polys=cache_polys, twiddles=twiddles,
+                          n_dim=n_dim, num_docs=num_docs, stride=stride,
+                          cands_per_ct=cpt, num_chunks=chunks)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ctxs", "cpt", "pad", "use_pallas"))
+def _cached_scores(c0, c1, polys, ids, twiddles, ctxs, cpt, pad, use_pallas):
+    """Whole-batch cached scoring in ONE compiled call: the cache gather,
+    last-ct zero padding, and the per-prime loop all live in a single trace,
+    so the full gather -> rotate -> Hadamard -> slot/chunk mod-sum -> iNTT
+    pipeline runs without host round-trips.  ``use_pallas`` is static: the
+    same trace routes through the fused Pallas kernel + kernel NTTs or the
+    jitted XLA references (one layout/padding implementation for both, so
+    the bit-identity contract holds by construction)."""
+    bsz, num_cands = ids.shape
+    chunks, n = c0.shape[1], c0.shape[-1]
+    g = jnp.take(polys, ids.reshape(-1), axis=0)
+    g = g.reshape((bsz, num_cands) + polys.shape[1:])   # (B, nc, chunks, P, N)
+    if pad:                  # empty slots of the last result ciphertext
+        g = jnp.concatenate(
+            [g, jnp.zeros((bsz, pad) + g.shape[2:], jnp.int32)], axis=1)
+    num_ct = (num_cands + pad) // cpt
+    outs0, outs1 = [], []
+    for i, ctx in enumerate(ctxs):
+        f0 = ntt_ops.ntt_fwd(c0[:, :, i, :], ctx, use_pallas=use_pallas)
+        f1 = ntt_ops.ntt_fwd(c1[:, :, i, :], ctx, use_pallas=use_pallas)
+        polys_i = g[..., i, :].reshape(bsz, num_ct, cpt * chunks, n)
+        acc0, acc1 = ntt_ops.fused_rotate_hadamard(
+            polys_i, twiddles[i], f0, f1, ctx, use_pallas=use_pallas)
+        outs0.append(ntt_ops.ntt_inv(acc0, ctx, use_pallas=use_pallas))
+        outs1.append(ntt_ops.ntt_inv(acc1, ctx, use_pallas=use_pallas))
+    return jnp.stack(outs0, axis=2), jnp.stack(outs1, axis=2)
+
+
+def encrypted_scores_cached_batch(params: RlweParams,
+                                  q_cts: Sequence[QueryCiphertext],
+                                  cache: CandidateCache, cand_ids,
+                                  *, use_pallas=None) -> ScoreCiphertextBatch:
+    """Batched ct (x) p against cached NTT-domain candidates.
+
+    Per-request work: one gather of k' cached rows per lane, one fused
+    rotate -> Hadamard -> slot/chunk mod-sum per prime (Pallas kernel or the
+    jitted XLA fallback), 2*chunks forward NTTs for the query and 2 inverse
+    NTTs per result ciphertext.  No per-candidate host loop and no candidate
+    forward NTTs — those moved to `build_candidate_cache`.  Bit-identical to
+    pack_candidates_batch + encrypted_scores_batch (same decrypted scores,
+    same wire bytes).
+    """
+    ids = np.asarray(cand_ids)
+    assert ids.ndim == 2, "cand_ids must be (B, num_cands)"
+    bsz, num_cands = ids.shape
+    assert len(q_cts) == bsz
+    cache.check_compatible(params, q_cts[0].n_dim)
+    cpt = cache.cands_per_ct
+    num_ct = -(-num_cands // cpt)
+    pad = num_ct * cpt - num_cands
+    c0 = jnp.stack([q.c0 for q in q_cts])                 # (B, chunks, P, N)
+    c1 = jnp.stack([q.c1 for q in q_cts])
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    all0, all1 = _cached_scores(
+        c0, c1, cache.polys, jnp.asarray(ids), cache.twiddles,
+        params.ctxs, cpt, pad, bool(use_pallas))
+    return ScoreCiphertextBatch(c0=all0, c1=all1, n_dim=cache.n_dim,
+                                num_cands=num_cands)
+
+
+def encrypted_scores_cached(params: RlweParams, q_ct: QueryCiphertext,
+                            cache: CandidateCache, cand_ids,
+                            *, use_pallas=None) -> ScoreCiphertexts:
+    """Cached ct (x) p for one query (the B=1 slice of the batch version)."""
+    res = encrypted_scores_cached_batch(
+        params, [q_ct], cache, np.asarray(cand_ids)[None],
+        use_pallas=use_pallas)
+    return res.lane(0)
+
+
+# ---------------------------------------------------------------------------
 # cloud side: pack candidates, encrypted scoring
 # ---------------------------------------------------------------------------
 
@@ -295,11 +498,10 @@ def pack_candidates_batch(params: RlweParams,
             idx = o + params.chunk - 1 - np.arange(seg.shape[1])
             polys[:, ct_i, c, idx] = seg
     rns = _to_rns(polys, params)  # (P, B, num_ct, chunks, N)
-    ntt_polys = np.stack([
-        np.asarray(ntt_ops.ntt_fwd(jnp.asarray(rns[i]), ctx))
+    return jnp.stack([
+        ntt_ops.ntt_fwd(jnp.asarray(rns[i]), ctx)
         for i, ctx in enumerate(params.ctxs)
-    ])  # (P, B, num_ct, chunks, N)
-    return jnp.asarray(np.transpose(ntt_polys, (1, 2, 3, 0, 4)))
+    ], axis=3)  # (B, num_ct, chunks, P, N) — stays on device
 
 
 def pack_candidates(params: RlweParams, cands: np.ndarray) -> PackedCandidates:
@@ -310,10 +512,30 @@ def pack_candidates(params: RlweParams, cands: np.ndarray) -> PackedCandidates:
     return PackedCandidates(polys=polys, n_dim=n_dim, num_cands=num_cands)
 
 
-def encrypted_scores_batch(params: RlweParams,
-                           q_cts: Sequence[QueryCiphertext],
-                           packed: jnp.ndarray, num_cands: int, n_dim: int,
-                           *, use_pallas=None) -> list:
+@functools.partial(jax.jit, static_argnames=("ctxs",))
+def _scores_batch_ref(c0, c1, packed, ctxs):
+    """Whole-batch fallback scoring in ONE compiled call: the per-prime loop
+    unrolls at trace time (no host round-trips between primes) and the
+    homomorphic chunk-sum is a vectorized mod-sum, not a Python loop."""
+    outs0, outs1 = [], []
+    for i, ctx in enumerate(ctxs):
+        f0 = ntt_ref.ntt_fwd_ref(c0[:, :, i, :], ctx)   # (B, chunks, N)
+        f1 = ntt_ref.ntt_fwd_ref(c1[:, :, i, :], ctx)
+        pk = packed[:, :, :, i, :]                      # (B, num_ct, chunks, N)
+        prod0 = modring.mod_mul(pk, f0[:, None], ctx.q, ctx.mu)
+        prod1 = modring.mod_mul(pk, f1[:, None], ctx.q, ctx.mu)
+        acc0 = modring.mod_sum(prod0, ctx.q, ctx.mu, axis=2)
+        acc1 = modring.mod_sum(prod1, ctx.q, ctx.mu, axis=2)
+        outs0.append(ntt_ref.ntt_inv_ref(acc0, ctx))
+        outs1.append(ntt_ref.ntt_inv_ref(acc1, ctx))
+    return jnp.stack(outs0, axis=2), jnp.stack(outs1, axis=2)
+
+
+def encrypted_scores_batch_stacked(params: RlweParams,
+                                   q_cts: Sequence[QueryCiphertext],
+                                   packed: jnp.ndarray, num_cands: int,
+                                   n_dim: int, *,
+                                   use_pallas=None) -> ScoreCiphertextBatch:
     """Batched ct (x) p: B query ciphertexts against (B, num_ct, chunks, P,
     N) packed candidates, chunk-summed in the NTT domain — one NTT dispatch
     per prime for the whole batch.
@@ -321,32 +543,43 @@ def encrypted_scores_batch(params: RlweParams,
     This is the cloud's entire encrypted workload: 2 * chunks forward NTTs
     per query (amortized over all candidates), one Hadamard modmul per
     (lane, result-ct, chunk, component, prime), and 2 inverse NTTs per
-    result ct.  Returns a list of B ScoreCiphertexts.
+    result ct.  The result stays stacked on device.
     """
     c0 = jnp.stack([q.c0 for q in q_cts])  # (B, chunks, P, N)
     c1 = jnp.stack([q.c1 for q in q_cts])
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        all0, all1 = _scores_batch_ref(c0, c1, packed, params.ctxs)
+        return ScoreCiphertextBatch(c0=all0, c1=all1, n_dim=n_dim,
+                                    num_cands=num_cands)
     c0_out, c1_out = [], []
     for i, ctx in enumerate(params.ctxs):
-        f0 = ntt_ops.ntt_fwd(c0[:, :, i, :], ctx, use_pallas=use_pallas)
-        f1 = ntt_ops.ntt_fwd(c1[:, :, i, :], ctx, use_pallas=use_pallas)
+        f0 = ntt_ops.ntt_fwd(c0[:, :, i, :], ctx, use_pallas=True)
+        f1 = ntt_ops.ntt_fwd(c1[:, :, i, :], ctx, use_pallas=True)
         pk = packed[:, :, :, i, :]                 # (B, num_ct, chunks, N)
         f0b = jnp.broadcast_to(f0[:, None], pk.shape)
         f1b = jnp.broadcast_to(f1[:, None], pk.shape)
-        prod0 = ntt_ops.pointwise_mul(pk, f0b, ctx, use_pallas=use_pallas)
-        prod1 = ntt_ops.pointwise_mul(pk, f1b, ctx, use_pallas=use_pallas)
-        # homomorphic chunk-sum in NTT domain (mod-add over chunk axis)
-        acc0 = prod0[:, :, 0, :]
-        acc1 = prod1[:, :, 0, :]
-        for c in range(1, prod0.shape[2]):
-            acc0 = modring.mod_add(acc0, prod0[:, :, c, :], ctx.q)
-            acc1 = modring.mod_add(acc1, prod1[:, :, c, :], ctx.q)
-        c0_out.append(ntt_ops.ntt_inv(acc0, ctx, use_pallas=use_pallas))
-        c1_out.append(ntt_ops.ntt_inv(acc1, ctx, use_pallas=use_pallas))
-    all0 = jnp.stack(c0_out, axis=2)               # (B, num_ct, P, N)
-    all1 = jnp.stack(c1_out, axis=2)
-    return [ScoreCiphertexts(c0=all0[b], c1=all1[b], n_dim=n_dim,
-                             num_cands=num_cands)
-            for b in range(all0.shape[0])]
+        prod0 = ntt_ops.pointwise_mul(pk, f0b, ctx, use_pallas=True)
+        prod1 = ntt_ops.pointwise_mul(pk, f1b, ctx, use_pallas=True)
+        acc0 = modring.mod_sum(prod0, ctx.q, ctx.mu, axis=2)
+        acc1 = modring.mod_sum(prod1, ctx.q, ctx.mu, axis=2)
+        c0_out.append(ntt_ops.ntt_inv(acc0, ctx, use_pallas=True))
+        c1_out.append(ntt_ops.ntt_inv(acc1, ctx, use_pallas=True))
+    return ScoreCiphertextBatch(
+        c0=jnp.stack(c0_out, axis=2), c1=jnp.stack(c1_out, axis=2),
+        n_dim=n_dim, num_cands=num_cands)
+
+
+def encrypted_scores_batch(params: RlweParams,
+                           q_cts: Sequence[QueryCiphertext],
+                           packed: jnp.ndarray, num_cands: int, n_dim: int,
+                           *, use_pallas=None) -> list:
+    """List-of-lanes view of `encrypted_scores_batch_stacked` (lanes are
+    views of one stacked device array, no per-lane crypto work)."""
+    return encrypted_scores_batch_stacked(
+        params, q_cts, packed, num_cands, n_dim,
+        use_pallas=use_pallas).lanes()
 
 
 def encrypted_scores(params: RlweParams, q_ct: QueryCiphertext,
@@ -359,18 +592,25 @@ def encrypted_scores(params: RlweParams, q_ct: QueryCiphertext,
         n_dim=packed.n_dim, use_pallas=use_pallas)[0]
 
 
-def decrypt_scores_batch(sks: Sequence[RlweSecretKey],
-                         cts: Sequence[ScoreCiphertexts],
+def decrypt_scores_batch(sks: Sequence[RlweSecretKey], cts,
                          *, use_pallas=None) -> list:
     """Decrypt B score ciphertexts under B (distinct) tenant keys with one
-    NTT dispatch per prime; CRT extraction stays per-lane (host bignums)."""
+    NTT dispatch per prime; CRT extraction stays per-lane (host bignums).
+
+    ``cts`` is either a list of ScoreCiphertexts or a ScoreCiphertextBatch —
+    the stacked form skips the per-lane restack entirely."""
     params = sks[0].params
-    c0 = jnp.stack([c.c0 for c in cts])            # (B, num_ct, P, N)
-    c1 = jnp.stack([c.c1 for c in cts])
+    if isinstance(cts, ScoreCiphertextBatch):
+        c0, c1 = cts.c0, cts.c1
+        meta = [(cts.n_dim, cts.num_cands)] * cts.batch
+    else:
+        c0 = jnp.stack([c.c0 for c in cts])        # (B, num_ct, P, N)
+        c1 = jnp.stack([c.c1 for c in cts])
+        meta = [(c.n_dim, c.num_cands) for c in cts]
     s_ntt = jnp.stack([sk.s_ntt for sk in sks])[:, None]  # (B, 1, P, N)
     d_rns = decrypt_rns(params, s_ntt, c0, c1, use_pallas=use_pallas)
-    return [extract_scores(params, d_rns[b], ct.n_dim, ct.num_cands)
-            for b, ct in enumerate(cts)]
+    return [extract_scores(params, d_rns[b], nd, nc)
+            for b, (nd, nc) in enumerate(meta)]
 
 
 def cosine_distances(scores: np.ndarray) -> np.ndarray:
@@ -380,8 +620,11 @@ def cosine_distances(scores: np.ndarray) -> np.ndarray:
 
 __all__ = [
     "RlweParams", "RlweSecretKey", "QueryCiphertext", "PackedCandidates",
-    "ScoreCiphertexts", "keygen", "encrypt_query", "decrypt_scores",
-    "decrypt_scores_batch", "decrypt_rns", "extract_scores",
-    "pack_candidates", "pack_candidates_batch", "encrypted_scores",
-    "encrypted_scores_batch", "cosine_distances",
+    "ScoreCiphertexts", "ScoreCiphertextBatch", "CandidateCache",
+    "params_key", "build_candidate_cache", "keygen", "encrypt_query",
+    "decrypt_scores", "decrypt_scores_batch", "decrypt_rns",
+    "extract_scores", "pack_candidates", "pack_candidates_batch",
+    "encrypted_scores", "encrypted_scores_batch",
+    "encrypted_scores_batch_stacked", "encrypted_scores_cached",
+    "encrypted_scores_cached_batch", "cosine_distances",
 ]

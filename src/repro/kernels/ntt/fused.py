@@ -1,0 +1,85 @@
+"""Fused Pallas kernel for the cached encrypted re-rank hot path.
+
+One ``pallas_call`` per RNS prime computes, for every (batch lane, result
+ciphertext) grid cell, both NTT-domain accumulators of the cloud's ct (x) p:
+
+    acc_z = sum_{s < cpt} sum_{c < chunks}  tw[s] . polys[s, c] . f_z[c]
+                                                              (z in {0, 1})
+
+where ``polys`` are the candidate-cache plaintexts (slot-0 packing, already
+in the NTT domain), ``tw[s]`` is the NTT-domain diagonal of the monomial
+X^{s*stride} (realizing the candidate's slot offset as a pointwise twiddle
+rotate instead of a host repack + forward NTT), and ``f_z`` are the forward
+NTTs of the query ciphertext components.  The old composition issued one
+dispatch per (rotate, Hadamard, mod-add) stage; here rotate -> Hadamard(c0,
+c1) -> slot/chunk accumulation run on a single VMEM-resident tile — one HBM
+read of the gathered cache rows and one HBM write of the two accumulators.
+
+Everything is int32: products are Barrett-reduced to [0, q), and the final
+slot/chunk sum accumulates raw (cpt*chunks terms * q < 2^31, asserted) and
+is reduced once — bit-identical to a chain of mod_add.  The inverse NTT of
+the accumulators stays in the existing `ntt_pallas` kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.crypto import modring
+from repro.crypto.modring import PrimeCtx
+
+
+def _fused_kernel(polys_ref, tw_ref, f0_ref, f1_ref, o0_ref, o1_ref, *,
+                  q: int, mu: int, cpt: int, chunks: int):
+    n = polys_ref.shape[-1]
+    g = polys_ref[...].reshape(cpt, chunks, n)
+    tw = tw_ref[...]                                    # (cpt, n)
+    f0 = f0_ref[...].reshape(chunks, n)
+    f1 = f1_ref[...].reshape(chunks, n)
+    rot = modring.mod_mul(g, tw[:, None, :], q, mu)     # slot twiddle rotate
+    p0 = modring.mod_mul(rot, f0[None], q, mu).reshape(cpt * chunks, n)
+    p1 = modring.mod_mul(rot, f1[None], q, mu).reshape(cpt * chunks, n)
+    o0_ref[...] = modring.barrett_reduce(jnp.sum(p0, axis=0), q, mu
+                                         ).reshape(1, 1, n)
+    o1_ref[...] = modring.barrett_reduce(jnp.sum(p1, axis=0), q, mu
+                                         ).reshape(1, 1, n)
+
+
+@functools.partial(jax.jit, static_argnames=("ctx", "interpret"))
+def fused_rerank_pallas(polys, tw, f0, f1, ctx: PrimeCtx, *,
+                        interpret: bool = True):
+    """Rotate -> Hadamard(c0, c1) -> slot/chunk mod-sum for one prime.
+
+    polys: (B, num_ct, cpt*chunks, N) gathered cache rows, slot-major;
+    tw: (cpt, N) monomial twiddles; f0/f1: (B, chunks, N) query NTTs.
+    Returns (acc0, acc1), each (B, num_ct, N) int32 in [0, q).
+    """
+    bsz, num_ct, rows, n = polys.shape
+    cpt, chunks = tw.shape[0], f0.shape[1]
+    assert rows == cpt * chunks, (rows, cpt, chunks)
+    assert n == ctx.n and f0.shape == f1.shape == (bsz, chunks, n)
+    assert rows * (ctx.q - 1) < 2**31, "int32 accumulator would wrap"
+    kern = functools.partial(_fused_kernel, q=ctx.q, mu=ctx.mu,
+                             cpt=cpt, chunks=chunks)
+    out = jax.ShapeDtypeStruct((bsz, num_ct, n), jnp.int32)
+    return pl.pallas_call(
+        kern,
+        grid=(bsz, num_ct),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, n), lambda b, t: (b, t, 0, 0)),
+            pl.BlockSpec((cpt, n), lambda b, t: (0, 0)),
+            pl.BlockSpec((1, chunks, n), lambda b, t: (b, 0, 0)),
+            pl.BlockSpec((1, chunks, n), lambda b, t: (b, 0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, 1, n), lambda b, t: (b, t, 0)),
+                   pl.BlockSpec((1, 1, n), lambda b, t: (b, t, 0))],
+        out_shape=[out, out],
+        interpret=interpret,
+    )(polys, tw, f0, f1)
+
+
+__all__ = ["fused_rerank_pallas"]

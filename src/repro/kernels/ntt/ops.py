@@ -11,7 +11,9 @@ import functools
 
 import jax
 
+from repro.crypto import modring
 from repro.crypto.modring import PrimeCtx
+from repro.kernels.ntt import fused as _fused
 from repro.kernels.ntt import ntt as _kern
 from repro.kernels.ntt import ref as _ref
 
@@ -36,9 +38,21 @@ def _ntt_inv_ref(x, ctx: PrimeCtx):
 
 @functools.partial(jax.jit, static_argnames=("ctx",))
 def _pointwise_mul_ref(a, b, ctx: PrimeCtx):
-    from repro.crypto import modring
-
     return modring.mod_mul(a, b, ctx.q, ctx.mu)
+
+
+@functools.partial(jax.jit, static_argnames=("ctx",))
+def _fused_rotate_hadamard_ref(polys, tw, f0, f1, ctx: PrimeCtx):
+    bsz, num_ct, rows, n = polys.shape
+    cpt, chunks = tw.shape[0], f0.shape[1]
+    g = polys.reshape(bsz, num_ct, cpt, chunks, n)
+    rot = modring.mod_mul(g, tw[None, None, :, None, :], ctx.q, ctx.mu)
+    p0 = modring.mod_mul(rot, f0[:, None, None], ctx.q, ctx.mu)
+    p1 = modring.mod_mul(rot, f1[:, None, None], ctx.q, ctx.mu)
+    return (modring.mod_sum(p0.reshape(bsz, num_ct, rows, n),
+                            ctx.q, ctx.mu, axis=2),
+            modring.mod_sum(p1.reshape(bsz, num_ct, rows, n),
+                            ctx.q, ctx.mu, axis=2))
 
 
 def _resolve(use_pallas):
@@ -83,6 +97,25 @@ def pointwise_mul(a, b, ctx: PrimeCtx, *, use_pallas=None):
     return out.reshape(lead + (ctx.n,))
 
 
+def fused_rotate_hadamard(polys, tw, f0, f1, ctx: PrimeCtx, *,
+                          use_pallas=None):
+    """Cached re-rank core for one prime: slot twiddle rotate -> Hadamard
+    against both query components -> slot/chunk mod-sum.
+
+    polys: (B, num_ct, cpt*chunks, N) slot-major gathered cache rows;
+    tw: (cpt, N) NTT-domain monomial diagonals; f0/f1: (B, chunks, N) query
+    NTTs.  Returns (acc0, acc1), each (B, num_ct, N).  The Pallas path runs
+    the whole thing as one kernel (grid batch x result-ct); the fallback is
+    a single jitted XLA composition — both bit-identical to the cold
+    pack-then-NTT pipeline.
+    """
+    use_pallas = _resolve(use_pallas)
+    if not use_pallas:
+        return _fused_rotate_hadamard_ref(polys, tw, f0, f1, ctx)
+    return _fused.fused_rerank_pallas(polys, tw, f0, f1, ctx,
+                                      interpret=_interpret())
+
+
 def negacyclic_mul(a, b, ctx: PrimeCtx, *, use_pallas=None):
     """a * b in Z_q[X]/(X^N + 1)."""
     use_pallas = _resolve(use_pallas)
@@ -92,4 +125,5 @@ def negacyclic_mul(a, b, ctx: PrimeCtx, *, use_pallas=None):
                    use_pallas=use_pallas)
 
 
-__all__ = ["ntt_fwd", "ntt_inv", "pointwise_mul", "negacyclic_mul"]
+__all__ = ["ntt_fwd", "ntt_inv", "pointwise_mul", "fused_rotate_hadamard",
+           "negacyclic_mul"]

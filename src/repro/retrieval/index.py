@@ -26,6 +26,10 @@ class FlatIndex:
     mesh: Optional[Mesh] = None
     row_axes: Optional[tuple] = None   # mesh axes the rows are sharded over
     documents: Optional[Sequence[bytes]] = None
+    # NTT-domain candidate caches, memoized per RlweParams value so every
+    # RemoteRagCloud over this index shares one build (build-once/serve-many)
+    _cand_caches: dict = dataclasses.field(default_factory=dict, repr=False,
+                                           compare=False)
 
     @property
     def num_rows(self) -> int:
@@ -64,6 +68,22 @@ class FlatIndex:
     def rows(self, ids) -> jax.Array:
         """Gather embedding rows by global id (host-driven, small batches)."""
         return jnp.take(self.embeddings, jnp.asarray(ids), axis=0)
+
+    def candidate_cache(self, rlwe_params):
+        """NTT-domain candidate cache for this index under ``rlwe_params``
+        (see crypto.rlwe.CandidateCache): every document's reversed-chunk
+        plaintext forward-NTT'd once, so the encrypted re-rank never re-packs
+        or re-NTTs candidates per request.  Built on first use and memoized
+        per RlweParams *value*; costs 4 * P * N bytes per chunk per row."""
+        from repro.crypto import rlwe
+
+        key = rlwe.params_key(rlwe_params)
+        cache = self._cand_caches.get(key)
+        if cache is None:
+            cache = rlwe.build_candidate_cache(rlwe_params,
+                                               np.asarray(self.embeddings))
+            self._cand_caches[key] = cache
+        return cache
 
 
 __all__ = ["FlatIndex"]

@@ -13,6 +13,12 @@ op, built so each lane is *bit-identical* to the unbatched call:
                         one NTT dispatch per prime for the whole batch.  All
                         ops are exact integer arithmetic, so lanes match the
                         sequential path exactly (including wire bytes).
+  * encrypted_scores_cached_batch
+                        the serving hot path: scores the k' candidates from
+                        the index's NTT-domain candidate cache (monomial
+                        rotate + fused Hadamard/accumulate) — no per-request
+                        candidate packing or forward NTTs, bit-identical to
+                        the cold pack+score pipeline.
 """
 
 from __future__ import annotations
@@ -67,8 +73,11 @@ def topk_batch(index: FlatIndex, perturbed: np.ndarray, kprime: int,
 # here because this module is the serve layer's batching surface.
 pack_candidates_batch = rlwe.pack_candidates_batch
 encrypted_scores_batch = rlwe.encrypted_scores_batch
+encrypted_scores_batch_stacked = rlwe.encrypted_scores_batch_stacked
+encrypted_scores_cached_batch = rlwe.encrypted_scores_cached_batch
 decrypt_scores_batch = rlwe.decrypt_scores_batch
 
 
 __all__ = ["perturb_batch", "topk_batch", "pack_candidates_batch",
-           "encrypted_scores_batch", "decrypt_scores_batch"]
+           "encrypted_scores_batch", "encrypted_scores_batch_stacked",
+           "encrypted_scores_cached_batch", "decrypt_scores_batch"]

@@ -8,7 +8,9 @@ for that batch:
   module 1    vmapped DistanceDP perturbation (per-request PRNG keys)
   module 2a   per-tenant query encryption (host), ONE batched score-top-k'
               kernel invocation over the shared index, batched RLWE re-rank
-              and batched decryption under per-tenant keys
+              against the index's NTT-domain candidate cache (no per-request
+              packing/forward NTTs) and batched decryption under per-tenant
+              keys
   module 2b/c direct fetch or k-of-k' OT per request (host)
 
 Batches group by (backend, n, k'): the stacked crypto needs equal ciphertext
@@ -204,16 +206,28 @@ class ServeEngine:
         res = batching.topk_batch(self.cloud.index, pert, kprime,
                                   use_pallas=self.config.use_pallas)
         cand_ids = np.asarray(res.indices)                    # (B, k')
-        rows = np.asarray(self.cloud.index.rows(cand_ids.reshape(-1)))
-        cand_rows = rows.reshape(len(batch), kprime, -1)
-        # ... and one batched encrypted re-rank
+        # ... and one batched encrypted re-rank.  The RLWE path hits the
+        # index's NTT-domain candidate cache: no embedding-row gather to
+        # host, no per-request packing/forward NTTs — only per-request work.
         if backend == "rlwe":
-            packed = batching.pack_candidates_batch(params, cand_rows)
-            encs = batching.encrypted_scores_batch(
-                params, [w.enc_query for w in wire_reqs], packed,
-                num_cands=kprime, n_dim=cand_rows.shape[-1],
-                use_pallas=self.config.use_pallas)
+            cache = self.cloud.candidate_cache
+            if cache is not None:
+                enc_stack = batching.encrypted_scores_cached_batch(
+                    params, [w.enc_query for w in wire_reqs], cache,
+                    cand_ids, use_pallas=self.config.use_pallas)
+            else:                         # cold reference path
+                rows = np.asarray(
+                    self.cloud.index.rows(cand_ids.reshape(-1)))
+                cand_rows = rows.reshape(len(batch), kprime, -1)
+                packed = batching.pack_candidates_batch(params, cand_rows)
+                enc_stack = batching.encrypted_scores_batch_stacked(
+                    params, [w.enc_query for w in wire_reqs], packed,
+                    num_cands=kprime, n_dim=cand_rows.shape[-1],
+                    use_pallas=self.config.use_pallas)
+            encs = enc_stack.lanes()
         else:
+            rows = np.asarray(self.cloud.index.rows(cand_ids.reshape(-1)))
+            cand_rows = rows.reshape(len(batch), kprime, -1)
             encs = [pai.encrypted_scores(u.sk.pub, w.enc_query, cr)
                     for u, w, cr in zip(users, wire_reqs, cand_rows)]
         replies = [protocol.Reply(candidate_ids=cand_ids[b], enc_scores=encs[b])
@@ -222,7 +236,7 @@ class ServeEngine:
         # back on the users: batched decryption (per-tenant keys) + sort
         if backend == "rlwe":
             scores_list = batching.decrypt_scores_batch(
-                [u.sk for u in users], encs,
+                [u.sk for u in users], enc_stack,
                 use_pallas=self.config.use_pallas)
         else:
             scores_list = [pai.decrypt_scores(u.sk, e)
