@@ -1,9 +1,18 @@
 """Encrypted re-rank hot path: cold per-request packing vs the NTT-domain
-candidate cache, XLA fallback vs fused Pallas kernel, batch 1 / 8.
+candidate cache, XLA fallback vs fused Pallas kernel, batch 1 / 8 — plus
+the corpus-scale section: the dense device-resident cache vs the sharded
+HBM-resident cache at 10^4 documents (10^5 under REPRO_BENCH_FULL=1), in
+both access regimes — streaming on-demand gather under uniform-random ids
+(the gated comparison; pinning is pure churn without locality) and
+device-side gather from explicitly pinned hot shards under skewed ids (the
+repeat-tenant case) — recording scoring latency, gather latency, and the
+device memory footprint of each layout.
 
 Beyond the usual CSV rows this writes machine-readable ``BENCH_rlwe.json``
 (path override: BENCH_RLWE_JSON) so the perf trajectory is trackable across
-PRs; ``scripts/check_bench_regression.py`` gates CI on cached > cold.
+PRs; ``scripts/check_bench_regression.py`` gates CI on cached > cold and on
+sharded batch-8 scoring staying within 1.3x of dense at a >= 4x smaller
+peak cache footprint.
 """
 
 from __future__ import annotations
@@ -91,6 +100,116 @@ def run() -> None:
             "per_request_cached_us": cached_us / bsz,
             "cached_qps": qps,
         }
+
+    # -- corpus scale: dense device-resident vs sharded HBM-resident cache --
+    big_docs = 100_000 if FULL else 10_000
+    big = _unit(rng, big_docs, n_dim)
+    big_builds = []
+    big_build_us = timeit(
+        lambda: big_builds.append(rlwe.build_candidate_cache(params, big)),
+        repeat=1, warmup=0)
+    dense_big = big_builds[0]
+    emit("rlwe/dense_cache_build_10k", big_build_us,
+         f"{dense_big.nbytes / 2**20:.0f}MiB/{big_docs}docs")
+    num_shards = 16
+    budget = dense_big.nbytes // 8           # room for 2 of the 16 shards
+    # two access regimes, two configs:
+    #  * uniform-random ids (the gated comparison): stream-only — pinning
+    #    under uniform traffic is pure churn (a shard admission is a
+    #    shard-sized host->device copy in the request path), so the right
+    #    configuration gathers each request's k' rows on demand and keeps
+    #    device memory at just the gather buffer;
+    #  * skewed ids confined to explicitly pinned hot shards (the repeat-
+    #    tenant case the LRU exists for): gathers run device-side.
+    cfg_stream = rlwe.CandidateCacheConfig(num_shards=num_shards,
+                                           max_resident_bytes=0)
+    views = []
+    view_us = timeit(
+        lambda: views.append(rlwe.shard_candidate_cache(dense_big,
+                                                        cfg_stream)),
+        repeat=1, warmup=0)   # re-view of the retained host pool, no re-pack
+    stream = views[0]
+    emit("rlwe/sharded_view_10k", view_us, f"{stream.num_shards}shards")
+    hot = rlwe.shard_candidate_cache(
+        dense_big, rlwe.CandidateCacheConfig(
+            num_shards=num_shards, max_resident_bytes=budget,
+            pin_on_access=False))
+    hot.pin(0)
+    hot.pin(1)
+
+    sharded = {
+        "num_docs": big_docs,
+        "num_shards": stream.num_shards,
+        "shard_docs": stream.shard_docs,
+        "dense_cache_bytes": dense_big.nbytes,
+        "hot_budget_bytes": budget,
+        "dense_cache_build_us": big_build_us,
+        "shard_view_us": view_us,
+    }
+    for bsz in (1, 8):
+        queries = _unit(rng, bsz, n_dim)
+        q_cts = [rlwe.encrypt_query(sk, q, rng) for q in queries]
+        ids = rng.integers(0, big_docs, size=(bsz, kprime))
+        ids_hot = rng.integers(0, 2 * stream.shard_docs, size=(bsz, kprime))
+
+        def dense_score(ids=ids):
+            out = rlwe.encrypted_scores_cached_batch(
+                params, q_cts, dense_big, ids, use_pallas=False)
+            jax.block_until_ready(out.c0)
+
+        def stream_score():
+            out = rlwe.encrypted_scores_cached_batch(
+                params, q_cts, stream, ids, use_pallas=False)
+            jax.block_until_ready(out.c0)
+
+        def hot_score():
+            out = rlwe.encrypted_scores_cached_batch(
+                params, q_cts, hot, ids_hot, use_pallas=False)
+            jax.block_until_ready(out.c0)
+
+        def gather_only():
+            jax.block_until_ready(stream.gather(ids))
+
+        dense_us = timeit(dense_score, repeat=9, warmup=2)
+        sharded_us = timeit(stream_score, repeat=9, warmup=2)
+        gather_us = timeit(gather_only, repeat=9, warmup=2)
+        dense_hot_us = timeit(lambda: dense_score(ids_hot),
+                              repeat=9, warmup=2)
+        hot_us = timeit(hot_score, repeat=9, warmup=2)
+        gather_buf = bsz * kprime * stream.num_chunks * \
+            params.num_primes * params.n_poly * 4
+        # peak device footprint of the gated (streaming) layout: no pinned
+        # shards, just the transient per-request gather buffer
+        peak = stream.peak_resident_bytes + gather_buf
+        ratio = sharded_us / dense_us
+        emit(f"rlwe/score_dense10k_b{bsz}", dense_us, f"k'={kprime}")
+        emit(f"rlwe/score_sharded10k_b{bsz}", sharded_us,
+             f"{ratio:.2f}x_vs_dense")
+        emit(f"rlwe/gather_sharded10k_b{bsz}", gather_us,
+             f"{gather_buf / 2**20:.1f}MiB/req")
+        emit(f"rlwe/score_sharded_hot10k_b{bsz}", hot_us,
+             f"{hot_us / dense_hot_us:.2f}x_vs_dense_pinned")
+        sharded[f"batch{bsz}"] = {
+            "dense_us": dense_us,
+            "sharded_us": sharded_us,
+            "gather_us": gather_us,
+            "ratio_sharded_vs_dense": ratio,
+            "dense_hot_us": dense_hot_us,
+            "sharded_hot_us": hot_us,
+            "ratio_hot_vs_dense": hot_us / dense_hot_us,
+            "request_gather_bytes": gather_buf,
+            "peak_sharded_bytes": peak,
+            "memory_reduction_vs_dense": dense_big.nbytes / peak,
+            "hot_peak_bytes": hot.peak_resident_bytes + gather_buf,
+        }
+    sharded["hot_lru"] = hot.stats()
+    sharded["hot_lru"]["resident_shards"] = list(
+        sharded["hot_lru"]["resident_shards"])
+    emit("rlwe/sharded_peak_mem_mib",
+         sharded["batch8"]["peak_sharded_bytes"] / 2**20,
+         f"{sharded['batch8']['memory_reduction_vs_dense']:.1f}x_smaller"
+         f"_than_dense")
+    results["sharded"] = sharded
 
     payload = {
         "bench": "rlwe_rerank",

@@ -36,9 +36,39 @@ K = 5
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--no-batch", action="store_true")
+    ap = argparse.ArgumentParser(
+        description="End-to-end private RAG service over the repro.serve "
+                    "micro-batching engine.")
+    ap.add_argument("--no-batch", action="store_true",
+                    help="run the sequential one-query-at-a-time comparison "
+                         "path instead of micro-batching")
+    ap.add_argument("--no-candidate-cache", action="store_true",
+                    help="disable the NTT-domain candidate cache: the cloud "
+                         "re-packs + forward-NTTs the k' candidates on every "
+                         "request (cold reference path; bit-identical "
+                         "results, ~6x slower re-rank)")
+    ap.add_argument("--cache-shard-docs", type=int, default=None,
+                    metavar="DOCS",
+                    help="serve the re-rank from the sharded corpus-scale "
+                         "cache with DOCS documents per shard (host-pooled "
+                         "shards + per-request gather of only the k' "
+                         "selected candidates) instead of the dense "
+                         "device-resident cache")
+    ap.add_argument("--cache-budget-mb", type=float, default=None,
+                    metavar="MB",
+                    help="device-memory budget for LRU-pinned hot shards of "
+                         "the sharded cache (0 = stream-only, no pinning; "
+                         "default: unbounded).  Implies --cache-shard-docs' "
+                         "sharded mode when set")
     args = ap.parse_args()
+
+    cache_config = None
+    if args.cache_shard_docs is not None or args.cache_budget_mb is not None:
+        from repro.crypto import rlwe
+        budget = (None if args.cache_budget_mb is None
+                  else int(args.cache_budget_mb * 2**20))
+        cache_config = rlwe.CandidateCacheConfig(
+            shard_docs=args.cache_shard_docs, max_resident_bytes=budget)
 
     rng = np.random.default_rng(0)
     tok = HashTokenizer(vocab_size=8192)
@@ -63,7 +93,9 @@ def main() -> None:
     index = FlatIndex.build(embs, documents=[p.encode() for p in passages])
 
     engine = ServeEngine(index, config=EngineConfig(
-        max_batch=4, sequential=args.no_batch))
+        max_batch=4, sequential=args.no_batch,
+        use_candidate_cache=not args.no_candidate_cache,
+        cache_config=cache_config))
 
     queries = ["rain and storms this weekend", "stock market crash bond",
                "flu medicine from the doctor"]
@@ -100,6 +132,13 @@ def main() -> None:
     print(f"\nengine: {agg['count']} requests, "
           f"p50={agg['p50_latency_s']}s p99={agg['p99_latency_s']}s, "
           f"mean batch {agg['mean_batch_size']}")
+    stats = engine.cache_stats()
+    if stats is not None:
+        print(f"sharded cache: {stats['hits']} shard hits / "
+              f"{stats['misses']} misses, "
+              f"resident {stats['resident_bytes'] / 2**20:.1f} MiB "
+              f"(peak {stats['peak_resident_bytes'] / 2**20:.1f}) "
+              f"of {stats['pool_bytes'] / 2**20:.1f} MiB pool")
 
 
 if __name__ == "__main__":

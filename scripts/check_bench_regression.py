@@ -2,10 +2,18 @@
 """CI gate on the encrypted re-rank perf trajectory.
 
 Reads BENCH_rlwe.json (written by ``python -m benchmarks.run --only rlwe``)
-and fails if cached scoring is not faster than cold per-request packing at
-any recorded batch size.
+and fails if
+
+  * cached scoring is not faster than cold per-request packing at any
+    recorded batch size, or
+  * (when the corpus-scale section is present) sharded-gather scoring at
+    batch 8 is more than ``max_sharded_ratio`` (default 1.3x) slower than
+    dense-cache scoring, or the sharded layout's peak device footprint is
+    not at least ``min_mem_reduction`` (default 4x) smaller than the dense
+    cache.
 
     scripts/check_bench_regression.py [BENCH_rlwe.json] [min_speedup=1.0]
+        [max_sharded_ratio=1.3] [min_mem_reduction=4.0]
 """
 
 from __future__ import annotations
@@ -14,21 +22,13 @@ import json
 import sys
 
 
-def main() -> int:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_rlwe.json"
-    min_speedup = float(sys.argv[2]) if len(sys.argv) > 2 else 1.0
-    try:
-        with open(path) as f:
-            data = json.load(f)
-    except (OSError, ValueError) as e:   # missing file or truncated JSON
-        print(f"FAIL: cannot read {path}: {e}", file=sys.stderr)
-        return 2
-    results = data.get("results", {})
-    if not results:
-        print(f"FAIL: {path} has no results", file=sys.stderr)
-        return 2
+def _check_cached_vs_cold(results: dict, min_speedup: float) -> int:
     failures = 0
+    checked = 0
     for name in sorted(results):
+        if not name.startswith("batch"):
+            continue
+        checked += 1
         row = results[name]
         speedup = row.get("speedup_cached_vs_cold")
         if speedup is None or speedup < min_speedup:
@@ -40,6 +40,70 @@ def main() -> int:
             print(f"ok   {name}: cached {speedup:.2f}x faster than cold "
                   f"({row.get('cached_us'):.0f}us vs "
                   f"{row.get('cold_pack_us'):.0f}us)")
+    if not checked:      # a results-key rename must not silently pass CI
+        print("FAIL: no batch* rows found — cached-vs-cold gate did not "
+              "run", file=sys.stderr)
+        failures += 1
+    return failures
+
+
+def _check_sharded(sharded: dict, max_ratio: float,
+                   min_mem_reduction: float) -> int:
+    row = sharded.get("batch8")
+    if row is None:
+        print("FAIL sharded: no batch8 row", file=sys.stderr)
+        return 1
+    failures = 0
+    ratio = row.get("ratio_sharded_vs_dense")
+    if ratio is None or ratio > max_ratio:
+        print(f"FAIL sharded/batch8: sharded scoring {ratio}x dense "
+              f"> {max_ratio}x "
+              f"(dense {row.get('dense_us')}us, "
+              f"sharded {row.get('sharded_us')}us)", file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   sharded/batch8: sharded within {ratio:.2f}x of dense "
+              f"({row.get('sharded_us'):.0f}us vs "
+              f"{row.get('dense_us'):.0f}us at "
+              f"{sharded.get('num_docs')} docs)")
+    red = row.get("memory_reduction_vs_dense")
+    if red is None or red < min_mem_reduction:
+        print(f"FAIL sharded/batch8: peak memory reduction {red}x "
+              f"< {min_mem_reduction}x "
+              f"(dense {sharded.get('dense_cache_bytes')}B, "
+              f"sharded peak {row.get('peak_sharded_bytes')}B)",
+              file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   sharded/batch8: peak cache memory {red:.1f}x smaller "
+              f"than dense "
+              f"({row.get('peak_sharded_bytes') / 2**20:.0f}MiB vs "
+              f"{sharded.get('dense_cache_bytes') / 2**20:.0f}MiB)")
+    return failures
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_rlwe.json"
+    min_speedup = float(sys.argv[2]) if len(sys.argv) > 2 else 1.0
+    max_ratio = float(sys.argv[3]) if len(sys.argv) > 3 else 1.3
+    min_mem_reduction = float(sys.argv[4]) if len(sys.argv) > 4 else 4.0
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError) as e:   # missing file or truncated JSON
+        print(f"FAIL: cannot read {path}: {e}", file=sys.stderr)
+        return 2
+    results = data.get("results", {})
+    if not results:
+        print(f"FAIL: {path} has no results", file=sys.stderr)
+        return 2
+    failures = _check_cached_vs_cold(results, min_speedup)
+    sharded = results.get("sharded")
+    if sharded is not None:
+        failures += _check_sharded(sharded, max_ratio, min_mem_reduction)
+    else:
+        print("note: no sharded section in results (pre-sharded-cache "
+              "JSON); skipping the sharded gates")
     return 1 if failures else 0
 
 

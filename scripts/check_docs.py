@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Docs CI check: intra-repo links and documented-symbol imports.
+
+Scans README.md and every markdown file under docs/ for
+
+  * relative links ``[text](path)`` — each target must exist in the repo
+    (external ``http(s)://`` / ``mailto:`` links and pure ``#anchor``
+    fragments are skipped);
+  * backticked dotted symbols `` `repro.x.y[.attr...]` `` — each must
+    resolve: the longest importable module prefix is imported and the
+    remaining names are walked with getattr (dataclass fields and
+    annotated attributes count, so documented per-field rows like
+    ``repro.serve.ServeRequest.request_id`` resolve too).
+
+Exit 0 iff every link resolves and every documented symbol imports.
+
+    PYTHONPATH=src scripts/check_docs.py [repo_root]
+"""
+
+from __future__ import annotations
+
+import importlib
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SYMBOL_RE = re.compile(r"`(repro(?:\.[A-Za-z_]\w*)+)`")
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+
+def markdown_files(root: str) -> list:
+    files = [os.path.join(root, "README.md")]
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        for dirpath, _, names in os.walk(docs):
+            files.extend(os.path.join(dirpath, n)
+                         for n in sorted(names) if n.endswith(".md"))
+    return [f for f in files if os.path.isfile(f)]
+
+
+def check_links(path: str, text: str, root: str) -> list:
+    errors = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(SKIP_SCHEMES):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:                       # pure #anchor
+            continue
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path), target))
+        if not os.path.exists(resolved):
+            errors.append(f"{os.path.relpath(path, root)}: broken link "
+                          f"-> {target}")
+    return errors
+
+
+def resolve_symbol(dotted: str) -> None:
+    """Import the longest module prefix of ``dotted``, then walk attrs.
+    Raises on failure."""
+    parts = dotted.split(".")
+    module = None
+    mod_err = None
+    for i in range(len(parts), 0, -1):
+        try:
+            module = importlib.import_module(".".join(parts[:i]))
+            rest = parts[i:]
+            break
+        except ImportError as e:
+            mod_err = e
+    else:
+        raise ImportError(f"no importable module prefix: {mod_err}")
+    obj = module
+    for name in rest:
+        try:
+            obj = getattr(obj, name)
+        except AttributeError:
+            # dataclass fields without defaults / annotated-only attrs are
+            # real API surface but not class attributes
+            fields = getattr(obj, "__dataclass_fields__", {})
+            annotations = getattr(obj, "__annotations__", {})
+            if name in fields or name in annotations:
+                return
+            raise
+
+
+def check_symbols(path: str, text: str, root: str) -> list:
+    errors = []
+    for dotted in sorted(set(SYMBOL_RE.findall(text))):
+        try:
+            resolve_symbol(dotted)
+        except Exception as e:              # noqa: BLE001 — report any failure
+            errors.append(f"{os.path.relpath(path, root)}: `{dotted}` does "
+                          f"not resolve: {type(e).__name__}: {e}")
+    return errors
+
+
+def main() -> int:
+    root = os.path.abspath(
+        sys.argv[1] if len(sys.argv) > 1
+        else os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(root, "src"))
+    files = markdown_files(root)
+    if not files:
+        print("FAIL: no markdown files found", file=sys.stderr)
+        return 2
+    errors = []
+    n_links = n_syms = 0
+    for path in files:
+        with open(path) as f:
+            text = f.read()
+        n_links += len([t for t in LINK_RE.findall(text)
+                        if not t.startswith(SKIP_SCHEMES)])
+        n_syms += len(set(SYMBOL_RE.findall(text)))
+        errors += check_links(path, text, root)
+        errors += check_symbols(path, text, root)
+    for e in errors:
+        print(f"FAIL {e}", file=sys.stderr)
+    print(f"checked {len(files)} files: {n_links} intra-repo links, "
+          f"{n_syms} documented symbols, {len(errors)} errors")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,13 +1,18 @@
 #!/usr/bin/env bash
-# CI smoke job: tier-1 tests (slow excluded) + optional perf regression gate.
+# CI smoke job: tier-1 tests (slow excluded) + docs check + optional perf
+# regression gate.
 #
-#   scripts/smoke.sh                 # pytest -m "not slow"
+#   scripts/smoke.sh                 # pytest -m "not slow" + docs check
 #   SMOKE_BENCH=1 scripts/smoke.sh   # ... plus rlwe bench + regression check
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -q -m "not slow" "$@"
+
+# docs gate: every intra-repo link in docs/ + README resolves, every
+# documented `repro.*` symbol imports
+python scripts/check_docs.py
 
 if [[ "${SMOKE_BENCH:-0}" == "1" ]]; then
   python -m benchmarks.run --only rlwe

@@ -98,27 +98,35 @@ class RemoteRagCloud:
     """Holds the sharded index + documents; executes modules 1, 2a, 2b, 2c.
 
     The RLWE re-rank runs against the index's NTT-domain candidate cache
-    (built once per (index, params) and shared across clouds/engines), so
-    the per-request encrypted workload touches only per-request data —
+    (built once per (index, params, cache-config) and shared across
+    clouds/engines), so the per-request encrypted workload touches only
+    per-request data.  ``cache_config`` (an `rlwe.CandidateCacheConfig`)
+    selects the corpus-scale sharded cache — host-pooled shards, LRU-pinned
+    device-resident hot set, per-request gather of only the k' selected
+    candidates — instead of the dense device-resident pool;
     ``use_candidate_cache=False`` restores cold per-request packing (the
-    reference path; bit-identical outputs either way)."""
+    reference path).  All three are bit-identical."""
 
     def __init__(self, index: FlatIndex, *,
                  rlwe_params: Optional[rlwe.RlweParams] = None,
                  use_pallas: Optional[bool] = None,
-                 use_candidate_cache: bool = True):
+                 use_candidate_cache: bool = True,
+                 cache_config: Optional[rlwe.CandidateCacheConfig] = None):
         self.index = index
         self.rlwe_params = rlwe_params or rlwe.RlweParams()
         self.use_pallas = use_pallas
         self.use_candidate_cache = use_candidate_cache
+        self.cache_config = cache_config
 
     @property
-    def candidate_cache(self) -> Optional[rlwe.CandidateCache]:
-        """The index's cache for this cloud's params (None when disabled).
-        Built lazily so paillier-only clouds never pay for it."""
+    def candidate_cache(self):
+        """The index's cache for this cloud's (params, cache-config) —
+        dense `rlwe.CandidateCache` or `rlwe.ShardedCandidateCache`; None
+        when disabled.  Built lazily so paillier-only clouds never pay."""
         if not self.use_candidate_cache:
             return None
-        return self.index.candidate_cache(self.rlwe_params)
+        return self.index.candidate_cache(self.rlwe_params,
+                                          self.cache_config)
 
     def handle_request(self, req: Request) -> Reply:
         q = jnp.asarray(req.perturbed, jnp.float32)[None, :]

@@ -20,10 +20,15 @@ dimension > chunk_size are summed homomorphically.  Multiple candidates share
 one ciphertext via block stride (N/stride candidates per result ciphertext).
 
 The per-document half of that packing (reverse placement + forward NTT) is
-request-invariant, so it is hoisted into an NTT-domain `CandidateCache`
+request-invariant, so it is hoisted into an NTT-domain candidate cache
 built once per index; at request time a candidate's block offset is realized
 as a pointwise monomial-twiddle rotate in the NTT domain (bit-identical to
-fresh packing — see CandidateCache / encrypted_scores_cached_batch).
+fresh packing — see CandidateCache / encrypted_scores_cached_batch).  Two
+cache layouts share one packed pool: the dense `CandidateCache` keeps the
+whole corpus resident in device memory, and the corpus-scale
+`ShardedCandidateCache` partitions it into host-pooled shards with an
+LRU-pinned device-resident hot set and per-request on-demand gather of only
+the k' selected candidates' rows (see CandidateCacheConfig).
 
 Correctness budget (validated in `RlweParams.validate`): every *extraction*
 coefficient of m*p is an inner product of unit-norm vectors scaled by
@@ -35,10 +40,11 @@ far below q / (2t).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import math
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -344,33 +350,41 @@ class CandidateCache:
     def nbytes(self) -> int:
         return int(self.polys.size) * 4
 
+    def host_pool(self) -> np.ndarray:
+        """Host view/copy of the packed pool, memoized on first use so every
+        sharded re-view (`shard_candidate_cache`) shares ONE host array no
+        matter how many configs consume it — and dense-only callers never
+        pay for it.  Zero-copy on the CPU backend; one D2H on accelerators.
+        """
+        pool = self.__dict__.get("_host_pool")
+        if pool is None:
+            # frozen dataclass: memoize via __dict__ (cached_property style)
+            pool = self.__dict__["_host_pool"] = np.asarray(self.polys)
+        return pool
+
     def check_compatible(self, params: RlweParams, n_dim=None) -> None:
-        if params_key(params) != params_key(self.params):
-            raise ValueError(
-                f"candidate cache was built for RlweParams "
-                f"{params_key(self.params)} but scoring uses "
-                f"{params_key(params)}; rebuild the cache for these params")
-        if n_dim is not None and n_dim != self.n_dim:
-            raise ValueError(
-                f"candidate cache packs n_dim={self.n_dim} but the query "
-                f"has n_dim={n_dim}")
+        _check_cache_compatible(self, params, n_dim)
 
 
-def build_candidate_cache(params: RlweParams,
-                          embeddings: np.ndarray) -> CandidateCache:
-    """Precompute the NTT-domain plaintexts of every document (slot 0) plus
-    the per-slot monomial twiddles.  One vectorized host pack + one forward
-    NTT per prime for the whole corpus; after this the server's encrypted
-    workload touches only per-request data."""
-    emb = np.asarray(embeddings)
-    num_docs, n_dim = emb.shape
+def _cache_geometry(params: RlweParams, n_dim: int) -> tuple:
+    """(chunks, stride, cands_per_ct) with the int32-accumulator check the
+    scoring kernels rely on (slot/chunk accumulators sum cpt*chunks raw
+    int32 terms in [0, q) before one Barrett reduction)."""
     chunks = params.num_chunks(n_dim)
     stride = params.stride(n_dim)
     cpt = params.cands_per_ct(n_dim)
-    # slot/chunk accumulators in the scoring kernels sum cpt*chunks raw
-    # int32 terms in [0, q) before one Barrett reduction
     assert cpt * chunks * (params.primes[0] - 1) < 2**31, \
         "cpt*chunks too large for the int32 accumulator"
+    return chunks, stride, cpt
+
+
+def _pack_corpus_ntt(params: RlweParams, emb: np.ndarray) -> np.ndarray:
+    """The corpus half of negacyclic packing, hoisted offline: every
+    document's chunks reverse-packed at slot 0 and forward-NTT'd per prime.
+    Returns the host pool (num_docs, chunks, P, N) int32 — the single source
+    of truth backing both the dense and the sharded candidate cache."""
+    num_docs, n_dim = emb.shape
+    chunks, _, _ = _cache_geometry(params, n_dim)
     # pack + NTT in document blocks: peak transient host memory is one
     # ~64 MiB int64 staging buffer (plus its RNS copy), not 3x the corpus
     block = max(1, (1 << 23) // (chunks * params.n_poly))
@@ -383,37 +397,321 @@ def build_candidate_cache(params: RlweParams,
             seg = ints[:, c * params.chunk:(c + 1) * params.chunk]
             polys[:, c, params.chunk - 1 - np.arange(seg.shape[1])] = seg
         rns = _to_rns(polys, params)                      # (P, b, chunks, N)
-        parts.append(jnp.stack([
-            ntt_ops.ntt_fwd(jnp.asarray(rns[i]), ctx)
+        parts.append(np.stack([
+            np.asarray(ntt_ops.ntt_fwd(jnp.asarray(rns[i]), ctx))
             for i, ctx in enumerate(params.ctxs)
         ], axis=2))                                       # (b, chunks, P, N)
-    cache_polys = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+
+def _slot_twiddles(params: RlweParams, n_dim: int) -> jnp.ndarray:
+    """NTT-domain diagonals of the slot monomials X^{s*stride}: (P, cpt, N)."""
+    _, stride, cpt = _cache_geometry(params, n_dim)
     mono = np.zeros((cpt, params.n_poly), np.int64)
     mono[np.arange(cpt), np.arange(cpt) * stride] = 1
     mrns = _to_rns(mono, params)                          # (P, cpt, N)
-    twiddles = jnp.stack([
+    return jnp.stack([
         ntt_ops.ntt_fwd(jnp.asarray(mrns[i]), ctx)
         for i, ctx in enumerate(params.ctxs)
     ])                                                    # (P, cpt, N)
-    return CandidateCache(params=params, polys=cache_polys, twiddles=twiddles,
+
+
+def build_candidate_cache(params: RlweParams,
+                          embeddings: np.ndarray) -> CandidateCache:
+    """Precompute the NTT-domain plaintexts of every document (slot 0) plus
+    the per-slot monomial twiddles.  One vectorized host pack + one forward
+    NTT per prime for the whole corpus; after this the server's encrypted
+    workload touches only per-request data.  The whole pool lives dense in
+    device memory — at corpus scale use `build_sharded_candidate_cache`."""
+    emb = np.asarray(embeddings)
+    num_docs, n_dim = emb.shape
+    chunks, stride, cpt = _cache_geometry(params, n_dim)
+    pool = _pack_corpus_ntt(params, emb)
+    return CandidateCache(params=params, polys=jnp.asarray(pool),
+                          twiddles=_slot_twiddles(params, n_dim),
                           n_dim=n_dim, num_docs=num_docs, stride=stride,
                           cands_per_ct=cpt, num_chunks=chunks)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("ctxs", "cpt", "pad", "use_pallas"))
-def _cached_scores(c0, c1, polys, ids, twiddles, ctxs, cpt, pad, use_pallas):
-    """Whole-batch cached scoring in ONE compiled call: the cache gather,
-    last-ct zero padding, and the per-prime loop all live in a single trace,
-    so the full gather -> rotate -> Hadamard -> slot/chunk mod-sum -> iNTT
-    pipeline runs without host round-trips.  ``use_pallas`` is static: the
-    same trace routes through the fused Pallas kernel + kernel NTTs or the
-    jitted XLA references (one layout/padding implementation for both, so
-    the bit-identity contract holds by construction)."""
-    bsz, num_cands = ids.shape
+# ---------------------------------------------------------------------------
+# cloud side: sharded HBM-resident candidate cache (corpus scale)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CandidateCacheConfig:
+    """Knobs for the sharded candidate cache (hashable: `FlatIndex` memoizes
+    one cache per (RlweParams value, config) pair).
+
+    shard_docs / num_shards   partition of the corpus into contiguous
+                              document ranges (specify one; ``shard_docs``
+                              wins).  Default: 8 shards.
+    max_resident_bytes        device-memory budget for LRU-pinned hot shards.
+                              ``None`` = unbounded (every touched shard stays
+                              resident), ``0`` = stream-only (no pinning;
+                              each request gathers its k' rows from the host
+                              pool on demand).
+    pin_on_access             admit a missed shard to device residency
+                              (subject to the budget).  ``False`` keeps the
+                              resident set fixed to whatever `pin` loaded.
+
+    Choosing a policy: an admission is a shard-sized host->device copy in
+    the request path, so ``pin_on_access`` pays off only when accesses have
+    locality (repeat tenants hitting the same shards).  Under uniform
+    access whose working set exceeds the budget it is pure churn — use
+    stream-only (``max_resident_bytes=0``) or ``pin_on_access=False`` with
+    explicit `ShardedCandidateCache.pin` placement instead.
+    """
+    shard_docs: Optional[int] = None
+    num_shards: Optional[int] = None
+    max_resident_bytes: Optional[int] = None
+    pin_on_access: bool = True
+
+    def resolve_shard_docs(self, num_docs: int) -> int:
+        if self.shard_docs is not None:
+            if self.shard_docs <= 0:        # CLI-reachable: fail loudly
+                raise ValueError(
+                    f"shard_docs must be positive, got {self.shard_docs}")
+            return self.shard_docs
+        n_shards = self.num_shards if self.num_shards is not None else 8
+        if n_shards <= 0:
+            raise ValueError(f"num_shards must be positive, got {n_shards}")
+        return max(1, -(-num_docs // n_shards))
+
+
+@dataclasses.dataclass(eq=False)
+class ShardedCandidateCache:
+    """Capacity-aware sharded view of the NTT-domain candidate pool.
+
+    The per-document plaintexts (the same (doc, chunk, P, N) int32 rows a
+    dense `CandidateCache` would hold on device) live in a flat host pool
+    partitioned into contiguous document shards; document d maps to shard
+    ``d // shard_docs``, local row ``d % shard_docs`` — assigned at index
+    build, aligned with `FlatIndex` row sharding.  Device memory holds only
+
+      * an LRU set of *pinned hot shards* bounded by ``max_resident_bytes``
+        (repeat tenants hitting the same shard gather device-side), and
+      * the per-request gather buffer: the k' selected candidates' chunks,
+        fetched on demand (`jnp.take` from a resident shard, or a host-side
+        row gather of just those k' rows for a non-resident shard).
+
+    Gathered rows are the exact pool rows the dense cache would `jnp.take`,
+    so sharded scoring is bit-identical to the dense cache and to cold
+    packing regardless of the resident set, eviction history, or budget.
+
+    Eviction is deterministic: shards are admitted in access order (MRU at
+    the back of an OrderedDict), evicted oldest-first whenever the resident
+    set exceeds the budget; a re-accessed shard is re-pinned the same way.
+    ``hits``/``misses`` count shard-group lookups (one per distinct shard
+    touched by a gather), not individual documents.
+    """
+    params: RlweParams
+    twiddles: jnp.ndarray          # (P, cpt, N) — same as the dense cache
+    n_dim: int
+    num_docs: int
+    stride: int
+    cands_per_ct: int
+    num_chunks: int
+    shard_docs: int
+    pool: np.ndarray               # host (num_docs, chunks, P, N) backing store
+    shards: list                   # views into ``pool``, <=shard_docs docs each
+    max_resident_bytes: Optional[int] = None
+    pin_on_access: bool = True
+    sharding: Optional[object] = None   # jax.sharding.Sharding for pinned shards
+    _resident: collections.OrderedDict = dataclasses.field(
+        default_factory=collections.OrderedDict, repr=False)
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    gathered_bytes: int = 0        # host->device on-demand row traffic
+    peak_resident_bytes: int = 0
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def pool_nbytes(self) -> int:
+        """Total host pool size — what the dense cache would pin on device."""
+        return sum(s.nbytes for s in self.shards)
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(int(v.size) * 4 for v in self._resident.values())
+
+    @property
+    def resident_shards(self) -> tuple:
+        """Resident shard ids, LRU -> MRU (deterministic under a fixed
+        access trace; asserted in tests)."""
+        return tuple(self._resident.keys())
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "gathered_bytes": self.gathered_bytes,
+                "resident_bytes": self.resident_bytes,
+                "peak_resident_bytes": self.peak_resident_bytes,
+                "pool_bytes": self.pool_nbytes,
+                "num_shards": self.num_shards,
+                "resident_shards": self.resident_shards}
+
+    def check_compatible(self, params: RlweParams, n_dim=None) -> None:
+        _check_cache_compatible(self, params, n_dim)
+
+    def shard_of(self, doc_id: int) -> int:
+        return int(doc_id) // self.shard_docs
+
+    def pin(self, shard_id: int) -> None:
+        """Explicitly admit a shard to device residency (LRU position =
+        most-recent); evicts oldest shards if over budget."""
+        self._admit(int(shard_id))
+
+    def _admit(self, s: int) -> None:
+        if s in self._resident:
+            self._resident.move_to_end(s)
+            return
+        nbytes = self.shards[s].nbytes
+        if self.max_resident_bytes is not None:
+            if nbytes > self.max_resident_bytes:
+                return              # shard alone exceeds the budget: stream
+            # evict BEFORE loading so true device residency never exceeds
+            # the budget, even transiently during the admission copy
+            while self.resident_bytes + nbytes > self.max_resident_bytes:
+                self._resident.popitem(last=False)
+                self.evictions += 1
+        arr = jnp.asarray(self.shards[s])
+        if self.sharding is not None:
+            arr = jax.device_put(arr, self.sharding)
+        self._resident[s] = arr
+        self.peak_resident_bytes = max(self.peak_resident_bytes,
+                                       self.resident_bytes)
+
+    def gather(self, ids) -> jnp.ndarray:
+        """On-demand gather of the selected candidates' cached rows:
+        (B, num_cands) document ids -> (B, num_cands, chunks, P, N) device
+        array, touching only those k' documents per lane.
+
+        Ids are grouped by shard; resident shards gather device-side
+        (`jnp.take`), non-resident shards gather just the selected rows from
+        the host pool (and are LRU-admitted when ``pin_on_access``)."""
+        ids = np.asarray(ids)
+        assert ids.ndim == 2, "ids must be (B, num_cands)"
+        bsz, nc = ids.shape
+        flat = ids.reshape(-1)
+        if flat.size and (flat.min() < 0 or flat.max() >= self.num_docs):
+            # negative ids would alias shards[-1] via Python indexing and
+            # silently gather the wrong document; fail loudly instead
+            raise IndexError(
+                f"candidate ids must be in [0, {self.num_docs}); got "
+                f"[{flat.min()}, {flat.max()}]")
+        shard_ids = flat // self.shard_docs
+        local = flat - shard_ids * self.shard_docs
+        order = np.argsort(shard_ids, kind="stable")      # group by shard
+        uniq, starts = np.unique(shard_ids[order], return_index=True)
+        bounds = np.append(starts, order.size)
+        parts = []
+        for s, lo, hi in zip(uniq, bounds[:-1], bounds[1:]):
+            s = int(s)
+            sel = order[lo:hi]
+            loc = local[sel]
+            dev = self._resident.get(s)
+            if dev is not None:
+                self.hits += 1
+                self._resident.move_to_end(s)             # LRU touch
+                rows = jnp.take(dev, jnp.asarray(loc), axis=0)
+            else:
+                self.misses += 1
+                rows = jnp.asarray(self.shards[s][loc])   # host row gather
+                self.gathered_bytes += int(rows.size) * 4
+                if self.pin_on_access:
+                    self._admit(s)
+            parts.append(rows)
+        g = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+        inv = np.empty_like(order)
+        inv[order] = np.arange(order.size)                # undo the grouping
+        g = jnp.take(g, jnp.asarray(inv), axis=0)
+        return g.reshape(bsz, nc, self.num_chunks,
+                         self.params.num_primes, self.params.n_poly)
+
+
+def _check_cache_compatible(cache, params: RlweParams, n_dim=None) -> None:
+    if params_key(params) != params_key(cache.params):
+        raise ValueError(
+            f"candidate cache was built for RlweParams "
+            f"{params_key(cache.params)} but scoring uses "
+            f"{params_key(params)}; rebuild the cache for these params")
+    if n_dim is not None and n_dim != cache.n_dim:
+        raise ValueError(
+            f"candidate cache packs n_dim={cache.n_dim} but the query "
+            f"has n_dim={n_dim}")
+
+
+def _shard_pool(params: RlweParams, pool: np.ndarray, n_dim: int,
+                config: CandidateCacheConfig,
+                sharding=None, twiddles=None) -> ShardedCandidateCache:
+    num_docs = pool.shape[0]
+    chunks, stride, cpt = _cache_geometry(params, n_dim)
+    shard_docs = config.resolve_shard_docs(num_docs)
+    shards = [pool[lo:lo + shard_docs]                    # views, no copy
+              for lo in range(0, num_docs, shard_docs)]
+    if twiddles is None:
+        twiddles = _slot_twiddles(params, n_dim)
+    return ShardedCandidateCache(
+        params=params, twiddles=twiddles, n_dim=n_dim,
+        num_docs=num_docs, stride=stride, cands_per_ct=cpt,
+        num_chunks=chunks, shard_docs=shard_docs, pool=pool, shards=shards,
+        max_resident_bytes=config.max_resident_bytes,
+        pin_on_access=config.pin_on_access, sharding=sharding)
+
+
+def build_sharded_candidate_cache(
+        params: RlweParams, embeddings: np.ndarray, *,
+        config: Optional[CandidateCacheConfig] = None,
+        sharding=None) -> ShardedCandidateCache:
+    """Pack + forward-NTT the corpus once (host pool) and partition it into
+    shards.  ``sharding`` optionally places pinned shards with a
+    `jax.sharding.Sharding` (mesh row axes — see `FlatIndex`)."""
+    emb = np.asarray(embeddings)
+    config = config if config is not None else CandidateCacheConfig()
+    pool = _pack_corpus_ntt(params, emb)
+    return _shard_pool(params, pool, emb.shape[1], config, sharding)
+
+
+def shard_candidate_cache(cache,
+                          config: Optional[CandidateCacheConfig] = None,
+                          sharding=None) -> ShardedCandidateCache:
+    """Re-view an existing cache's pool (dense `CandidateCache` or another
+    `ShardedCandidateCache`) as a sharded cache under a new config, without
+    re-packing — bit-identity between the views is true by construction,
+    and the packed pool (the expensive pack + forward-NTT product) is built
+    once per params value no matter how many configs consume it."""
+    config = config if config is not None else CandidateCacheConfig()
+    pool = (cache.pool if isinstance(cache, ShardedCandidateCache)
+            else cache.host_pool())
+    return _shard_pool(cache.params, pool, cache.n_dim, config, sharding,
+                       twiddles=cache.twiddles)
+
+
+def densify_candidate_cache(cache: ShardedCandidateCache) -> CandidateCache:
+    """Dense device-resident view of a sharded cache's pool (one
+    host->device copy, no re-pack; the host pool stays shared)."""
+    dense = CandidateCache(
+        params=cache.params, polys=jnp.asarray(cache.pool),
+        twiddles=cache.twiddles, n_dim=cache.n_dim,
+        num_docs=cache.num_docs, stride=cache.stride,
+        cands_per_ct=cache.cands_per_ct, num_chunks=cache.num_chunks)
+    dense.__dict__["_host_pool"] = cache.pool   # keep the pool shared
+    return dense
+
+
+def _scores_pipeline(c0, c1, g, twiddles, ctxs, cpt, pad, use_pallas):
+    """Traced body shared by the dense and pre-gathered entry points: zero
+    padding for the last result ciphertext's empty slots, then per prime a
+    query forward NTT and the fused rotate -> Hadamard -> slot/chunk mod-sum
+    -> inverse NTT (one kernel per prime on the Pallas path; the per-prime
+    loop unrolls at trace time, and the RNS stack of coefficient-domain
+    outputs is assembled in the same jit — no host round-trips)."""
+    bsz, num_cands = g.shape[0], g.shape[1]
     chunks, n = c0.shape[1], c0.shape[-1]
-    g = jnp.take(polys, ids.reshape(-1), axis=0)
-    g = g.reshape((bsz, num_cands) + polys.shape[1:])   # (B, nc, chunks, P, N)
     if pad:                  # empty slots of the last result ciphertext
         g = jnp.concatenate(
             [g, jnp.zeros((bsz, pad) + g.shape[2:], jnp.int32)], axis=1)
@@ -423,26 +721,54 @@ def _cached_scores(c0, c1, polys, ids, twiddles, ctxs, cpt, pad, use_pallas):
         f0 = ntt_ops.ntt_fwd(c0[:, :, i, :], ctx, use_pallas=use_pallas)
         f1 = ntt_ops.ntt_fwd(c1[:, :, i, :], ctx, use_pallas=use_pallas)
         polys_i = g[..., i, :].reshape(bsz, num_ct, cpt * chunks, n)
-        acc0, acc1 = ntt_ops.fused_rotate_hadamard(
+        acc0, acc1 = ntt_ops.fused_rotate_hadamard_intt(
             polys_i, twiddles[i], f0, f1, ctx, use_pallas=use_pallas)
-        outs0.append(ntt_ops.ntt_inv(acc0, ctx, use_pallas=use_pallas))
-        outs1.append(ntt_ops.ntt_inv(acc1, ctx, use_pallas=use_pallas))
+        outs0.append(acc0)
+        outs1.append(acc1)
     return jnp.stack(outs0, axis=2), jnp.stack(outs1, axis=2)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ctxs", "cpt", "pad", "use_pallas"))
+def _cached_scores(c0, c1, polys, ids, twiddles, ctxs, cpt, pad, use_pallas):
+    """Whole-batch dense-cache scoring in ONE compiled call: the cache
+    gather, last-ct zero padding, and the per-prime loop all live in a
+    single trace, so the full gather -> rotate -> Hadamard -> slot/chunk
+    mod-sum -> iNTT pipeline runs without host round-trips.  ``use_pallas``
+    is static: the same trace routes through the fused Pallas kernel or the
+    jitted XLA references (one layout/padding implementation for both, so
+    the bit-identity contract holds by construction)."""
+    bsz, num_cands = ids.shape
+    g = jnp.take(polys, ids.reshape(-1), axis=0)
+    g = g.reshape((bsz, num_cands) + polys.shape[1:])   # (B, nc, chunks, P, N)
+    return _scores_pipeline(c0, c1, g, twiddles, ctxs, cpt, pad, use_pallas)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ctxs", "cpt", "pad", "use_pallas"))
+def _gathered_scores(c0, c1, g, twiddles, ctxs, cpt, pad, use_pallas):
+    """Sharded-cache scoring: same compiled pipeline as `_cached_scores`
+    minus the dense gather — ``g`` (B, nc, chunks, P, N) was assembled by
+    `ShardedCandidateCache.gather` (a stateful LRU, so it cannot live inside
+    the jit).  Identical trace below the gather => identical bits."""
+    return _scores_pipeline(c0, c1, g, twiddles, ctxs, cpt, pad, use_pallas)
 
 
 def encrypted_scores_cached_batch(params: RlweParams,
                                   q_cts: Sequence[QueryCiphertext],
-                                  cache: CandidateCache, cand_ids,
+                                  cache, cand_ids,
                                   *, use_pallas=None) -> ScoreCiphertextBatch:
-    """Batched ct (x) p against cached NTT-domain candidates.
+    """Batched ct (x) p against cached NTT-domain candidates (``cache`` is a
+    dense `CandidateCache` or a `ShardedCandidateCache`).
 
-    Per-request work: one gather of k' cached rows per lane, one fused
-    rotate -> Hadamard -> slot/chunk mod-sum per prime (Pallas kernel or the
-    jitted XLA fallback), 2*chunks forward NTTs for the query and 2 inverse
-    NTTs per result ciphertext.  No per-candidate host loop and no candidate
-    forward NTTs — those moved to `build_candidate_cache`.  Bit-identical to
-    pack_candidates_batch + encrypted_scores_batch (same decrypted scores,
-    same wire bytes).
+    Per-request work: one gather of k' cached rows per lane (device `take`
+    for the dense cache; shard-grouped on-demand gather for the sharded
+    cache), then per prime one fused rotate -> Hadamard -> slot/chunk
+    mod-sum -> inverse NTT (Pallas kernel or the jitted XLA fallback) plus
+    2*chunks query forward NTTs.  No per-candidate host loop and no
+    candidate forward NTTs — those moved to the cache build.  Bit-identical
+    to pack_candidates_batch + encrypted_scores_batch (same decrypted
+    scores, same wire bytes), for either cache kind.
     """
     ids = np.asarray(cand_ids)
     assert ids.ndim == 2, "cand_ids must be (B, num_cands)"
@@ -456,15 +782,21 @@ def encrypted_scores_cached_batch(params: RlweParams,
     c1 = jnp.stack([q.c1 for q in q_cts])
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
-    all0, all1 = _cached_scores(
-        c0, c1, cache.polys, jnp.asarray(ids), cache.twiddles,
-        params.ctxs, cpt, pad, bool(use_pallas))
+    if isinstance(cache, ShardedCandidateCache):
+        g = cache.gather(ids)                 # (B, nc, chunks, P, N)
+        all0, all1 = _gathered_scores(
+            c0, c1, g, cache.twiddles, params.ctxs, cpt, pad,
+            bool(use_pallas))
+    else:
+        all0, all1 = _cached_scores(
+            c0, c1, cache.polys, jnp.asarray(ids), cache.twiddles,
+            params.ctxs, cpt, pad, bool(use_pallas))
     return ScoreCiphertextBatch(c0=all0, c1=all1, n_dim=cache.n_dim,
                                 num_cands=num_cands)
 
 
 def encrypted_scores_cached(params: RlweParams, q_ct: QueryCiphertext,
-                            cache: CandidateCache, cand_ids,
+                            cache, cand_ids,
                             *, use_pallas=None) -> ScoreCiphertexts:
     """Cached ct (x) p for one query (the B=1 slice of the batch version)."""
     res = encrypted_scores_cached_batch(
@@ -621,6 +953,9 @@ def cosine_distances(scores: np.ndarray) -> np.ndarray:
 __all__ = [
     "RlweParams", "RlweSecretKey", "QueryCiphertext", "PackedCandidates",
     "ScoreCiphertexts", "ScoreCiphertextBatch", "CandidateCache",
+    "CandidateCacheConfig", "ShardedCandidateCache",
+    "build_sharded_candidate_cache", "shard_candidate_cache",
+    "densify_candidate_cache",
     "params_key", "build_candidate_cache", "keygen", "encrypt_query",
     "decrypt_scores", "decrypt_scores_batch", "decrypt_rns",
     "extract_scores", "pack_candidates", "pack_candidates_batch",

@@ -17,8 +17,29 @@ read of the gathered cache rows and one HBM write of the two accumulators.
 
 Everything is int32: products are Barrett-reduced to [0, q), and the final
 slot/chunk sum accumulates raw (cpt*chunks terms * q < 2^31, asserted) and
-is reduced once — bit-identical to a chain of mod_add.  The inverse NTT of
-the accumulators stays in the existing `ntt_pallas` kernel.
+is reduced once — bit-identical to a chain of mod_add.
+
+Two variants share the rotate/Hadamard/accumulate body:
+
+  * `fused_rerank_pallas`       — NTT-domain accumulators out (the inverse
+                                  NTT stays in the separate `ntt_pallas`
+                                  dispatch; kept for staged comparisons).
+  * `fused_rerank_intt_pallas`  — additionally absorbs the per-prime inverse
+                                  NTT: the (acc0, acc1) pair of a grid cell
+                                  is a (2, N) tile that runs the exact
+                                  `inv_butterflies` network of the standalone
+                                  kernel before leaving VMEM, so the result
+                                  ciphertext components come out in the
+                                  coefficient domain with no extra HBM
+                                  round-trip.  This is the ROADMAP-named
+                                  batch-8 bottleneck fix: cached scoring is
+                                  Hadamard/iNTT-bound once packing is hoisted
+                                  into the candidate cache.  The per-prime
+                                  results are stacked into the RNS (CRT)
+                                  ciphertext layout inside the same jit; the
+                                  bignum CRT *lift* itself stays host-side at
+                                  decryption — big_q ~ 2^60 cannot live in
+                                  int32 lanes.
 """
 
 from __future__ import annotations
@@ -31,10 +52,13 @@ from jax.experimental import pallas as pl
 
 from repro.crypto import modring
 from repro.crypto.modring import PrimeCtx
+from repro.kernels.ntt import ntt as _ntt
 
 
-def _fused_kernel(polys_ref, tw_ref, f0_ref, f1_ref, o0_ref, o1_ref, *,
-                  q: int, mu: int, cpt: int, chunks: int):
+def _accumulate(polys_ref, tw_ref, f0_ref, f1_ref, *, q: int, mu: int,
+                cpt: int, chunks: int):
+    """Shared kernel body: twiddle rotate -> Hadamard(c0, c1) -> raw-sum ->
+    one Barrett reduction.  Returns a (2, n) tile [acc0; acc1] in [0, q)."""
     n = polys_ref.shape[-1]
     g = polys_ref[...].reshape(cpt, chunks, n)
     tw = tw_ref[...]                                    # (cpt, n)
@@ -43,10 +67,32 @@ def _fused_kernel(polys_ref, tw_ref, f0_ref, f1_ref, o0_ref, o1_ref, *,
     rot = modring.mod_mul(g, tw[:, None, :], q, mu)     # slot twiddle rotate
     p0 = modring.mod_mul(rot, f0[None], q, mu).reshape(cpt * chunks, n)
     p1 = modring.mod_mul(rot, f1[None], q, mu).reshape(cpt * chunks, n)
-    o0_ref[...] = modring.barrett_reduce(jnp.sum(p0, axis=0), q, mu
-                                         ).reshape(1, 1, n)
-    o1_ref[...] = modring.barrett_reduce(jnp.sum(p1, axis=0), q, mu
-                                         ).reshape(1, 1, n)
+    return jnp.stack([
+        modring.barrett_reduce(jnp.sum(p0, axis=0), q, mu),
+        modring.barrett_reduce(jnp.sum(p1, axis=0), q, mu)])
+
+
+def _fused_kernel(polys_ref, tw_ref, f0_ref, f1_ref, o0_ref, o1_ref, *,
+                  q: int, mu: int, cpt: int, chunks: int):
+    n = polys_ref.shape[-1]
+    acc = _accumulate(polys_ref, tw_ref, f0_ref, f1_ref, q=q, mu=mu,
+                      cpt=cpt, chunks=chunks)
+    o0_ref[...] = acc[0].reshape(1, 1, n)
+    o1_ref[...] = acc[1].reshape(1, 1, n)
+
+
+def _fused_intt_kernel(polys_ref, tw_ref, f0_ref, f1_ref, ipsi_ref,
+                       o0_ref, o1_ref, *, q: int, mu: int, cpt: int,
+                       chunks: int, n_inv: int):
+    n = polys_ref.shape[-1]
+    acc = _accumulate(polys_ref, tw_ref, f0_ref, f1_ref, q=q, mu=mu,
+                      cpt=cpt, chunks=chunks)
+    # absorb the inverse NTT: the (2, n) accumulator tile runs the exact
+    # butterfly network of the standalone kernel while still VMEM-resident
+    out = _ntt.inv_butterflies(acc, ipsi_ref[...], q=q, mu=mu, n=n,
+                               n_inv=n_inv)
+    o0_ref[...] = out[0].reshape(1, 1, n)
+    o1_ref[...] = out[1].reshape(1, 1, n)
 
 
 @functools.partial(jax.jit, static_argnames=("ctx", "interpret"))
@@ -82,4 +128,42 @@ def fused_rerank_pallas(polys, tw, f0, f1, ctx: PrimeCtx, *,
     )(polys, tw, f0, f1)
 
 
-__all__ = ["fused_rerank_pallas"]
+@functools.partial(jax.jit, static_argnames=("ctx", "interpret"))
+def fused_rerank_intt_pallas(polys, tw, f0, f1, ctx: PrimeCtx, *,
+                             interpret: bool = True):
+    """Rotate -> Hadamard(c0, c1) -> slot/chunk mod-sum -> inverse NTT for
+    one prime, in a single kernel.
+
+    Same contract as `fused_rerank_pallas` but the returned (acc0, acc1)
+    are in the *coefficient* domain: each grid cell's accumulator pair is
+    inverse-NTT'd as a (2, N) tile before it leaves VMEM (the exact
+    `inv_butterflies` network of `ntt_pallas`, so outputs are bit-identical
+    to fused_rerank_pallas followed by the standalone inverse NTT).
+    """
+    bsz, num_ct, rows, n = polys.shape
+    cpt, chunks = tw.shape[0], f0.shape[1]
+    assert rows == cpt * chunks, (rows, cpt, chunks)
+    assert n == ctx.n and f0.shape == f1.shape == (bsz, chunks, n)
+    assert rows * (ctx.q - 1) < 2**31, "int32 accumulator would wrap"
+    kern = functools.partial(_fused_intt_kernel, q=ctx.q, mu=ctx.mu,
+                             cpt=cpt, chunks=chunks, n_inv=ctx.n_inv)
+    out = jax.ShapeDtypeStruct((bsz, num_ct, n), jnp.int32)
+    ipsi = jnp.asarray(ctx.ipsi_table)
+    return pl.pallas_call(
+        kern,
+        grid=(bsz, num_ct),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, n), lambda b, t: (b, t, 0, 0)),
+            pl.BlockSpec((cpt, n), lambda b, t: (0, 0)),
+            pl.BlockSpec((1, chunks, n), lambda b, t: (b, 0, 0)),
+            pl.BlockSpec((1, chunks, n), lambda b, t: (b, 0, 0)),
+            pl.BlockSpec((n,), lambda b, t: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((1, 1, n), lambda b, t: (b, t, 0)),
+                   pl.BlockSpec((1, 1, n), lambda b, t: (b, t, 0))],
+        out_shape=[out, out],
+        interpret=interpret,
+    )(polys, tw, f0, f1, ipsi)
+
+
+__all__ = ["fused_rerank_pallas", "fused_rerank_intt_pallas"]

@@ -44,9 +44,13 @@ def _fwd_kernel(x_ref, psi_ref, o_ref, *, q: int, mu: int, n: int):
     o_ref[...] = a
 
 
-def _inv_kernel(x_ref, ipsi_ref, o_ref, *, q: int, mu: int, n: int, n_inv: int):
-    a = x_ref[...]
-    ipsi = ipsi_ref[...]
+def inv_butterflies(a, ipsi, *, q: int, mu: int, n: int, n_inv: int):
+    """Inverse negacyclic butterfly network + final N^{-1} scaling on (bt, n)
+    int32 rows.  Shared by the standalone inverse-NTT kernel below and the
+    fused re-rank kernel (`kernels/ntt/fused.py`), which absorbs the inverse
+    NTT of its accumulators so both run the exact same integer ops —
+    bit-identity between the fused and staged pipelines holds by construction.
+    """
     bt = a.shape[0]
     t = 1
     m = n
@@ -65,7 +69,12 @@ def _inv_kernel(x_ref, ipsi_ref, o_ref, *, q: int, mu: int, n: int, n_inv: int):
         ).reshape(bt, n)
         t *= 2
         m = h
-    o_ref[...] = modring.mod_mul(a, jnp.int32(n_inv), q, mu)
+    return modring.mod_mul(a, jnp.int32(n_inv), q, mu)
+
+
+def _inv_kernel(x_ref, ipsi_ref, o_ref, *, q: int, mu: int, n: int, n_inv: int):
+    o_ref[...] = inv_butterflies(x_ref[...], ipsi_ref[...], q=q, mu=mu, n=n,
+                                 n_inv=n_inv)
 
 
 def _pointwise_kernel(a_ref, b_ref, o_ref, *, q: int, mu: int):
@@ -126,4 +135,4 @@ def pointwise_mul_pallas(a, b, ctx: PrimeCtx, *, interpret: bool = True):
     )(a, b)
 
 
-__all__ = ["ntt_pallas", "pointwise_mul_pallas"]
+__all__ = ["ntt_pallas", "pointwise_mul_pallas", "inv_butterflies"]

@@ -55,6 +55,12 @@ def _fused_rotate_hadamard_ref(polys, tw, f0, f1, ctx: PrimeCtx):
                             ctx.q, ctx.mu, axis=2))
 
 
+@functools.partial(jax.jit, static_argnames=("ctx",))
+def _fused_rotate_hadamard_intt_ref(polys, tw, f0, f1, ctx: PrimeCtx):
+    acc0, acc1 = _fused_rotate_hadamard_ref(polys, tw, f0, f1, ctx)
+    return _ref.ntt_inv_ref(acc0, ctx), _ref.ntt_inv_ref(acc1, ctx)
+
+
 def _resolve(use_pallas):
     """None -> auto: Pallas on TPU, XLA reference path elsewhere (tests pass
     use_pallas=True explicitly to exercise the kernel in interpret mode)."""
@@ -116,6 +122,27 @@ def fused_rotate_hadamard(polys, tw, f0, f1, ctx: PrimeCtx, *,
                                       interpret=_interpret())
 
 
+def fused_rotate_hadamard_intt(polys, tw, f0, f1, ctx: PrimeCtx, *,
+                               use_pallas=None):
+    """`fused_rotate_hadamard` with the per-prime inverse NTT absorbed: the
+    returned (acc0, acc1) are coefficient-domain result-ciphertext
+    components, (B, num_ct, N) each.
+
+    On the Pallas path the inverse butterfly network runs inside the same
+    kernel while the accumulator tile is still VMEM-resident (no HBM
+    round-trip between accumulate and iNTT — the batch-8 Hadamard/iNTT
+    bottleneck); the fallback composes the jitted XLA reference fused op
+    with the reference inverse NTT.  Both paths run the exact same integer
+    ops as the staged rotate/Hadamard + `ntt_inv` pipeline, so all three
+    are bit-identical.
+    """
+    use_pallas = _resolve(use_pallas)
+    if not use_pallas:
+        return _fused_rotate_hadamard_intt_ref(polys, tw, f0, f1, ctx)
+    return _fused.fused_rerank_intt_pallas(polys, tw, f0, f1, ctx,
+                                           interpret=_interpret())
+
+
 def negacyclic_mul(a, b, ctx: PrimeCtx, *, use_pallas=None):
     """a * b in Z_q[X]/(X^N + 1)."""
     use_pallas = _resolve(use_pallas)
@@ -126,4 +153,4 @@ def negacyclic_mul(a, b, ctx: PrimeCtx, *, use_pallas=None):
 
 
 __all__ = ["ntt_fwd", "ntt_inv", "pointwise_mul", "fused_rotate_hadamard",
-           "negacyclic_mul"]
+           "fused_rotate_hadamard_intt", "negacyclic_mul"]

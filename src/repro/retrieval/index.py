@@ -69,21 +69,66 @@ class FlatIndex:
         """Gather embedding rows by global id (host-driven, small batches)."""
         return jnp.take(self.embeddings, jnp.asarray(ids), axis=0)
 
-    def candidate_cache(self, rlwe_params):
+    def candidate_cache(self, rlwe_params, config=None):
         """NTT-domain candidate cache for this index under ``rlwe_params``
-        (see crypto.rlwe.CandidateCache): every document's reversed-chunk
-        plaintext forward-NTT'd once, so the encrypted re-rank never re-packs
-        or re-NTTs candidates per request.  Built on first use and memoized
-        per RlweParams *value*; costs 4 * P * N bytes per chunk per row."""
+        (see crypto.rlwe): every document's reversed-chunk plaintext
+        forward-NTT'd once, so the encrypted re-rank never re-packs or
+        re-NTTs candidates per request.  Built on first use and memoized per
+        (RlweParams *value*, config) pair.
+
+        ``config=None`` builds the dense `rlwe.CandidateCache` (the whole
+        pool device-resident: 4 * P * N bytes per chunk per row — fine up to
+        a few thousand documents).  Passing an `rlwe.CandidateCacheConfig`
+        builds the corpus-scale `rlwe.ShardedCandidateCache` instead: shard
+        assignment happens here at index-build time (contiguous global-id
+        ranges, same layout as the mesh row sharding of ``embeddings``), and
+        when the index is mesh-sharded the pinned hot shards inherit a
+        row sharding over the same mesh axes (documents per shard must
+        divide evenly over the mesh row shards; otherwise shards stay
+        unsharded on device)."""
         from repro.crypto import rlwe
 
-        key = rlwe.params_key(rlwe_params)
+        pk = rlwe.params_key(rlwe_params)
+        key = (pk, config)
         cache = self._cand_caches.get(key)
         if cache is None:
-            cache = rlwe.build_candidate_cache(rlwe_params,
-                                               np.asarray(self.embeddings))
+            # the packed pool (corpus pack + forward NTT) depends only on
+            # the params value: any existing cache for pk donates its pool
+            # and the new config is just a re-view, not a re-build
+            donor = next((c for (p, _), c in self._cand_caches.items()
+                          if p == pk), None)
+            if config is None:
+                cache = (rlwe.densify_candidate_cache(donor)
+                         if donor is not None else
+                         rlwe.build_candidate_cache(
+                             rlwe_params, np.asarray(self.embeddings)))
+            else:
+                sharding = self._shard_sharding(rlwe_params, config)
+                cache = (rlwe.shard_candidate_cache(donor, config, sharding)
+                         if donor is not None else
+                         rlwe.build_sharded_candidate_cache(
+                             rlwe_params, np.asarray(self.embeddings),
+                             config=config, sharding=sharding))
             self._cand_caches[key] = cache
         return cache
+
+    def peek_candidate_cache(self, rlwe_params, config=None):
+        """The memoized cache for (params value, config) if already built,
+        else None — never triggers a build (stats/observability paths)."""
+        from repro.crypto import rlwe
+
+        return self._cand_caches.get((rlwe.params_key(rlwe_params), config))
+
+    def _shard_sharding(self, rlwe_params, config):
+        """NamedSharding for a pinned cache shard (doc axis over the mesh
+        row axes), or None when the index is unsharded / indivisible."""
+        if self.mesh is None:
+            return None
+        shard_docs = config.resolve_shard_docs(self.num_rows)
+        n_shards = int(np.prod([self.mesh.shape[a] for a in self.row_axes]))
+        if shard_docs % n_shards or self.num_rows % shard_docs:
+            return None
+        return NamedSharding(self.mesh, P(self.row_axes, None, None, None))
 
 
 __all__ = ["FlatIndex"]

@@ -18,6 +18,7 @@ The batched path is bit-compatible with the one-query `run_remoterag` driver:
 identical docs, ids and wire bytes at any batch size (tests/test_serve.py).
 """
 
+from repro.serve.batching import CandidateCacheConfig, ShardedCandidateCache
 from repro.serve.engine import EngineConfig, ServeEngine, ServeResult
 from repro.serve.metrics import ServeMetrics
 from repro.serve.session import PlanCache, Session, SessionManager
@@ -25,4 +26,5 @@ from repro.serve.session import PlanCache, Session, SessionManager
 __all__ = [
     "EngineConfig", "ServeEngine", "ServeResult", "ServeMetrics",
     "PlanCache", "Session", "SessionManager",
+    "CandidateCacheConfig", "ShardedCandidateCache",
 ]

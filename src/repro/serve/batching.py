@@ -71,13 +71,20 @@ def topk_batch(index: FlatIndex, perturbed: np.ndarray, kprime: int,
 # the single-query ops there are defined as the B=1 slices of the batch
 # versions, so there is exactly one implementation of each. Re-exported
 # here because this module is the serve layer's batching surface.
+# `encrypted_scores_cached_batch` accepts the dense CandidateCache or the
+# corpus-scale ShardedCandidateCache (batched lanes then gather only their
+# k' candidates' rows from the shard pool instead of assuming a resident
+# dense block).
 pack_candidates_batch = rlwe.pack_candidates_batch
 encrypted_scores_batch = rlwe.encrypted_scores_batch
 encrypted_scores_batch_stacked = rlwe.encrypted_scores_batch_stacked
 encrypted_scores_cached_batch = rlwe.encrypted_scores_cached_batch
 decrypt_scores_batch = rlwe.decrypt_scores_batch
+CandidateCacheConfig = rlwe.CandidateCacheConfig
+ShardedCandidateCache = rlwe.ShardedCandidateCache
 
 
 __all__ = ["perturb_batch", "topk_batch", "pack_candidates_batch",
            "encrypted_scores_batch", "encrypted_scores_batch_stacked",
-           "encrypted_scores_cached_batch", "decrypt_scores_batch"]
+           "encrypted_scores_cached_batch", "decrypt_scores_batch",
+           "CandidateCacheConfig", "ShardedCandidateCache"]

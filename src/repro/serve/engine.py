@@ -35,6 +35,7 @@ import jax
 
 from repro.core import protocol
 from repro.crypto import paillier as pai
+from repro.crypto import rlwe
 from repro.retrieval.index import FlatIndex
 from repro.serve import batching
 from repro.serve.metrics import ServeMetrics
@@ -47,6 +48,13 @@ class EngineConfig:
     max_wait_s: float = 0.02    # deadline trigger (age of a group's head)
     sequential: bool = False    # comparison path: loop run_remoterag
     use_pallas: Optional[bool] = None
+    # RLWE re-rank candidate cache: True = serve from the index's NTT-domain
+    # cache, False = cold per-request packing (bit-identical reference).
+    use_candidate_cache: bool = True
+    # None = dense device-resident cache; an rlwe.CandidateCacheConfig
+    # selects the sharded corpus-scale cache (shard size, device-memory
+    # budget for LRU-pinned hot shards, pin policy).
+    cache_config: Optional["rlwe.CandidateCacheConfig"] = None
 
 
 @dataclasses.dataclass
@@ -72,6 +80,11 @@ class ServeResult:
 class ServeEngine:
     """Multi-tenant front end over one RemoteRagCloud."""
 
+    config: EngineConfig
+    sessions: SessionManager
+    cloud: protocol.RemoteRagCloud
+    metrics: ServeMetrics
+
     def __init__(self, index: FlatIndex, *, config: EngineConfig = None,
                  sessions: Optional[SessionManager] = None,
                  clock=time.monotonic):
@@ -80,7 +93,9 @@ class ServeEngine:
         self.sessions = SessionManager() if sessions is None else sessions
         self.cloud = protocol.RemoteRagCloud(
             index, rlwe_params=self.sessions.rlwe_params,
-            use_pallas=self.config.use_pallas)
+            use_pallas=self.config.use_pallas,
+            use_candidate_cache=self.config.use_candidate_cache,
+            cache_config=self.config.cache_config)
         self.metrics = ServeMetrics()
         self._clock = clock
         self._ids = itertools.count()
@@ -119,6 +134,16 @@ class ServeEngine:
     @property
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
+
+    def cache_stats(self) -> Optional[dict]:
+        """LRU / gather counters of the sharded candidate cache (None for
+        the dense cache, cold packing, or before the lazy build — this
+        never triggers the build itself)."""
+        cache = self.cloud.index.peek_candidate_cache(
+            self.cloud.rlwe_params, self.cloud.cache_config)
+        if isinstance(cache, rlwe.ShardedCandidateCache):
+            return cache.stats()
+        return None
 
     # -- dispatch -----------------------------------------------------------
 
@@ -207,8 +232,10 @@ class ServeEngine:
                                   use_pallas=self.config.use_pallas)
         cand_ids = np.asarray(res.indices)                    # (B, k')
         # ... and one batched encrypted re-rank.  The RLWE path hits the
-        # index's NTT-domain candidate cache: no embedding-row gather to
-        # host, no per-request packing/forward NTTs — only per-request work.
+        # index's NTT-domain candidate cache — dense (one device take) or
+        # sharded (batched lanes gather only their k' rows from the shard
+        # pool, LRU-pinning hot shards) — no per-request packing or
+        # candidate forward NTTs either way.
         if backend == "rlwe":
             cache = self.cloud.candidate_cache
             if cache is not None:
