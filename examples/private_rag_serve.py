@@ -60,6 +60,12 @@ def main() -> None:
                          "the sharded cache (0 = stream-only, no pinning; "
                          "default: unbounded).  Implies --cache-shard-docs' "
                          "sharded mode when set")
+    ap.add_argument("--sync-admission", action="store_true",
+                    help="sharded cache: use the deterministic legacy "
+                         "admission mode (synchronous first-touch LRU, "
+                         "copy in the request path) instead of the default "
+                         "async frequency-aware admitter (2nd-touch policy, "
+                         "background H2D copy, engine prefetch overlap)")
     args = ap.parse_args()
 
     cache_config = None
@@ -68,7 +74,8 @@ def main() -> None:
         budget = (None if args.cache_budget_mb is None
                   else int(args.cache_budget_mb * 2**20))
         cache_config = rlwe.CandidateCacheConfig(
-            shard_docs=args.cache_shard_docs, max_resident_bytes=budget)
+            shard_docs=args.cache_shard_docs, max_resident_bytes=budget,
+            async_admission=not args.sync_admission)
 
     rng = np.random.default_rng(0)
     tok = HashTokenizer(vocab_size=8192)
@@ -117,6 +124,7 @@ def main() -> None:
     results = engine.drain()
 
     for res in results:
+        assert res.ok, f"dispatch failed: {res.error}"
         qtext, q_emb = q_embs[res.request_id]
         oracle = np.argsort(-(embs @ q_emb), kind="stable")[:K]
         recall = len(set(res.ids.tolist()) & set(oracle.tolist())) / K
@@ -139,6 +147,12 @@ def main() -> None:
               f"resident {stats['resident_bytes'] / 2**20:.1f} MiB "
               f"(peak {stats['peak_resident_bytes'] / 2**20:.1f}) "
               f"of {stats['pool_bytes'] / 2**20:.1f} MiB pool")
+        print(f"admission: {stats['admissions']} total "
+              f"({stats['async_admissions']} async, "
+              f"{stats['pending_admissions']} in flight), "
+              f"{stats['prefetches']} prefetched touches, "
+              f"{stats['policy_deferrals']} deferred below threshold, "
+              f"{stats['admit_dropped']} dropped at the queue cap")
 
 
 if __name__ == "__main__":

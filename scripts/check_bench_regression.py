@@ -10,10 +10,16 @@ and fails if
     batch 8 is more than ``max_sharded_ratio`` (default 1.3x) slower than
     dense-cache scoring, or the sharded layout's peak device footprint is
     not at least ``min_mem_reduction`` (default 4x) smaller than the dense
-    cache.
+    cache, or
+  * the single default-policy config (async, frequency-aware admission) is
+    more than ``max_skewed_ratio`` (default 1.2x) slower than dense under
+    skewed ids, or more than ``max_uniform_ratio`` (default 1.3x) slower
+    under uniform ids, at batch 8 — the both-regimes guarantee: one config
+    must never regress to synchronous-admission churn in either regime.
 
     scripts/check_bench_regression.py [BENCH_rlwe.json] [min_speedup=1.0]
         [max_sharded_ratio=1.3] [min_mem_reduction=4.0]
+        [max_skewed_ratio=1.2] [max_uniform_ratio=1.3]
 """
 
 from __future__ import annotations
@@ -82,11 +88,43 @@ def _check_sharded(sharded: dict, max_ratio: float,
     return failures
 
 
+def _check_default_config(sharded: dict, max_skewed: float,
+                          max_uniform: float) -> int:
+    """Both-regimes gate for the ONE default-policy config: a sharded-cache
+    JSON without this section fails (the gate must not silently pass after
+    a results-key rename), as does either regime's batch-8 ratio."""
+    section = sharded.get("default_config")
+    if section is None:
+        print("FAIL default_config: sharded results lack the both-regimes "
+              "section — the one-config gate did not run", file=sys.stderr)
+        return 1
+    failures = 0
+    for regime, bound in (("skewed", max_skewed), ("uniform", max_uniform)):
+        row = section.get(regime, {})
+        ratio = row.get("ratio_vs_dense_b8")
+        if ratio is None or ratio > bound:
+            print(f"FAIL default_config/{regime}: batch-8 scoring {ratio}x "
+                  f"dense > {bound}x under the default admission policy "
+                  f"(dense {row.get('dense_us')}us, "
+                  f"adaptive {row.get('adaptive_us')}us) — async/"
+                  f"frequency-aware admission has regressed to request-path "
+                  f"churn", file=sys.stderr)
+            failures += 1
+        else:
+            print(f"ok   default_config/{regime}: one-config batch-8 "
+                  f"within {ratio:.2f}x of dense "
+                  f"({row.get('adaptive_us'):.0f}us vs "
+                  f"{row.get('dense_us'):.0f}us)")
+    return failures
+
+
 def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_rlwe.json"
     min_speedup = float(sys.argv[2]) if len(sys.argv) > 2 else 1.0
     max_ratio = float(sys.argv[3]) if len(sys.argv) > 3 else 1.3
     min_mem_reduction = float(sys.argv[4]) if len(sys.argv) > 4 else 4.0
+    max_skewed = float(sys.argv[5]) if len(sys.argv) > 5 else 1.2
+    max_uniform = float(sys.argv[6]) if len(sys.argv) > 6 else 1.3
     try:
         with open(path) as f:
             data = json.load(f)
@@ -101,6 +139,7 @@ def main() -> int:
     sharded = results.get("sharded")
     if sharded is not None:
         failures += _check_sharded(sharded, max_ratio, min_mem_reduction)
+        failures += _check_default_config(sharded, max_skewed, max_uniform)
     else:
         print("note: no sharded section in results (pre-sharded-cache "
               "JSON); skipping the sharded gates")

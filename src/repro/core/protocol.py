@@ -102,10 +102,12 @@ class RemoteRagCloud:
     clouds/engines), so the per-request encrypted workload touches only
     per-request data.  ``cache_config`` (an `rlwe.CandidateCacheConfig`)
     selects the corpus-scale sharded cache — host-pooled shards, LRU-pinned
-    device-resident hot set, per-request gather of only the k' selected
-    candidates — instead of the dense device-resident pool;
-    ``use_candidate_cache=False`` restores cold per-request packing (the
-    reference path).  All three are bit-identical."""
+    device-resident hot set under the config's admission policy (async
+    background admitter + 2nd-touch frequency threshold by default),
+    per-request gather of only the k' selected candidates — instead of the
+    dense device-resident pool; ``use_candidate_cache=False`` restores cold
+    per-request packing (the reference path).  All three are bit-identical,
+    whatever the admission history."""
 
     def __init__(self, index: FlatIndex, *,
                  rlwe_params: Optional[rlwe.RlweParams] = None,

@@ -28,7 +28,12 @@ cache layouts share one packed pool: the dense `CandidateCache` keeps the
 whole corpus resident in device memory, and the corpus-scale
 `ShardedCandidateCache` partitions it into host-pooled shards with an
 LRU-pinned device-resident hot set and per-request on-demand gather of only
-the k' selected candidates' rows (see CandidateCacheConfig).
+the k' selected candidates' rows.  Shard admission is frequency-aware and
+asynchronous by default — a background admitter performs the shard-sized
+host->device copy off the request path and atomically swaps the shard in,
+admitting only shards whose decayed touch counter reaches a threshold (see
+CandidateCacheConfig; `async_admission=False` restores the deterministic
+synchronous first-touch LRU for replay tests).
 
 Correctness budget (validated in `RlweParams.validate`): every *extraction*
 coefficient of m*p is an inner product of unit-norm vectors scaled by
@@ -44,6 +49,8 @@ import collections
 import dataclasses
 import functools
 import math
+import threading
+import time
 from typing import Optional, Sequence
 
 import numpy as np
@@ -446,25 +453,88 @@ class CandidateCacheConfig:
                               document ranges (specify one; ``shard_docs``
                               wins).  Default: 8 shards.
     max_resident_bytes        device-memory budget for LRU-pinned hot shards.
-                              ``None`` = unbounded (every touched shard stays
-                              resident), ``0`` = stream-only (no pinning;
-                              each request gathers its k' rows from the host
-                              pool on demand).
-    pin_on_access             admit a missed shard to device residency
-                              (subject to the budget).  ``False`` keeps the
+                              ``None`` = unbounded (every admitted shard
+                              stays resident), ``0`` = stream-only (no
+                              admission; each request gathers its k' rows
+                              from the host pool on demand).
+    pin_on_access             allow admission of missed shards to device
+                              residency (subject to the budget and the
+                              admission policy below).  ``False`` keeps the
                               resident set fixed to whatever `pin` loaded.
+    async_admission           True (default): admissions run on a background
+                              admitter thread — the shard-sized host->device
+                              copy happens off the request path and the
+                              shard is atomically swapped into the resident
+                              set when the copy completes; `gather` never
+                              blocks on an in-flight admission (it streams
+                              the k' rows from the host pool until the shard
+                              is resident).  False: the deterministic legacy
+                              mode — synchronous, unconditional first-touch
+                              admission inside `gather`, preserving the
+                              bit-identical LRU traces the determinism tests
+                              pin down.
+    admit_threshold           (async mode) admit a shard only on its
+                              ``admit_threshold``-th touch within the decay
+                              window — the default 2 ("second touch") keeps
+                              one-shot uniform sweeps from churning the
+                              resident set while repeat traffic still admits
+                              after one repeat.
+    admit_window              (async mode) decayed-counter window: every
+                              ``admit_window`` counted shard touches, all
+                              touch counters are halved (and sub-1 counters
+                              dropped), so stale popularity ages out.
+                              ``None`` (default) resolves at build time to
+                              ``max(8, num_shards)`` — the window that
+                              separates the regimes: traffic spread
+                              uniformly over all shards touches each shard
+                              about once per window, so its counter decays
+                              before the second touch and nothing is ever
+                              admitted (zero churn), while traffic
+                              concentrated on a minority of shards
+                              re-touches them several times per window and
+                              admits after one repeat.
+    max_pending_admissions    (async mode) bound on queued background
+                              admissions; further admission requests are
+                              dropped (and counted) until the queue drains,
+                              so a regime shift cannot build an unbounded
+                              copy backlog.
 
-    Choosing a policy: an admission is a shard-sized host->device copy in
-    the request path, so ``pin_on_access`` pays off only when accesses have
-    locality (repeat tenants hitting the same shards).  Under uniform
-    access whose working set exceeds the budget it is pure churn — use
-    stream-only (``max_resident_bytes=0``) or ``pin_on_access=False`` with
-    explicit `ShardedCandidateCache.pin` placement instead.
+    One config for both regimes: with async admission the admission cost is
+    off the request path, so the default policy serves *skewed* traffic
+    (hot shards admitted after one repeat touch, then gathered device-side)
+    and *uniform* traffic (requests stream from the host pool; background
+    churn is bounded by the queue cap) without per-regime tuning —
+    `benchmarks/rlwe_bench.py` gates both regimes under this one default.
+    Stream-only (``max_resident_bytes=0``) and operator placement
+    (``pin_on_access=False`` + explicit `ShardedCandidateCache.pin`) remain
+    available for fixed deployments.
     """
     shard_docs: Optional[int] = None
     num_shards: Optional[int] = None
     max_resident_bytes: Optional[int] = None
     pin_on_access: bool = True
+    async_admission: bool = True
+    admit_threshold: int = 2
+    admit_window: Optional[int] = None
+    max_pending_admissions: int = 4
+
+    def __post_init__(self):
+        # CLI-reachable knobs: fail loudly at construction, not mid-serve
+        if self.admit_threshold < 1:
+            raise ValueError(
+                f"admit_threshold must be >= 1, got {self.admit_threshold}")
+        if self.admit_window is not None and self.admit_window < 1:
+            raise ValueError(
+                f"admit_window must be >= 1, got {self.admit_window}")
+        if self.max_pending_admissions < 1:
+            raise ValueError(f"max_pending_admissions must be >= 1, got "
+                             f"{self.max_pending_admissions}")
+
+    def resolve_admit_window(self, num_shards: int) -> int:
+        """``None`` -> the regime-separating auto window (see class doc)."""
+        if self.admit_window is not None:
+            return self.admit_window
+        return max(8, num_shards)
 
     def resolve_shard_docs(self, num_docs: int) -> int:
         if self.shard_docs is not None:
@@ -496,13 +566,29 @@ class ShardedCandidateCache:
 
     Gathered rows are the exact pool rows the dense cache would `jnp.take`,
     so sharded scoring is bit-identical to the dense cache and to cold
-    packing regardless of the resident set, eviction history, or budget.
+    packing regardless of the resident set, eviction history, admission
+    policy, or any in-flight background admission.
 
-    Eviction is deterministic: shards are admitted in access order (MRU at
-    the back of an OrderedDict), evicted oldest-first whenever the resident
-    set exceeds the budget; a re-accessed shard is re-pinned the same way.
-    ``hits``/``misses`` count shard-group lookups (one per distinct shard
-    touched by a gather), not individual documents.
+    Admission policy (see `CandidateCacheConfig`): in the default *async*
+    mode a missed shard is only a candidate for residency — its decayed
+    touch counter must reach ``admit_threshold`` (2nd touch by default)
+    before an admission is enqueued to the background admitter thread,
+    which stages the host->device copy into a private buffer and atomically
+    swaps the shard into the resident set under the cache lock.  `gather`
+    never waits: until the swap it streams the selected rows from the host
+    pool (double-buffered admission — the request path and the in-flight
+    copy never share a buffer).  `prefetch` lets the serving engine enqueue
+    those admissions as soon as the batched top-k' candidate ids are known,
+    so the copy overlaps the request's encrypt/Hadamard compute; a prefetch
+    counts the touch, and the request's own `gather` of the same ids does
+    not double-count it.
+
+    With ``async_admission=False`` eviction/admission is the deterministic
+    legacy mode: shards are admitted synchronously on first touch in access
+    order (MRU at the back of an OrderedDict), evicted oldest-first
+    whenever the resident set exceeds the budget; a re-accessed shard is
+    re-pinned the same way.  ``hits``/``misses`` count shard-group lookups
+    (one per distinct shard touched by a gather), not individual documents.
     """
     params: RlweParams
     twiddles: jnp.ndarray          # (P, cpt, N) — same as the dense cache
@@ -516,6 +602,10 @@ class ShardedCandidateCache:
     shards: list                   # views into ``pool``, <=shard_docs docs each
     max_resident_bytes: Optional[int] = None
     pin_on_access: bool = True
+    async_admission: bool = True
+    admit_threshold: int = 2
+    admit_window: int = 64
+    max_pending_admissions: int = 4
     sharding: Optional[object] = None   # jax.sharding.Sharding for pinned shards
     _resident: collections.OrderedDict = dataclasses.field(
         default_factory=collections.OrderedDict, repr=False)
@@ -524,6 +614,27 @@ class ShardedCandidateCache:
     evictions: int = 0
     gathered_bytes: int = 0        # host->device on-demand row traffic
     peak_resident_bytes: int = 0
+    admissions: int = 0            # completed admissions (sync + async + pin)
+    async_admissions: int = 0      # ... of which completed on the admitter
+    prefetches: int = 0            # shard touches recorded via `prefetch`
+    admit_enqueued: int = 0        # admissions handed to the admitter
+    admit_dropped: int = 0         # admission requests dropped (queue full)
+    policy_deferrals: int = 0      # touches below admit_threshold (no admit)
+
+    def __post_init__(self):
+        # Admitter state lives outside the dataclass fields: one lock
+        # guards the resident set + policy counters; the condition wakes
+        # the (lazily started) admitter thread and `flush` waiters.
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._queue: collections.deque = collections.deque()
+        self._inflight: set = set()       # enqueued or mid-copy shard ids
+        self._touch_counts: dict = {}     # shard id -> decayed touch count
+        self._touches = 0                 # counted touches since build
+        self._prefetched: set = set()     # touches already counted upstream
+        self._worker: Optional[threading.Thread] = None
+        self._closed = False
+        self._admit_hook = None           # test seam: called(s) pre-swap
 
     @property
     def num_shards(self) -> int:
@@ -534,25 +645,43 @@ class ShardedCandidateCache:
         """Total host pool size — what the dense cache would pin on device."""
         return sum(s.nbytes for s in self.shards)
 
+    def _resident_bytes_locked(self) -> int:
+        return sum(int(v.size) * 4 for v in self._resident.values())
+
     @property
     def resident_bytes(self) -> int:
-        return sum(int(v.size) * 4 for v in self._resident.values())
+        with self._lock:
+            return self._resident_bytes_locked()
 
     @property
     def resident_shards(self) -> tuple:
         """Resident shard ids, LRU -> MRU (deterministic under a fixed
         access trace; asserted in tests)."""
-        return tuple(self._resident.keys())
+        with self._lock:
+            return tuple(self._resident.keys())
 
     def stats(self) -> dict:
+        # one lock scope: the admitter swaps/evicts concurrently, so every
+        # _resident-derived value must come from the same snapshot
+        with self._lock:
+            resident_bytes = self._resident_bytes_locked()
+            resident_shards = tuple(self._resident.keys())
+            pending = len(self._inflight)
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,
                 "gathered_bytes": self.gathered_bytes,
-                "resident_bytes": self.resident_bytes,
+                "resident_bytes": resident_bytes,
                 "peak_resident_bytes": self.peak_resident_bytes,
                 "pool_bytes": self.pool_nbytes,
                 "num_shards": self.num_shards,
-                "resident_shards": self.resident_shards}
+                "resident_shards": resident_shards,
+                "admissions": self.admissions,
+                "async_admissions": self.async_admissions,
+                "prefetches": self.prefetches,
+                "admit_enqueued": self.admit_enqueued,
+                "admit_dropped": self.admit_dropped,
+                "policy_deferrals": self.policy_deferrals,
+                "pending_admissions": pending}
 
     def check_compatible(self, params: RlweParams, n_dim=None) -> None:
         _check_cache_compatible(self, params, n_dim)
@@ -560,30 +689,190 @@ class ShardedCandidateCache:
     def shard_of(self, doc_id: int) -> int:
         return int(doc_id) // self.shard_docs
 
+    def _shard_ids(self, flat: np.ndarray) -> np.ndarray:
+        """Validated document ids -> shard ids (the single id->shard
+        mapping `gather` and `prefetch` share)."""
+        if flat.size and (flat.min() < 0 or flat.max() >= self.num_docs):
+            # negative ids would alias shards[-1] via Python indexing and
+            # silently gather the wrong document; fail loudly instead
+            raise IndexError(
+                f"candidate ids must be in [0, {self.num_docs}); got "
+                f"[{flat.min()}, {flat.max()}]")
+        return flat // self.shard_docs
+
     def pin(self, shard_id: int) -> None:
         """Explicitly admit a shard to device residency (LRU position =
-        most-recent); evicts oldest shards if over budget."""
-        self._admit(int(shard_id))
+        most-recent); evicts oldest shards if over budget.  Always
+        synchronous — operator placement wants the shard resident on
+        return, whatever the background policy."""
+        with self._lock:
+            self._admit_locked(int(shard_id))
 
-    def _admit(self, s: int) -> None:
-        if s in self._resident:
-            self._resident.move_to_end(s)
-            return
+    # -- admission: shared swap-in (caller holds the lock) -------------------
+
+    def _fits_budget(self, s: int) -> bool:
+        return (self.max_resident_bytes is None
+                or self.shards[s].nbytes <= self.max_resident_bytes)
+
+    def _swap_in_locked(self, s: int, arr) -> None:
+        """Atomically install a staged device copy of shard ``s``: evict
+        LRU-first down to budget, then publish.  The staging buffer was
+        built outside the lock (and, on the async path, off the request
+        thread), so residency never exceeds the budget and `gather` never
+        observes a half-copied shard — it streams from the host pool until
+        this swap."""
         nbytes = self.shards[s].nbytes
         if self.max_resident_bytes is not None:
-            if nbytes > self.max_resident_bytes:
-                return              # shard alone exceeds the budget: stream
-            # evict BEFORE loading so true device residency never exceeds
-            # the budget, even transiently during the admission copy
-            while self.resident_bytes + nbytes > self.max_resident_bytes:
+            while (self._resident_bytes_locked() + nbytes
+                   > self.max_resident_bytes):
                 self._resident.popitem(last=False)
                 self.evictions += 1
+        self._resident[s] = arr
+        self.admissions += 1
+        self.peak_resident_bytes = max(self.peak_resident_bytes,
+                                       self._resident_bytes_locked())
+
+    def _stage_copy(self, s: int):
         arr = jnp.asarray(self.shards[s])
         if self.sharding is not None:
             arr = jax.device_put(arr, self.sharding)
-        self._resident[s] = arr
-        self.peak_resident_bytes = max(self.peak_resident_bytes,
-                                       self.resident_bytes)
+        return arr
+
+    def _admit_locked(self, s: int) -> None:
+        """Legacy synchronous admission (also `pin`): copy + swap inline."""
+        if s in self._resident:
+            self._resident.move_to_end(s)
+            return
+        if not self._fits_budget(s):
+            return                  # shard alone exceeds the budget: stream
+        self._swap_in_locked(s, self._stage_copy(s))
+
+    # -- admission: frequency-aware policy + background admitter -------------
+
+    def _touch_locked(self, s: int) -> None:
+        """Count one (non-prefetched) touch of a missed shard and enqueue a
+        background admission when the decayed counter reaches the
+        threshold."""
+        if self.max_resident_bytes == 0 or not self._fits_budget(s):
+            return                  # stream-only / oversized: never admit
+        self._touches += 1
+        if self._touches % self.admit_window == 0:
+            # decay: halve every counter each window; sub-1 entries age out
+            self._touch_counts = {k: v / 2
+                                  for k, v in self._touch_counts.items()
+                                  if v >= 1.0}
+        count = self._touch_counts.get(s, 0.0) + 1.0
+        self._touch_counts[s] = count
+        if count < self.admit_threshold:
+            self.policy_deferrals += 1
+            return
+        if s in self._resident or s in self._inflight:
+            return
+        if len(self._queue) >= self.max_pending_admissions:
+            self.admit_dropped += 1   # counter keeps it eligible next touch
+            return
+        self._touch_counts.pop(s, None)
+        self._inflight.add(s)
+        self._queue.append(s)
+        self.admit_enqueued += 1
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(
+                target=self._admit_worker, name="shard-admitter", daemon=True)
+            self._worker.start()
+        self._cv.notify_all()
+
+    def _admit_worker(self) -> None:
+        """Background admitter: drain the queue one shard at a time.  The
+        H2D copy (`_stage_copy` + block_until_ready) runs outside the lock —
+        the request path keeps streaming from the host pool meanwhile — and
+        only the final swap takes the lock.  An idle worker retires after a
+        timeout (releasing its reference to the cache and pool); the next
+        enqueue respawns one — `_touch_locked` checks under the same lock,
+        so no admission can fall between a retiring and a spawning worker."""
+        while True:
+            with self._cv:
+                if not self._queue and not self._closed:
+                    self._cv.wait(timeout=60.0)
+                if not self._queue:       # closed, or idled out: retire
+                    self._worker = None
+                    return
+                s = self._queue.popleft()
+            try:
+                hook = self._admit_hook   # test seam: delay/observe the copy
+                if hook is not None:
+                    hook(s)
+                arr = self._stage_copy(s)
+                jax.block_until_ready(arr)   # the copy, off-request-path
+            except Exception:             # noqa: BLE001 — a failed copy must
+                arr = None                # not strand flush()/later admits
+            with self._cv:
+                self._inflight.discard(s)
+                if arr is None:
+                    pass                  # dropped; next touch retries
+                elif s in self._resident:
+                    self._resident.move_to_end(s)
+                elif self._fits_budget(s) and self.max_resident_bytes != 0:
+                    self._swap_in_locked(s, arr)
+                    self.async_admissions += 1
+                self._cv.notify_all()     # wake flush()
+
+    def prefetch(self, ids) -> int:
+        """Serving-engine admission hook: note the shard touches implied by
+        a batch's top-k' candidate ``ids`` and enqueue any admissions the
+        policy grants *now*, before the request's encrypt/Hadamard work, so
+        the background copy overlaps compute.  The subsequent `gather` of
+        the same ids does not double-count these touches.  Returns the
+        number of shards whose touch was recorded.  No-op (returns 0) when
+        admission is disabled or in synchronous legacy mode."""
+        if not (self.pin_on_access and self.async_admission):
+            return 0
+        flat = np.asarray(ids).reshape(-1)
+        shard_ids = self._shard_ids(flat)
+        if flat.size == 0:
+            return 0
+        touched = 0
+        with self._lock:
+            # one fresh credit set per batch: stale credits from a previous
+            # prefetch (e.g. a shard that became resident before its gather)
+            # must not suppress future miss accounting
+            self._prefetched = set()
+            for s in np.unique(shard_ids):
+                s = int(s)
+                if s in self._resident:
+                    continue          # gather will hit; nothing to admit
+                self._touch_locked(s)
+                self._prefetched.add(s)
+                self.prefetches += 1
+                touched += 1
+        return touched
+
+    def flush(self, timeout: float = 60.0) -> None:
+        """Block until every enqueued admission has completed (or timed
+        out).  Request paths never need this — it exists so tests and
+        benchmarks can observe the converged resident set."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while self._queue or self._inflight:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"shard admissions did not drain within {timeout}s "
+                        f"({len(self._queue)} queued, "
+                        f"{len(self._inflight)} in flight)")
+                self._cv.wait(remaining)
+
+    def close(self) -> None:
+        """Stop the admitter thread (pending admissions still complete).
+        Idempotent; the cache remains usable afterwards in streaming mode
+        (a later admission restarts the worker)."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        worker = self._worker
+        if worker is not None and worker.is_alive():
+            worker.join(timeout=60.0)
+        with self._cv:
+            self._closed = False      # allow lazy restart
 
     def gather(self, ids) -> jnp.ndarray:
         """On-demand gather of the selected candidates' cached rows:
@@ -592,18 +881,15 @@ class ShardedCandidateCache:
 
         Ids are grouped by shard; resident shards gather device-side
         (`jnp.take`), non-resident shards gather just the selected rows from
-        the host pool (and are LRU-admitted when ``pin_on_access``)."""
+        the host pool.  When ``pin_on_access``, a miss feeds the admission
+        policy: synchronous first-touch LRU admission in legacy mode
+        (``async_admission=False``), else a counted touch that may enqueue a
+        background admission — the gather itself never waits on the copy."""
         ids = np.asarray(ids)
         assert ids.ndim == 2, "ids must be (B, num_cands)"
         bsz, nc = ids.shape
         flat = ids.reshape(-1)
-        if flat.size and (flat.min() < 0 or flat.max() >= self.num_docs):
-            # negative ids would alias shards[-1] via Python indexing and
-            # silently gather the wrong document; fail loudly instead
-            raise IndexError(
-                f"candidate ids must be in [0, {self.num_docs}); got "
-                f"[{flat.min()}, {flat.max()}]")
-        shard_ids = flat // self.shard_docs
+        shard_ids = self._shard_ids(flat)
         local = flat - shard_ids * self.shard_docs
         order = np.argsort(shard_ids, kind="stable")      # group by shard
         uniq, starts = np.unique(shard_ids[order], return_index=True)
@@ -613,17 +899,25 @@ class ShardedCandidateCache:
             s = int(s)
             sel = order[lo:hi]
             loc = local[sel]
-            dev = self._resident.get(s)
+            with self._lock:                  # vs admitter swap/evict
+                dev = self._resident.get(s)
+                if dev is not None:
+                    self.hits += 1
+                    self._resident.move_to_end(s)         # LRU touch
+                    self._prefetched.discard(s)   # credit no longer needed
+                elif self.pin_on_access:
+                    if not self.async_admission:
+                        self._admit_locked(s)
+                    elif s in self._prefetched:
+                        self._prefetched.discard(s)   # counted at prefetch
+                    else:
+                        self._touch_locked(s)
             if dev is not None:
-                self.hits += 1
-                self._resident.move_to_end(s)             # LRU touch
                 rows = jnp.take(dev, jnp.asarray(loc), axis=0)
             else:
                 self.misses += 1
                 rows = jnp.asarray(self.shards[s][loc])   # host row gather
                 self.gathered_bytes += int(rows.size) * 4
-                if self.pin_on_access:
-                    self._admit(s)
             parts.append(rows)
         g = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
         inv = np.empty_like(order)
@@ -660,7 +954,12 @@ def _shard_pool(params: RlweParams, pool: np.ndarray, n_dim: int,
         num_docs=num_docs, stride=stride, cands_per_ct=cpt,
         num_chunks=chunks, shard_docs=shard_docs, pool=pool, shards=shards,
         max_resident_bytes=config.max_resident_bytes,
-        pin_on_access=config.pin_on_access, sharding=sharding)
+        pin_on_access=config.pin_on_access,
+        async_admission=config.async_admission,
+        admit_threshold=config.admit_threshold,
+        admit_window=config.resolve_admit_window(len(shards)),
+        max_pending_admissions=config.max_pending_admissions,
+        sharding=sharding)
 
 
 def build_sharded_candidate_cache(

@@ -75,6 +75,12 @@ def main() -> None:
     wall = time.monotonic() - t0
 
     for res in results:
+        if not res.ok:      # dispatch failed after retries: no transcript
+            print(json.dumps({
+                "request": res.request_id, "tenant": res.tenant,
+                "latency_s": round(res.latency_s, 3),
+                "error": res.error}))
+            continue
         q = queries[res.request_id]
         plain = np.argsort(-(emb @ q), kind="stable")[: args.k]
         recall = len(set(res.ids.tolist()) & set(plain.tolist())) / args.k

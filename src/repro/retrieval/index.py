@@ -85,7 +85,11 @@ class FlatIndex:
         when the index is mesh-sharded the pinned hot shards inherit a
         row sharding over the same mesh axes (documents per shard must
         divide evenly over the mesh row shards; otherwise shards stay
-        unsharded on device)."""
+        unsharded on device).  The config also carries the shard admission
+        policy (async background admitter, 2nd-touch frequency threshold —
+        see the `rlwe.CandidateCacheConfig` docstring); configs differing
+        only in policy share one packed pool but keep separate resident
+        sets, since the whole config is part of the memoization key."""
         from repro.crypto import rlwe
 
         pk = rlwe.params_key(rlwe_params)

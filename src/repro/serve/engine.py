@@ -6,8 +6,11 @@ two triggers — size (a compatible group reached `max_batch`) and deadline
 for that batch:
 
   module 1    vmapped DistanceDP perturbation (per-request PRNG keys)
-  module 2a   per-tenant query encryption (host), ONE batched score-top-k'
-              kernel invocation over the shared index, batched RLWE re-rank
+  module 2a   ONE batched score-top-k' kernel invocation over the shared
+              index (run first, so sharded-cache shard admissions can be
+              prefetched from the candidate ids — the background H2D copy
+              overlaps the per-tenant host encryption that follows), then
+              per-tenant query encryption (host), batched RLWE re-rank
               against the index's NTT-domain candidate cache (no per-request
               packing/forward NTTs) and batched decryption under per-tenant
               keys
@@ -18,6 +21,11 @@ shapes, which (n, k') pins down.  Every lane is bit-identical to the
 sequential `protocol.run_remoterag` driver — same docs, ids and wire bytes —
 so `EngineConfig(sequential=True)` exists purely as the latency/throughput
 comparison path.
+
+Failure handling: a dispatch that raises loses nothing — the popped
+requests go back to the head of their group queue for one retry
+(`EngineConfig.max_retries`), after which they come back as `ServeResult`
+error results; the batch is recorded in the metrics only on completion.
 """
 
 from __future__ import annotations
@@ -53,8 +61,14 @@ class EngineConfig:
     use_candidate_cache: bool = True
     # None = dense device-resident cache; an rlwe.CandidateCacheConfig
     # selects the sharded corpus-scale cache (shard size, device-memory
-    # budget for LRU-pinned hot shards, pin policy).
+    # budget for LRU-pinned hot shards, admission policy).
     cache_config: Optional["rlwe.CandidateCacheConfig"] = None
+    # retries per request after a failed dispatch before the request is
+    # returned as an error result (0 = fail immediately, never re-enqueue)
+    max_retries: int = 1
+    # bounded per-tenant latency/batch-size sample windows (exact totals
+    # for counts and wire bytes are kept regardless) — see serve.metrics
+    metrics_window: int = 8192
 
 
 @dataclasses.dataclass
@@ -64,6 +78,8 @@ class ServeRequest:
     embedding: np.ndarray
     key: jax.Array
     t_enqueue: float
+    group: tuple = ()           # queue key, kept for failure re-enqueue
+    retries: int = 0            # dispatch attempts already failed
 
 
 @dataclasses.dataclass
@@ -72,9 +88,16 @@ class ServeResult:
     tenant: str
     docs: List[bytes]
     ids: np.ndarray
-    transcript: protocol.ProtocolTranscript
+    transcript: Optional[protocol.ProtocolTranscript]
     latency_s: float
     batch_size: int
+    # None on success; the dispatch failure (repr) after retries exhausted.
+    # Failed requests are returned, never silently dropped.
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
 
 class ServeEngine:
@@ -85,7 +108,8 @@ class ServeEngine:
     cloud: protocol.RemoteRagCloud
     metrics: ServeMetrics
 
-    def __init__(self, index: FlatIndex, *, config: EngineConfig = None,
+    def __init__(self, index: FlatIndex, *,
+                 config: Optional[EngineConfig] = None,
                  sessions: Optional[SessionManager] = None,
                  clock=time.monotonic):
         self.config = EngineConfig() if config is None else config
@@ -96,7 +120,7 @@ class ServeEngine:
             use_pallas=self.config.use_pallas,
             use_candidate_cache=self.config.use_candidate_cache,
             cache_config=self.config.cache_config)
-        self.metrics = ServeMetrics()
+        self.metrics = ServeMetrics(window=self.config.metrics_window)
         self._clock = clock
         self._ids = itertools.count()
         # per-group FIFO queues keyed once at submit: dispatch pops from a
@@ -118,7 +142,12 @@ class ServeEngine:
         replay the noise and strip the perturbation; pass an explicit key
         only for replay/parity setups.
         """
-        assert tenant in self.sessions, f"no session for tenant {tenant!r}"
+        if tenant not in self.sessions:
+            # a real error, not an assert: `python -O` strips asserts and a
+            # missing session would then surface as an opaque KeyError deep
+            # inside dispatch (or worse, silently mis-batch)
+            raise KeyError(f"no open session for tenant {tenant!r}; call "
+                           f"open_session first")
         rid = next(self._ids)
         if key is None:
             key = jax.random.PRNGKey(secrets.randbits(63))
@@ -128,7 +157,7 @@ class ServeEngine:
             ServeRequest(
                 request_id=rid, tenant=tenant,
                 embedding=np.asarray(embedding, np.float32), key=key,
-                t_enqueue=self._clock()))
+                t_enqueue=self._clock(), group=group))
         return rid
 
     @property
@@ -182,16 +211,64 @@ class ServeEngine:
         return sorted(out, key=lambda r: r.request_id)
 
     def _dispatch(self, batch: Sequence[ServeRequest]) -> List[ServeResult]:
-        self.metrics.record_batch(len(batch))
+        """Run one batch through the protocol; never lose a request.
+
+        The batch is recorded in the metrics only after it completed — a
+        protocol failure must not leave a phantom batch in the dispatch
+        stats.  On failure every popped request is accounted for: requests
+        with retry budget left go back to the *head* of their group queue
+        (so a later step() re-dispatches them in order), the rest come back
+        as error results.  The sequential comparison path fails per lane,
+        so one poisoned request cannot sink its batchmates."""
+        results: List[ServeResult] = []
+        failed: List[tuple] = []            # (request, its exception)
         if self.config.sequential:
-            results = [self._run_one(r) for r in batch]
+            for req in batch:
+                try:
+                    results.append(self._run_one(req))
+                except Exception as e:      # noqa: BLE001 — lane-isolated
+                    failed.append((req, e))
         else:
-            results = self._run_batched(batch)
+            try:
+                results = self._run_batched(batch)
+            except Exception as e:          # noqa: BLE001 — batch-isolated
+                failed = [(req, e) for req in batch]
+        if not failed:
+            self.metrics.record_batch(len(batch))
         for res in results:
             self.metrics.record(res.tenant, latency_s=res.latency_s,
                                 batch_size=res.batch_size,
                                 transcript=res.transcript)
+        if failed:
+            results = results + self._fail_or_requeue(failed, len(batch))
         return results
+
+    def _fail_or_requeue(self, failed: Sequence[tuple],
+                         batch_size: int) -> List[ServeResult]:
+        """Failure tail of `_dispatch` (``failed`` is (request, exception)
+        pairs — each lane keeps *its own* failure): re-enqueue requests
+        with retry budget (at the head of their group, preserving request
+        order) and turn the rest into error results."""
+        self.metrics.record_dispatch_failure(len(failed))
+        retry = [(r, e) for r, e in failed
+                 if r.retries < self.config.max_retries]
+        dead = [(r, e) for r, e in failed
+                if r.retries >= self.config.max_retries]
+        for req, _ in reversed(retry):      # appendleft: keep id order
+            req.retries += 1
+            self._queues.setdefault(req.group,
+                                    collections.deque()).appendleft(req)
+        if retry:
+            self.metrics.record_retries(len(retry))
+        out = []
+        for req, err in dead:
+            self.metrics.record_error(req.tenant)
+            out.append(ServeResult(
+                request_id=req.request_id, tenant=req.tenant, docs=[],
+                ids=np.empty(0, np.int64), transcript=None,
+                latency_s=self._clock() - req.t_enqueue,
+                batch_size=batch_size, error=repr(err)))
+        return out
 
     # -- sequential comparison path ----------------------------------------
 
@@ -219,6 +296,21 @@ class ServeEngine:
         pert = batching.perturb_batch([r.key for r in batch], E,
                                       [u.plan.eps for u in users])
 
+        # module 2a, cloud half first: one top-k' kernel call for all lanes.
+        # Running it before the host-side encryption surfaces the candidate
+        # ids early so sharded-cache shard admissions can be prefetched —
+        # the background H2D copy then overlaps the RLWE encrypt work below
+        # (the ROADMAP's async-overlap item, applied to data movement).
+        # Bit-identity is unaffected: top-k' consumes only the perturbed
+        # embeddings, never the tenants' rng streams.
+        res = batching.topk_batch(self.cloud.index, pert, kprime,
+                                  use_pallas=self.config.use_pallas)
+        cand_ids = np.asarray(res.indices)                    # (B, k')
+        if backend == "rlwe":
+            cache = self.cloud.candidate_cache
+            if isinstance(cache, rlwe.ShardedCandidateCache):
+                cache.prefetch(cand_ids)
+
         # module 2a, user half: encrypt queries (host, submission order so
         # each tenant's rng stream matches the sequential path)
         wire_reqs = [
@@ -226,18 +318,13 @@ class ServeEngine:
                              enc_query=user.encrypt_query(req.embedding),
                              backend=backend)
             for user, req, pb in zip(users, batch, pert)]
-
-        # module 2a, cloud half: one top-k' kernel call for all lanes ...
-        res = batching.topk_batch(self.cloud.index, pert, kprime,
-                                  use_pallas=self.config.use_pallas)
-        cand_ids = np.asarray(res.indices)                    # (B, k')
-        # ... and one batched encrypted re-rank.  The RLWE path hits the
-        # index's NTT-domain candidate cache — dense (one device take) or
-        # sharded (batched lanes gather only their k' rows from the shard
-        # pool, LRU-pinning hot shards) — no per-request packing or
-        # candidate forward NTTs either way.
+        # module 2a, cloud half continued: one batched encrypted re-rank.
+        # The RLWE path hits the index's NTT-domain candidate cache — dense
+        # (one device take) or sharded (batched lanes gather only their k'
+        # rows from the shard pool; prefetched admissions may already have
+        # swapped the hot shards in) — no per-request packing or candidate
+        # forward NTTs either way.
         if backend == "rlwe":
-            cache = self.cloud.candidate_cache
             if cache is not None:
                 enc_stack = batching.encrypted_scores_cached_batch(
                     params, [w.enc_query for w in wire_reqs], cache,

@@ -4,22 +4,34 @@ Latency is measured enqueue -> result (queue wait included, the number a
 tenant actually experiences under micro-batching).  Wire bytes come from the
 protocol transcripts, i.e. the same Request.nbytes / Reply.nbytes accounting
 the paper's Table 2 uses.
+
+Memory is bounded: latency and batch-size *samples* live in a fixed-size
+sliding window (``window`` items, default 8192 — configurable through
+`ServeMetrics` / ``EngineConfig.metrics_window``), so a long-lived engine
+under the million-user north star cannot grow without bound.  Counts and
+byte totals stay exact forever (they are plain integer accumulators);
+`percentile`/`summary` statistics are computed over the current window.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List
+from typing import Deque, Dict
 
 import numpy as np
 
 from repro.core.protocol import ProtocolTranscript
 
+DEFAULT_WINDOW = 8192
+
 
 @dataclasses.dataclass
 class TenantStats:
-    latencies_s: List[float] = dataclasses.field(default_factory=list)
-    batch_sizes: List[int] = dataclasses.field(default_factory=list)
+    """Exact integer totals + windowed latency/batch-size samples."""
+    window: int = DEFAULT_WINDOW
+    count: int = 0                 # exact: every recorded result
+    errors: int = 0                # exact: dispatch failures after retries
     request_bytes: int = 0
     reply_bytes: int = 0
     fetch_bytes: int = 0
@@ -27,10 +39,14 @@ class TenantStats:
     ot_wire_bytes: int = 0
     direct_count: int = 0
     ot_count: int = 0
+    latencies_s: Deque[float] = dataclasses.field(init=False, repr=False)
+    batch_sizes: Deque[int] = dataclasses.field(init=False, repr=False)
 
-    @property
-    def count(self) -> int:
-        return len(self.latencies_s)
+    def __post_init__(self):
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+        self.latencies_s = collections.deque(maxlen=self.window)
+        self.batch_sizes = collections.deque(maxlen=self.window)
 
     @property
     def total_wire_bytes(self) -> int:
@@ -38,10 +54,19 @@ class TenantStats:
                 + self.docs_bytes + self.ot_wire_bytes)
 
     def percentile(self, q: float) -> float:
+        """Latency percentile over the current window (the trailing
+        ``window`` results), not all-time."""
         return float(np.percentile(self.latencies_s, q))
 
     def summary(self) -> dict:
-        return {
+        if not self.latencies_s:
+            # error-only (or untouched) stats: no samples to summarize —
+            # percentile on an empty window must not blow up the summary
+            out = {"count": self.count}
+            if self.errors:
+                out["errors"] = self.errors
+            return out
+        out = {
             "count": self.count,
             "p50_latency_s": round(self.percentile(50), 4),
             "p99_latency_s": round(self.percentile(99), 4),
@@ -51,27 +76,60 @@ class TenantStats:
                 self.total_wire_bytes / max(self.count, 1) / 1024, 2),
             "paths": {"direct": self.direct_count, "ot": self.ot_count},
         }
+        if self.errors:
+            out["errors"] = self.errors
+        return out
 
 
 class ServeMetrics:
-    """Accumulates TenantStats per tenant plus a process-wide aggregate."""
+    """Accumulates TenantStats per tenant plus a process-wide aggregate.
 
-    def __init__(self) -> None:
+    Dispatch-level accounting is exact-total + windowed-sample like the
+    tenant stats: ``num_batches``/``failed_dispatches``/``retried_requests``
+    are exact counters; ``dispatch_sizes`` keeps the trailing ``window``
+    batch sizes.  A batch is recorded only once it *completed* — the engine
+    calls `record_dispatch_failure` (never `record_batch`) for a dispatch
+    that raised, so failed batches can never masquerade as served traffic.
+    """
+
+    def __init__(self, window: int = DEFAULT_WINDOW) -> None:
+        self.window = window
         self.tenants: Dict[str, TenantStats] = {}
-        self.aggregate = TenantStats()
-        self.dispatch_sizes: List[int] = []
+        self.aggregate = TenantStats(window=window)
+        self.dispatch_sizes: Deque[int] = collections.deque(maxlen=window)
+        self.num_batches = 0           # exact: completed dispatches
+        self.failed_dispatches = 0     # exact: dispatches that raised
+        self.failed_requests = 0       # exact: requests in failed dispatches
+        self.retried_requests = 0      # exact: requests re-enqueued once
+        self.error_results = 0         # exact: error results handed back
 
-    @property
-    def num_batches(self) -> int:
-        return len(self.dispatch_sizes)
+    def _tenant(self, tenant: str) -> TenantStats:
+        stats = self.tenants.get(tenant)
+        if stats is None:
+            stats = self.tenants[tenant] = TenantStats(window=self.window)
+        return stats
 
     def record_batch(self, size: int) -> None:
+        self.num_batches += 1
         self.dispatch_sizes.append(size)
+
+    def record_dispatch_failure(self, size: int) -> None:
+        self.failed_dispatches += 1
+        self.failed_requests += size
+
+    def record_retries(self, n: int) -> None:
+        self.retried_requests += n
+
+    def record_error(self, tenant: str) -> None:
+        """One request came back as an error result (retries exhausted)."""
+        self.error_results += 1
+        for stats in (self._tenant(tenant), self.aggregate):
+            stats.errors += 1
 
     def record(self, tenant: str, *, latency_s: float, batch_size: int,
                transcript: ProtocolTranscript) -> None:
-        for stats in (self.tenants.setdefault(tenant, TenantStats()),
-                      self.aggregate):
+        for stats in (self._tenant(tenant), self.aggregate):
+            stats.count += 1
             stats.latencies_s.append(latency_s)
             stats.batch_sizes.append(batch_size)
             stats.request_bytes += transcript.request_bytes
@@ -85,11 +143,17 @@ class ServeMetrics:
                 stats.direct_count += 1
 
     def summary(self) -> dict:
-        out = {"aggregate": (self.aggregate.summary()
-                             if self.aggregate.count else {"count": 0}),
+        out = {"aggregate": self.aggregate.summary(),
                "num_batches": self.num_batches,
                "tenants": {t: s.summary() for t, s in self.tenants.items()}}
+        if self.failed_dispatches:
+            out["failures"] = {
+                "failed_dispatches": self.failed_dispatches,
+                "failed_requests": self.failed_requests,
+                "retried_requests": self.retried_requests,
+                "error_results": self.error_results,
+            }
         return out
 
 
-__all__ = ["TenantStats", "ServeMetrics"]
+__all__ = ["TenantStats", "ServeMetrics", "DEFAULT_WINDOW"]

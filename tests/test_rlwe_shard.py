@@ -2,7 +2,14 @@
 bit-identical to the dense cache and to cold per-request packing (batch
 1/3/8, both strides, fallback + fused Pallas kernel); the fused-iNTT kernel
 must match the staged fallback; LRU eviction / re-pinning must be
-deterministic under a fixed access trace and must never change the bits."""
+deterministic under a fixed access trace (legacy ``async_admission=False``
+mode) and must never change the bits.  The admission-policy suite below
+pins down the async/frequency-aware path: convergence to the synchronous
+resident set, bit-identity while an admission is in flight, the 2nd-touch
+rule under one-shot sweeps, counter decay, the bounded admit queue, and the
+prefetch touch-credit accounting."""
+
+import threading
 
 import numpy as np
 import pytest
@@ -130,7 +137,9 @@ def test_fused_intt_kernel_bit_identical_to_staged(setup):
 def test_lru_eviction_and_repin_deterministic(setup):
     """A fixed access trace must produce the same hit/miss/eviction sequence
     and the same resident set on two fresh caches — and identical bits to
-    the dense cache at every step of the trace."""
+    the dense cache at every step of the trace.  ``async_admission=False``
+    selects the synchronous first-touch mode this trace was written for
+    (the async policy admits on 2nd touch, off-thread)."""
     n_dim, docs, dense, q_cts = setup
     budget = 2 * dense.nbytes // 5          # room for exactly 2 of 5 shards
     # gathers process touched shards in sorted order (np.unique), so:
@@ -142,7 +151,8 @@ def test_lru_eviction_and_repin_deterministic(setup):
                                              # evicts 1 -> (0, 4)
     logs = []
     for _ in range(2):
-        sh = _sharded(dense, max_resident_bytes=budget)
+        sh = _sharded(dense, max_resident_bytes=budget,
+                      async_admission=False)
         log = []
         for ids in trace:
             got = rlwe.encrypted_scores_cached_batch(
@@ -259,7 +269,8 @@ def test_admission_never_exceeds_budget_transiently(setup):
     never exceeds the budget."""
     n_dim, docs, dense, q_cts = setup
     one_shard = dense.nbytes // 5
-    sh = _sharded(dense, max_resident_bytes=one_shard)
+    sh = _sharded(dense, max_resident_bytes=one_shard,
+                  async_admission=False)
     for ids in ([[0, 1]], [[8, 9]], [[0, 16]]):
         rlwe.encrypted_scores_cached_batch(
             PARAMS, q_cts[:1], sh, np.asarray(ids))
@@ -309,6 +320,217 @@ def test_densify_roundtrip(setup):
     np.testing.assert_array_equal(np.asarray(a.c0), np.asarray(b.c0))
 
 
+# ---------------------------------------------------------------------------
+# async, frequency-aware admission policy
+# ---------------------------------------------------------------------------
+
+def test_async_admission_converges_to_sync_resident_set(setup):
+    """With admit_threshold=1, the async admitter must converge (after a
+    flush) to exactly the synchronous first-touch LRU state under a fixed
+    trace — same resident set/order and same hit/miss counts at each step."""
+    n_dim, docs, dense, _ = setup
+    budget = 2 * dense.nbytes // 5
+    trace = [np.array([[0, 1, 8, 9]]), np.array([[16, 17, 0, 1]]),
+             np.array([[8, 9, 8, 9]]), np.array([[32, 33, 39, 0]])]
+    sync = _sharded(dense, max_resident_bytes=budget, async_admission=False)
+    asy = _sharded(dense, max_resident_bytes=budget, admit_threshold=1)
+    for ids in trace:
+        sync.gather(ids)
+        asy.gather(ids)
+        asy.flush()
+        assert asy.resident_shards == sync.resident_shards
+        assert (asy.hits, asy.misses) == (sync.hits, sync.misses)
+    assert asy.evictions == sync.evictions
+    assert asy.async_admissions == asy.admissions == sync.admissions
+
+
+def test_gather_bit_identical_while_admission_in_flight(setup):
+    """`gather` streams from the host pool while the admitter copy is in
+    flight; the scores must be bit-identical to the dense cache before,
+    during, and after the atomic swap-in."""
+    n_dim, docs, dense, q_cts = setup
+    sh = _sharded(dense, admit_threshold=1)
+    started, release = threading.Event(), threading.Event()
+
+    def hook(_s):                   # hold the copy mid-flight
+        started.set()
+        assert release.wait(30)
+    sh._admit_hook = hook
+
+    ids = np.array([[0, 1, 2, 3, 8, 9]])    # shards 0 and 1
+    want = rlwe.encrypted_scores_cached_batch(
+        PARAMS, q_cts[:1], dense, ids, use_pallas=False)
+    cold = rlwe.encrypted_scores_batch_stacked(
+        PARAMS, q_cts[:1], rlwe.pack_candidates_batch(PARAMS, docs[ids]),
+        ids.shape[1], n_dim, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(want.c0), np.asarray(cold.c0))
+    got_cold = rlwe.encrypted_scores_cached_batch(
+        PARAMS, q_cts[:1], sh, ids, use_pallas=False)     # enqueues 0, 1
+    assert started.wait(30)
+    assert sh.stats()["pending_admissions"] > 0
+    got_inflight = rlwe.encrypted_scores_cached_batch(
+        PARAMS, q_cts[:1], sh, ids, use_pallas=False)     # streams, no block
+    release.set()
+    sh.flush()
+    assert sh.resident_shards == (0, 1)
+    got_resident = rlwe.encrypted_scores_cached_batch(
+        PARAMS, q_cts[:1], sh, ids, use_pallas=False)     # device take
+    for got in (got_cold, got_inflight, got_resident):
+        np.testing.assert_array_equal(np.asarray(want.c0),
+                                      np.asarray(got.c0))
+        np.testing.assert_array_equal(np.asarray(want.c1),
+                                      np.asarray(got.c1))
+    assert sh.hits >= 2             # the post-swap gather hit both shards
+
+
+def test_second_touch_never_admits_one_shot_sweep(setup):
+    """The 2nd-touch policy must not admit anything under a uniform
+    one-shot sweep (every shard touched exactly once)."""
+    n_dim, docs, dense, _ = setup
+    sh = _sharded(dense)            # defaults: async, admit_threshold=2
+    for lo in range(0, NUM_DOCS, SHARD_DOCS):
+        sh.gather(np.array([[lo, lo + 1]]))     # one touch per shard
+    sh.flush()
+    st = sh.stats()
+    assert st["resident_shards"] == ()
+    assert st["admit_enqueued"] == st["admissions"] == 0
+    assert st["policy_deferrals"] == sh.num_shards
+    assert st["misses"] == sh.num_shards
+    # ... while a second pass (repeat traffic) admits everything in range
+    for lo in range(0, NUM_DOCS, SHARD_DOCS):
+        sh.gather(np.array([[lo, lo + 1]]))
+    sh.flush()
+    assert len(sh.resident_shards) > 0
+    assert sh.stats()["async_admissions"] > 0
+
+
+def test_auto_window_sustained_uniform_never_admits(setup):
+    """The auto admit_window (= num_shards for >= 8 shards) makes
+    *sustained* uniform traffic decay every counter before its second
+    touch: many full-corpus sweeps admit nothing, while skewed traffic on
+    the same config admits after one repeat."""
+    n_dim, docs, dense, _ = setup
+    sh = _sharded(dense, shard_docs=4)          # 10 shards, auto window 10
+    assert sh.admit_window == 10
+    uniform = np.arange(0, NUM_DOCS, 4)[None]   # every shard, every gather
+    for _ in range(6):
+        sh.gather(uniform)
+    sh.flush()
+    st = sh.stats()
+    assert st["resident_shards"] == () and st["admit_enqueued"] == 0
+    assert st["policy_deferrals"] == 6 * sh.num_shards
+    # same config, skewed ids (2 of 10 shards): admitted on the 2nd gather
+    sk = _sharded(dense, shard_docs=4)
+    for _ in range(3):
+        sk.gather(np.array([[0, 1, 4, 5]]))     # shards 0, 1 only
+    sk.flush()
+    assert set(sk.resident_shards) == {0, 1}
+
+
+def test_touch_counter_decay_ages_out_stale_popularity(setup):
+    """One touch, then a full decay window of other-shard traffic, then a
+    second touch: the first touch must have aged out, so no admission."""
+    n_dim, docs, dense, _ = setup
+    sh = _sharded(dense, admit_window=4)
+    sh.gather(np.array([[0]]))              # shard 0: count 1
+    for lo in (8, 16, 24):                  # 3 more touches -> window ends,
+        sh.gather(np.array([[lo]]))         # counters halve and age out
+    sh.gather(np.array([[0]]))              # shard 0 again: count back to 1
+    sh.flush()
+    assert sh.resident_shards == () and sh.admit_enqueued == 0
+    # without decay the same trace admits shard 0
+    sh2 = _sharded(dense, admit_window=1024)
+    for lo in (0, 8, 16, 24, 0):
+        sh2.gather(np.array([[lo]]))
+    sh2.flush()
+    assert 0 in sh2.resident_shards
+
+
+def test_admit_queue_bounded_drops_are_counted(setup):
+    """The admit queue is bounded: with the worker blocked, excess
+    admission requests are dropped (and counted), never accumulated."""
+    n_dim, docs, dense, _ = setup
+    sh = _sharded(dense, admit_threshold=1, max_pending_admissions=1)
+    started, release = threading.Event(), threading.Event()
+
+    def hook(_s):
+        started.set()
+        assert release.wait(30)
+    sh._admit_hook = hook
+    sh.gather(np.array([[0, 8, 16, 24, 32]]))   # 5 shards, queue cap 1
+    assert started.wait(30)
+    st = sh.stats()
+    assert st["admit_dropped"] >= 2             # worker holds 1, queue 1
+    release.set()
+    sh.flush()
+    assert len(sh.resident_shards) <= 2
+    # dropped shards stay eligible: their counter kept them over threshold.
+    # Each gather+flush round admits at least one more shard (the queue may
+    # still drop some mid-gather — the worker races the touch loop), so a
+    # few rounds converge to everything resident.
+    for _ in range(4):
+        sh.gather(np.array([[0, 8, 16, 24, 32]]))
+        sh.flush()
+    assert len(sh.resident_shards) == 5
+
+
+def test_prefetch_counts_touch_once_and_overlaps(setup):
+    """A prefetch records the touch; the request's own gather of the same
+    ids must not double-count it (otherwise every request would hit the
+    2nd-touch threshold immediately)."""
+    n_dim, docs, dense, q_cts = setup
+    sh = _sharded(dense)                        # threshold 2
+    ids = np.array([[0, 1, 8]])                 # shards 0, 1
+    assert sh.prefetch(ids) == 2
+    rlwe.encrypted_scores_cached_batch(PARAMS, q_cts[:1], sh, ids,
+                                       use_pallas=False)
+    sh.flush()
+    assert sh.resident_shards == ()             # single touch: no admission
+    assert sh.stats()["prefetches"] == 2
+    assert sh.stats()["policy_deferrals"] == 2
+    # second request for the same region reaches the threshold at prefetch
+    # time — the admission is enqueued before the gather even runs
+    assert sh.prefetch(ids) == 2
+    sh.flush()
+    assert sh.resident_shards == (0, 1)
+    assert sh.stats()["async_admissions"] == 2
+    # stream-only caches still account prefetches but never admit
+    sh0 = _sharded(dense, max_resident_bytes=0)
+    assert sh0.prefetch(ids) == 2 and sh0.prefetch(ids) == 2
+    sh0.flush()
+    assert sh0.resident_shards == () and sh0.stats()["prefetches"] == 4
+
+
+def test_prefetch_rejects_out_of_range_ids(setup):
+    n_dim, docs, dense, _ = setup
+    sh = _sharded(dense)
+    with pytest.raises(IndexError, match="candidate ids"):
+        sh.prefetch(np.array([[0, NUM_DOCS]]))
+    assert sh.prefetch(np.empty((1, 0), np.int64)) == 0
+
+
+def test_async_cache_close_is_idempotent(setup):
+    n_dim, docs, dense, _ = setup
+    sh = _sharded(dense, admit_threshold=1)
+    sh.gather(np.array([[0, 8]]))
+    sh.close()
+    sh.close()                                  # idempotent
+    assert sh.stats()["pending_admissions"] == 0
+    # the cache stays usable (and can admit again) after close
+    sh.gather(np.array([[16]]))
+    sh.flush()
+    assert 16 // SHARD_DOCS in sh.resident_shards
+
+
+def test_config_rejects_bad_admission_knobs():
+    with pytest.raises(ValueError, match="admit_threshold"):
+        rlwe.CandidateCacheConfig(admit_threshold=0)
+    with pytest.raises(ValueError, match="admit_window"):
+        rlwe.CandidateCacheConfig(admit_window=0)
+    with pytest.raises(ValueError, match="max_pending_admissions"):
+        rlwe.CandidateCacheConfig(max_pending_admissions=0)
+
+
 def test_serve_engine_sharded_cache_end_to_end():
     """The engine on a sharded-cache config returns the same docs/ids as on
     the dense cache, and exposes LRU stats."""
@@ -341,6 +563,15 @@ def test_serve_engine_sharded_cache_end_to_end():
     assert eng_dense.cache_stats() is None
     stats = eng_shard.cache_stats()
     assert stats is not None and stats["misses"] > 0
+    # the admission/prefetch counters are part of the observability surface
+    for key in ("admissions", "async_admissions", "prefetches",
+                "admit_enqueued", "admit_dropped", "policy_deferrals",
+                "pending_admissions"):
+        assert key in stats
+    # stream-only engine config: the prefetch hook still fires per batch
+    # (the touches are counted) but nothing is ever admitted
+    assert stats["prefetches"] > 0
+    assert stats["admissions"] == 0 and stats["resident_shards"] == ()
     for a, b in zip(res_dense, res_shard):
         assert a.tenant == b.tenant
         np.testing.assert_array_equal(a.ids, b.ids)

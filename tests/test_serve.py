@@ -159,3 +159,142 @@ def test_metrics_accounting(corpus):
     want_wire = sum(r.transcript.total_bytes for r in got)
     assert eng.metrics.aggregate.total_wire_bytes == want_wire
     assert agg["p99_latency_s"] >= agg["p50_latency_s"] >= 0
+    assert "failures" not in summary         # clean run: no failure block
+
+
+def test_submit_without_session_raises_keyerror(corpus):
+    """A missing session is a real error, not an assert (`python -O`
+    strips asserts, which would turn this into silent mis-batching)."""
+    index, _, queries = corpus
+    eng = _build(index, sequential=False, max_batch=2)
+    with pytest.raises(KeyError, match="nobody"):
+        eng.submit("nobody", queries[0])
+
+
+class _FaultyFetch:
+    """Fault-injecting cloud seam: `handle_fetch` raises the first
+    ``fail_times`` calls, then delegates — the failure lands mid-dispatch,
+    after the crypto, exactly where a lost batch would hurt most."""
+
+    def __init__(self, cloud, fail_times):
+        self.cloud = cloud
+        self.remaining = fail_times
+        self.calls = 0
+
+    def __call__(self, cand_ids, msg):
+        self.calls += 1
+        if self.remaining:
+            self.remaining -= 1
+            raise RuntimeError("injected cloud fault")
+        return type(self.cloud).handle_fetch(self.cloud, cand_ids, msg)
+
+
+def test_failed_dispatch_loses_zero_requests(corpus):
+    """A dispatch that raises re-enqueues its requests (one retry) and
+    records no phantom batch; the retried dispatch returns every request
+    with the same docs/ids the clean run produces."""
+    index, _, queries = corpus
+    _, want = _run(index, queries, sequential=False, max_batch=8)
+    eng = _build(index, sequential=False, max_batch=8)
+    eng.cloud.handle_fetch = _FaultyFetch(eng.cloud, fail_times=1)
+    for i, q in enumerate(queries):
+        eng.submit(TENANTS[i % len(TENANTS)], q, key=jax.random.PRNGKey(i))
+    got = eng.drain()
+    assert len(got) == N_REQ and all(r.ok for r in got)
+    for rs, rb in zip(want, got):
+        assert rs.request_id == rb.request_id
+        assert rs.ids.tolist() == rb.ids.tolist()
+        assert rs.docs == rb.docs
+    # only the *completed* dispatch is recorded; the failure is accounted
+    # separately and every popped request was retried, none lost
+    assert eng.metrics.num_batches == 1
+    assert list(eng.metrics.dispatch_sizes) == [N_REQ]
+    assert eng.metrics.failed_dispatches == 1
+    assert eng.metrics.retried_requests == N_REQ
+    assert eng.metrics.error_results == 0 and eng.pending == 0
+
+
+def test_dispatch_failure_after_retries_returns_error_results(corpus):
+    """When the cloud keeps failing, drain() still terminates and hands
+    every request back as an error result — zero requests lost, zero
+    phantom batches recorded."""
+    index, _, queries = corpus
+    eng = _build(index, sequential=False, max_batch=3)
+    eng.cloud.handle_fetch = _FaultyFetch(eng.cloud, fail_times=10**9)
+    rids = [eng.submit(TENANTS[i], queries[i], key=jax.random.PRNGKey(i))
+            for i in range(3)]
+    got = eng.drain()
+    assert [r.request_id for r in got] == rids
+    assert all(not r.ok for r in got)
+    assert all("injected cloud fault" in r.error for r in got)
+    assert all(r.docs == [] and r.ids.size == 0 and r.transcript is None
+               for r in got)
+    assert eng.pending == 0
+    assert eng.metrics.num_batches == 0      # no phantom batches
+    assert eng.metrics.failed_dispatches == 2    # first try + one retry
+    summary = eng.metrics.summary()
+    assert summary["failures"]["error_results"] == 3
+    assert eng.metrics.aggregate.errors == 3
+    # error-only tenants have no latency samples — their summaries (and the
+    # aggregate's) must degrade gracefully, not crash on an empty window
+    assert summary["aggregate"] == {"count": 0, "errors": 3}
+    for t in TENANTS:
+        assert summary["tenants"][t] == {"count": 0, "errors": 1}
+    # the engine stays healthy: un-fault the cloud and serve again
+    eng.cloud.handle_fetch = _FaultyFetch(eng.cloud, fail_times=0)
+    eng.submit(TENANTS[0], queries[0], key=jax.random.PRNGKey(0))
+    ok = eng.drain()
+    assert len(ok) == 1 and ok[0].ok
+
+
+def test_sequential_dispatch_isolates_poisoned_lane(corpus):
+    """On the sequential comparison path a single poisoned request must not
+    sink its batchmates: healthy lanes complete, the poisoned one errors
+    after its retry."""
+    index, _, queries = corpus
+    eng = _build(index, sequential=True, max_batch=3)
+    # fail exactly the 2nd request and its retry: lane order is r0(1),
+    # r1(2, fails), r2(3) — the loop continues past the failure — then the
+    # re-enqueued r1 dispatches alone as call 4 and fails for good
+    calls = [0]
+
+    def poisoned(cand_ids, msg):
+        calls[0] += 1
+        if calls[0] in (2, 4):
+            raise RuntimeError("poisoned lane")
+        return type(eng.cloud).handle_fetch(eng.cloud, cand_ids, msg)
+    eng.cloud.handle_fetch = poisoned
+    for i in range(3):
+        eng.submit(TENANTS[i], queries[i], key=jax.random.PRNGKey(i))
+    got = eng.drain()
+    assert len(got) == 3
+    oks = [r for r in got if r.ok]
+    bad = [r for r in got if not r.ok]
+    assert len(oks) == 2 and len(bad) == 1
+    assert "poisoned lane" in bad[0].error
+
+
+def test_metrics_window_bounded():
+    """Latency/batch samples are windowed (no unbounded growth under the
+    million-user north star) while counts and byte totals stay exact."""
+    from repro.core.protocol import ProtocolTranscript
+    from repro.serve.metrics import ServeMetrics
+
+    m = ServeMetrics(window=4)
+    tr = ProtocolTranscript(plan=None, path="direct", request_bytes=10,
+                            reply_bytes=5, fetch_bytes=1, docs_bytes=2,
+                            ot_wire_bytes=0)
+    for i in range(10):
+        m.record("t", latency_s=float(i), batch_size=2, transcript=tr)
+        m.record_batch(2)
+    agg = m.aggregate
+    assert agg.count == 10                       # exact total
+    assert agg.total_wire_bytes == 10 * 18       # exact total
+    assert len(agg.latencies_s) == 4             # bounded window
+    assert list(agg.latencies_s) == [6.0, 7.0, 8.0, 9.0]
+    assert agg.percentile(50) == 7.5             # over the window
+    assert m.num_batches == 10 and len(m.dispatch_sizes) == 4
+    assert m.summary()["aggregate"]["count"] == 10
+    with pytest.raises(ValueError, match="window"):
+        ServeMetrics(window=0).record("t", latency_s=0.0, batch_size=1,
+                                      transcript=tr)
