@@ -42,6 +42,93 @@ def _unit(rng, *shape):
     return (x / np.linalg.norm(x, axis=-1, keepdims=True)).astype(np.float32)
 
 
+def _serve_fault_section(params, rng) -> dict:
+    """Fault injection on the serving engine's batched dispatch path:
+    1-in-16 lanes persistently poisoned at batch 8.  Lane-level fault
+    isolation must quarantine exactly the poisoned lane (one error result)
+    while its 7 batchmates complete from their already-computed state —
+    zero healthy-lane re-encryptions, batch occupancy within 0.9x of the
+    fault-free run.  Both are CI-gated by
+    ``scripts/check_bench_regression.py``."""
+    import time
+
+    from repro.retrieval.index import FlatIndex
+    from repro.serve import EngineConfig, ServeEngine
+    from repro.serve.session import SessionManager
+
+    dim, num_docs, n_req, max_batch = 64, 2048, 16, 8
+    emb = _unit(rng, num_docs, dim)
+    index = FlatIndex.build(
+        emb, documents=[f"doc-{i}".encode() for i in range(num_docs)])
+    queries = _unit(rng, n_req, dim)
+
+    def run_stream(poison_ids=None):
+        # deterministic seeds + fixed per-request keys: both passes replay
+        # identical streams, so the fault-free pass's result ids identify
+        # the poisoned lane's fetches in the faulty pass
+        eng = ServeEngine(
+            index,
+            config=EngineConfig(max_batch=max_batch, max_wait_s=30.0),
+            sessions=SessionManager(rlwe_params=params,
+                                    deterministic_seeds=True))
+        for t in range(4):
+            eng.open_session(f"bench-{t}", n=dim, N=num_docs, k=4,
+                             radius=0.05, backend="rlwe")
+        if poison_ids is not None:
+            real = type(eng.cloud).handle_fetch
+
+            def poisoned(cand_ids, msg):
+                ids = [int(cand_ids[p]) for p in msg.positions]
+                if ids == poison_ids:       # that lane and its solo retry
+                    raise RuntimeError("bench-poisoned lane")
+                return real(eng.cloud, cand_ids, msg)
+
+            eng.cloud.handle_fetch = poisoned
+        for i in range(n_req):
+            eng.submit(f"bench-{i % 4}", queries[i],
+                       key=jax.random.PRNGKey(i))
+        t0 = time.perf_counter()
+        out = eng.drain()
+        wall_us = (time.perf_counter() - t0) * 1e6
+        eng.close()
+        return out, eng.metrics, wall_us
+
+    clean, m_clean, clean_us = run_stream()
+    assert all(r.ok for r in clean), "fault-free serve pass must succeed"
+    faulty, m_fault, fault_us = run_stream(clean[0].ids.tolist())
+    errors = [r for r in faulty if not r.ok]
+    assert len(errors) == 1 and errors[0].request_id == 0, \
+        "exactly the poisoned lane must error"
+    for rs, rb in zip(clean[1:], faulty[1:]):
+        assert rs.ids.tolist() == rb.ids.tolist(), \
+            "healthy lanes must be unaffected by the poisoned lane"
+    occ_clean = m_clean.occupancy(max_batch)
+    occ_fault = m_fault.occupancy(max_batch)
+    section = {
+        "num_docs": num_docs,
+        "requests": n_req,
+        "max_batch": max_batch,
+        "poisoned_lanes": 1,
+        "wall_fault_free_us": clean_us,
+        "wall_faulty_us": fault_us,
+        "occupancy_fault_free": occ_clean,
+        "occupancy_faulty": occ_fault,
+        "occupancy_ratio": occ_fault / occ_clean,
+        "healthy_lane_reencryptions": m_fault.healthy_reencryptions,
+        "lane_encryptions": m_fault.lane_encryptions,
+        "quarantined_lanes": m_fault.quarantined_lanes,
+        "retried_requests": m_fault.retried_requests,
+        "error_results": m_fault.error_results,
+        "num_batches": m_fault.num_batches,
+    }
+    emit("rlwe/serve_fault_occupancy_b8", fault_us,
+         f"{section['occupancy_ratio']:.2f}x_vs_fault_free")
+    emit("rlwe/serve_fault_wasted_lanes", m_fault.healthy_reencryptions,
+         f"{m_fault.quarantined_lanes}quarantined_"
+         f"{m_fault.error_results}errors")
+    return section
+
+
 def run() -> None:
     if FULL:
         params = rlwe.RlweParams()                    # N=4096, chunk=1024
@@ -278,6 +365,8 @@ def run() -> None:
          f"{stats['admit_dropped']}dropped")
     sharded["default_config"] = default_cfg
     results["sharded"] = sharded
+
+    results["serve_faults"] = _serve_fault_section(params, rng)
 
     payload = {
         "bench": "rlwe_rerank",

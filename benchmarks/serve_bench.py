@@ -100,10 +100,16 @@ def main() -> None:
         qps = len(results) / wall
         qps_by_bs[bs] = qps
         agg = engine.metrics.aggregate
+        occ = engine.metrics.occupancy(bs)
         emit(f"serve_batched_b{bs}", wall / len(results) * 1e6,
              f"qps={qps:.3f} p50={agg.percentile(50):.3f}s "
              f"p99={agg.percentile(99):.3f}s "
-             f"speedup={qps / seq_qps:.2f}x")
+             f"speedup={qps / seq_qps:.2f}x "
+             f"occupancy={occ:.2f}")
+        # the clean stream must not trip the fault-isolation machinery
+        assert engine.metrics.quarantined_lanes == 0
+        assert engine.metrics.error_results == 0
+        assert engine.metrics.healthy_reencryptions == 0
         # per-query parity with the sequential path
         for rs, rb in zip(seq_results, results):
             assert rs.ids.tolist() == rb.ids.tolist(), (

@@ -153,6 +153,10 @@ def main() -> None:
               f"{stats['prefetches']} prefetched touches, "
               f"{stats['policy_deferrals']} deferred below threshold, "
               f"{stats['admit_dropped']} dropped at the queue cap")
+    # release the sharded cache's background admitter thread — without
+    # this, the daemon worker (and its host-pool reference) would outlive
+    # the engine until its idle timeout
+    engine.close()
 
 
 if __name__ == "__main__":

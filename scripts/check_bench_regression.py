@@ -15,11 +15,17 @@ and fails if
     more than ``max_skewed_ratio`` (default 1.2x) slower than dense under
     skewed ids, or more than ``max_uniform_ratio`` (default 1.3x) slower
     under uniform ids, at batch 8 — the both-regimes guarantee: one config
-    must never regress to synchronous-admission churn in either regime.
+    must never regress to synchronous-admission churn in either regime, or
+  * (serve_faults section) lane-level fault isolation regressed: any
+    healthy-lane re-encryption under a persistently poisoned lane (must be
+    exactly 0), more/fewer error results than poisoned lanes, or batch
+    occupancy under faults below ``min_occupancy_ratio`` (default 0.9) of
+    the fault-free run.
 
     scripts/check_bench_regression.py [BENCH_rlwe.json] [min_speedup=1.0]
         [max_sharded_ratio=1.3] [min_mem_reduction=4.0]
         [max_skewed_ratio=1.2] [max_uniform_ratio=1.3]
+        [min_occupancy_ratio=0.9]
 """
 
 from __future__ import annotations
@@ -118,6 +124,52 @@ def _check_default_config(sharded: dict, max_skewed: float,
     return failures
 
 
+def _check_serve_faults(section: dict, min_occupancy_ratio: float) -> int:
+    """Lane-isolation gate: under one persistently poisoned lane in a
+    batch of 8, no healthy lane may be re-encrypted, exactly the poisoned
+    lanes may error, and batch occupancy must stay within
+    ``min_occupancy_ratio`` of the fault-free run.  A JSON without the
+    section fails — the gate must not silently pass after a results-key
+    rename."""
+    if section is None:
+        print("FAIL serve_faults: results lack the fault-injection section "
+              "— the lane-isolation gate did not run", file=sys.stderr)
+        return 1
+    failures = 0
+    reenc = section.get("healthy_lane_reencryptions")
+    if reenc != 0:
+        print(f"FAIL serve_faults: {reenc} healthy-lane re-encryptions "
+              f"under faults (must be exactly 0 — quarantine is leaking "
+              f"work back onto healthy lanes)", file=sys.stderr)
+        failures += 1
+    else:
+        print("ok   serve_faults: 0 healthy-lane re-encryptions under a "
+              "persistently poisoned lane")
+    errors = section.get("error_results")
+    poisoned = section.get("poisoned_lanes")
+    if errors != poisoned:
+        print(f"FAIL serve_faults: {errors} error results for {poisoned} "
+              f"poisoned lanes (quarantine must error exactly the poisoned "
+              f"lanes)", file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   serve_faults: exactly {poisoned} error result(s) for "
+              f"{poisoned} poisoned lane(s)")
+    ratio = section.get("occupancy_ratio")
+    if ratio is None or ratio < min_occupancy_ratio:
+        print(f"FAIL serve_faults: batch occupancy under faults is {ratio}x "
+              f"the fault-free run < {min_occupancy_ratio}x "
+              f"(faulty {section.get('occupancy_faulty')}, fault-free "
+              f"{section.get('occupancy_fault_free')})", file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   serve_faults: occupancy {ratio:.2f}x of fault-free "
+              f"({section.get('occupancy_faulty'):.3f} vs "
+              f"{section.get('occupancy_fault_free'):.3f} at batch "
+              f"{section.get('max_batch')})")
+    return failures
+
+
 def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_rlwe.json"
     min_speedup = float(sys.argv[2]) if len(sys.argv) > 2 else 1.0
@@ -125,6 +177,7 @@ def main() -> int:
     min_mem_reduction = float(sys.argv[4]) if len(sys.argv) > 4 else 4.0
     max_skewed = float(sys.argv[5]) if len(sys.argv) > 5 else 1.2
     max_uniform = float(sys.argv[6]) if len(sys.argv) > 6 else 1.3
+    min_occupancy = float(sys.argv[7]) if len(sys.argv) > 7 else 0.9
     try:
         with open(path) as f:
             data = json.load(f)
@@ -143,6 +196,8 @@ def main() -> int:
     else:
         print("note: no sharded section in results (pre-sharded-cache "
               "JSON); skipping the sharded gates")
+    failures += _check_serve_faults(results.get("serve_faults"),
+                                    min_occupancy)
     return 1 if failures else 0
 
 

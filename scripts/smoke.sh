@@ -8,6 +8,13 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# repo cleanliness: compiled/tooling artifacts must never be tracked
+# (they were once, in b8649f6 — .gitignore plus this gate keeps them out)
+if git ls-files | grep -E '(^|/)__pycache__/|\.py[cod]$|(^|/)\.pytest_cache/|(^|/)\.hypothesis/'; then
+  echo "FAIL: compiled artifacts tracked in git (see lines above)" >&2
+  exit 1
+fi
+
 python -m pytest -q -m "not slow" "$@"
 
 # docs gate: every intra-repo link in docs/ + README resolves, every

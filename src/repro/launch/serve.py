@@ -51,49 +51,61 @@ def main() -> None:
     docs = synth.passages(rng, args.n_docs, avg_bytes=256)
     index = FlatIndex.build(emb, documents=docs)
 
-    engine = ServeEngine(index, config=EngineConfig(
-        max_batch=1 if args.no_batch else args.max_batch,
-        max_wait_s=args.max_wait_ms / 1e3,
-        sequential=args.no_batch))
-    for t in range(args.tenants):
-        sess = engine.open_session(f"tenant-{t}", n=args.dim, N=args.n_docs,
-                                   k=args.k, radius=args.radius,
-                                   backend=args.backend)
-    plan = sess.plan
-    print(json.dumps({"plan": {
-        "eps": plan.eps, "kprime": plan.kprime, "path": plan.path,
-        "radius": plan.radius,
-        "plan_cache": {"hits": engine.sessions.plan_cache.hits,
-                       "misses": engine.sessions.plan_cache.misses}}}))
+    # context manager: close() drains leftovers and stops the sharded
+    # cache's background admitter thread on exit (no thread leak across
+    # engine lifetimes)
+    with ServeEngine(index, config=EngineConfig(
+            max_batch=1 if args.no_batch else args.max_batch,
+            max_wait_s=args.max_wait_ms / 1e3,
+            sequential=args.no_batch)) as engine:
+        for t in range(args.tenants):
+            sess = engine.open_session(f"tenant-{t}", n=args.dim,
+                                       N=args.n_docs, k=args.k,
+                                       radius=args.radius,
+                                       backend=args.backend)
+        plan = sess.plan
+        print(json.dumps({"plan": {
+            "eps": plan.eps, "kprime": plan.kprime, "path": plan.path,
+            "radius": plan.radius,
+            "plan_cache": {"hits": engine.sessions.plan_cache.hits,
+                           "misses": engine.sessions.plan_cache.misses}}}))
 
-    queries = synth.queries_near_corpus(rng, emb, args.requests)
-    t0 = time.monotonic()
-    for i, q in enumerate(queries):
-        engine.submit(f"tenant-{i % args.tenants}", q,
-                      key=jax.random.PRNGKey(i))
-    results = engine.drain()
-    wall = time.monotonic() - t0
+        queries = synth.queries_near_corpus(rng, emb, args.requests)
+        t0 = time.monotonic()
+        for i, q in enumerate(queries):
+            engine.submit(f"tenant-{i % args.tenants}", q,
+                          key=jax.random.PRNGKey(i))
+        results = engine.drain()
+        wall = time.monotonic() - t0
 
-    for res in results:
-        if not res.ok:      # dispatch failed after retries: no transcript
+        for res in results:
+            if not res.ok:  # lane failed after its quarantine retry
+                print(json.dumps({
+                    "request": res.request_id, "tenant": res.tenant,
+                    "latency_s": round(res.latency_s, 3),
+                    "quarantined": res.quarantined,
+                    "error": res.error}))
+                continue
+            q = queries[res.request_id]
+            plain = np.argsort(-(emb @ q), kind="stable")[: args.k]
+            recall = (len(set(res.ids.tolist()) & set(plain.tolist()))
+                      / args.k)
             print(json.dumps({
                 "request": res.request_id, "tenant": res.tenant,
                 "latency_s": round(res.latency_s, 3),
-                "error": res.error}))
-            continue
-        q = queries[res.request_id]
-        plain = np.argsort(-(emb @ q), kind="stable")[: args.k]
-        recall = len(set(res.ids.tolist()) & set(plain.tolist())) / args.k
-        print(json.dumps({
-            "request": res.request_id, "tenant": res.tenant,
-            "latency_s": round(res.latency_s, 3),
-            "batch_size": res.batch_size, "recall": recall,
-            "wire_bytes": res.transcript.total_bytes,
-            "path": res.transcript.path}))
-    summary = engine.metrics.summary()
-    summary["aggregate"]["qps"] = round(len(results) / wall, 3)
-    print(json.dumps({"summary": summary["aggregate"],
-                      "num_batches": summary["num_batches"]}))
+                "batch_size": res.batch_size, "recall": recall,
+                "wire_bytes": res.transcript.total_bytes,
+                "path": res.transcript.path}))
+        summary = engine.metrics.summary()
+        summary["aggregate"]["qps"] = round(len(results) / wall, 3)
+        occupancy = engine.metrics.occupancy(engine.config.max_batch)
+        out = {"summary": summary["aggregate"],
+               "num_batches": summary["num_batches"],
+               "occupancy": None if occupancy is None
+               else round(occupancy, 3)}
+        if "failures" in summary:
+            out["failures"] = summary["failures"]
+        print(json.dumps(out))
 
 
 if __name__ == "__main__":

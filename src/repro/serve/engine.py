@@ -1,9 +1,12 @@
 """Micro-batching request engine for the RemoteRAG protocol.
 
 Requests enqueue via `submit`; `step` forms at most one batch per call using
-two triggers — size (a compatible group reached `max_batch`) and deadline
-(the group's oldest request waited `max_wait_s`) — and runs the full protocol
-for that batch:
+three triggers — size (a compatible group reached `max_batch`), deadline
+(the group's oldest request waited `max_wait_s`), and refill (the group's
+previous batch dispatched under `max_batch`, or full with a burst tail
+still queued, so waiting requests are admitted into the next dispatch
+immediately instead of waiting out the deadline again) — and runs the
+full protocol for that batch:
 
   module 1    vmapped DistanceDP perturbation (per-request PRNG keys)
   module 2a   ONE batched score-top-k' kernel invocation over the shared
@@ -22,10 +25,14 @@ sequential `protocol.run_remoterag` driver — same docs, ids and wire bytes —
 so `EngineConfig(sequential=True)` exists purely as the latency/throughput
 comparison path.
 
-Failure handling: a dispatch that raises loses nothing — the popped
-requests go back to the head of their group queue for one retry
-(`EngineConfig.max_retries`), after which they come back as `ServeResult`
-error results; the batch is recorded in the metrics only on completion.
+Failure handling is *lane-level*: a dispatch failure is attributed to the
+offending lane(s) — per-lane stages (encryption, retrieval) attribute
+directly, batched stages (perturbation, top-k', scoring, decryption) by
+bisection over lane subsets — and only those lanes are quarantined: one
+solo retry on the sequential path (`EngineConfig.max_retries`), then a
+`ServeResult` error result.  Healthy lanes complete from their
+already-computed state — they are never re-encrypted, never re-dispatched,
+and never double-counted in the metrics.
 """
 
 from __future__ import annotations
@@ -35,7 +42,7 @@ import dataclasses
 import itertools
 import secrets
 import time
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -63,9 +70,14 @@ class EngineConfig:
     # selects the sharded corpus-scale cache (shard size, device-memory
     # budget for LRU-pinned hot shards, admission policy).
     cache_config: Optional["rlwe.CandidateCacheConfig"] = None
-    # retries per request after a failed dispatch before the request is
-    # returned as an error result (0 = fail immediately, never re-enqueue)
+    # solo sequential-path retries per quarantined lane before the request
+    # is returned as an error result (0 = fail immediately, never retry)
     max_retries: int = 1
+    # continuous refill: a group whose batch dispatched under max_batch
+    # (or full but with a burst tail still queued) keeps a one-window
+    # credit, so waiting requests join the next dispatch immediately
+    # instead of aging out max_wait_s again
+    refill: bool = True
     # bounded per-tenant latency/batch-size sample windows (exact totals
     # for counts and wire bytes are kept regardless) — see serve.metrics
     metrics_window: int = 8192
@@ -78,8 +90,9 @@ class ServeRequest:
     embedding: np.ndarray
     key: jax.Array
     t_enqueue: float
-    group: tuple = ()           # queue key, kept for failure re-enqueue
-    retries: int = 0            # dispatch attempts already failed
+    group: tuple = ()           # the (backend, n, k') queue key
+    retries: int = 0            # solo quarantine retries already spent
+    encryptions: int = 0        # query-encryption attempts (waste audit)
 
 
 @dataclasses.dataclass
@@ -91,13 +104,62 @@ class ServeResult:
     transcript: Optional[protocol.ProtocolTranscript]
     latency_s: float
     batch_size: int
-    # None on success; the dispatch failure (repr) after retries exhausted.
-    # Failed requests are returned, never silently dropped.
+    # None on success; the lane's failure (repr) after its quarantine
+    # retries are exhausted.  Failed requests are returned, never dropped.
     error: Optional[str] = None
+    # True when this lane was quarantined out of a batched dispatch (the
+    # result then came from a solo retry, or is an error result).
+    quarantined: bool = False
 
     @property
     def ok(self) -> bool:
         return self.error is None
+
+
+def _bisect_lanes(run, lanes: Sequence[int]) -> Tuple[dict, dict]:
+    """Fault-attribute one batched stage.  ``run(lane_list)`` computes the
+    stage for those lanes and returns one output per lane; the full set is
+    tried first (the clean-path fast case — identical work to a monolithic
+    dispatch), and a raising subset is split in half until the failure pins
+    to single lanes.  Stage functions must be deterministic, per-lane
+    independent, and free of tenant-rng side effects — true of the
+    perturbation, top-k', scoring and decryption stages, which consume only
+    per-request PRNG keys, already-encrypted queries, and index state — so
+    re-running a lane inside a smaller subset reproduces its bits exactly
+    and never re-encrypts anything.  Returns ({lane: output},
+    {lane: exception})."""
+    out: dict = {}
+    bad: dict = {}
+    pending = [list(lanes)]
+    while pending:
+        ls = pending.pop()
+        if not ls:
+            continue
+        try:
+            vals = run(ls)
+        except Exception as e:        # noqa: BLE001 — attribution scope
+            if len(ls) == 1:
+                bad[ls[0]] = e
+            else:
+                mid = len(ls) // 2
+                pending.append(ls[mid:])
+                pending.append(ls[:mid])   # popped first: keep lane order
+            continue
+        out.update(zip(ls, vals))
+    return out, bad
+
+
+def _lane_stage(fn, lanes: Sequence[int]) -> Tuple[dict, dict]:
+    """Per-lane stage with direct attribution: ``fn(lane)`` runs in lane
+    order; a raising lane is recorded and its batchmates continue."""
+    out: dict = {}
+    bad: dict = {}
+    for lane in lanes:
+        try:
+            out[lane] = fn(lane)
+        except Exception as e:        # noqa: BLE001 — lane-isolated
+            bad[lane] = e
+    return out, bad
 
 
 class ServeEngine:
@@ -126,6 +188,9 @@ class ServeEngine:
         # per-group FIFO queues keyed once at submit: dispatch pops from a
         # group head instead of rescanning/rewriting one global list
         self._queues: Dict[tuple, Deque[ServeRequest]] = {}
+        # refill credits: group -> grant time of its last partial dispatch
+        self._refill: Dict[tuple, float] = {}
+        self._closed = False
 
     # -- session + queue ----------------------------------------------------
 
@@ -142,21 +207,28 @@ class ServeEngine:
         replay the noise and strip the perturbation; pass an explicit key
         only for replay/parity setups.
         """
+        if self._closed:
+            raise RuntimeError("engine is closed; no further submissions")
         if tenant not in self.sessions:
             # a real error, not an assert: `python -O` strips asserts and a
             # missing session would then surface as an opaque KeyError deep
             # inside dispatch (or worse, silently mis-batch)
             raise KeyError(f"no open session for tenant {tenant!r}; call "
                            f"open_session first")
+        emb = np.asarray(embedding, np.float32)
+        if emb.ndim != 1:
+            # the group key below uses the last axis only, so a (1, n)
+            # embedding would batch with (n,) requests and break the
+            # batch-stack shapes mid-dispatch; reject it at the door
+            raise ValueError(f"embedding must be 1-D, got shape {emb.shape}")
         rid = next(self._ids)
         if key is None:
             key = jax.random.PRNGKey(secrets.randbits(63))
         sess = self.sessions.get(tenant)
-        group = (sess.backend, np.shape(embedding)[-1], sess.plan.kprime)
+        group = (sess.backend, emb.shape[-1], sess.plan.kprime)
         self._queues.setdefault(group, collections.deque()).append(
             ServeRequest(
-                request_id=rid, tenant=tenant,
-                embedding=np.asarray(embedding, np.float32), key=key,
+                request_id=rid, tenant=tenant, embedding=emb, key=key,
                 t_enqueue=self._clock(), group=group))
         return rid
 
@@ -174,6 +246,32 @@ class ServeEngine:
             return cache.stats()
         return None
 
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self) -> List[ServeResult]:
+        """Drain the queues, then release engine-held background resources:
+        the sharded candidate cache's admitter thread is stopped (pending
+        admissions still complete; the index-memoized cache itself stays
+        valid and restarts its worker lazily if another engine touches it).
+        Idempotent; returns the final drain's results.  `submit` raises
+        after close."""
+        if self._closed:
+            return []
+        out = self.drain()
+        self._closed = True
+        cache = self.cloud.index.peek_candidate_cache(
+            self.cloud.rlwe_params, self.cloud.cache_config)
+        if isinstance(cache, rlwe.ShardedCandidateCache):
+            cache.close()
+        return out
+
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False
+
     # -- dispatch -----------------------------------------------------------
 
     def step(self, *, force: bool = False) -> List[ServeResult]:
@@ -181,18 +279,28 @@ class ServeEngine:
 
         Among triggered groups the one with the oldest head request wins —
         a group that keeps hitting the size trigger must not starve another
-        group whose deadline expired."""
+        group whose deadline expired.  A group holding a *refill credit*
+        (its previous batch dispatched under `max_batch` within the last
+        `max_wait_s`) triggers immediately: continuous batching keeps
+        occupancy up without making late arrivals age out a fresh deadline."""
         now = self._clock()
         cfg = self.config
+        if self._refill:               # credits live one batching window
+            self._refill = {g: t for g, t in self._refill.items()
+                            if now - t < cfg.max_wait_s}
         chosen = None
+        chosen_refill = False
         for key, group in self._queues.items():
             size_hit = len(group) >= cfg.max_batch
             deadline_hit = (now - group[0].t_enqueue) >= cfg.max_wait_s
-            if (size_hit or deadline_hit or force) and (
+            refill_hit = cfg.refill and key in self._refill
+            if (size_hit or deadline_hit or refill_hit or force) and (
                     chosen is None
                     or group[0].t_enqueue
                     < self._queues[chosen][0].t_enqueue):
                 chosen = key
+                chosen_refill = refill_hit and not (
+                    size_hit or deadline_hit or force)
         if chosen is None:
             return []
         group = self._queues[chosen]
@@ -200,7 +308,27 @@ class ServeEngine:
                  for _ in range(min(cfg.max_batch, len(group)))]
         if not group:
             del self._queues[chosen]
-        return self._dispatch(batch)
+        self._refill.pop(chosen, None)           # credit consumed
+        leftovers = chosen in self._queues       # burst tail still queued
+        out = self._dispatch(batch)
+        if chosen_refill and any(r.ok for r in out):
+            # recorded post-dispatch like record_batch: an all-lanes
+            # failure must not read as refill-served traffic
+            self.metrics.record_refill(len(batch))
+        # only a deadline/size-triggered dispatch grants a credit — for a
+        # partial batch (spare lanes for late arrivals) or a full one that
+        # left a burst tail queued.  A refill dispatch must not re-grant
+        # (the credit would self-renew and a group under steady light
+        # traffic would never form a real batch again; a refill dispatch
+        # with a leftover tail is impossible — the size trigger wins
+        # there), and drain()'s forced flushes leave no credit behind.
+        # Stamped *after* the dispatch returns: the crypto takes far
+        # longer than a batching window, so a pre-dispatch stamp would
+        # always be expired by the time the caller can step() again.
+        if (cfg.refill and not chosen_refill and not force
+                and (len(batch) < cfg.max_batch or leftovers)):
+            self._refill[chosen] = self._clock()
+        return out
 
     def drain(self) -> List[ServeResult]:
         """Flush the queue completely (batch by batch); results in request
@@ -213,67 +341,86 @@ class ServeEngine:
     def _dispatch(self, batch: Sequence[ServeRequest]) -> List[ServeResult]:
         """Run one batch through the protocol; never lose a request.
 
-        The batch is recorded in the metrics only after it completed — a
-        protocol failure must not leave a phantom batch in the dispatch
-        stats.  On failure every popped request is accounted for: requests
-        with retry budget left go back to the *head* of their group queue
-        (so a later step() re-dispatches them in order), the rest come back
-        as error results.  The sequential comparison path fails per lane,
-        so one poisoned request cannot sink its batchmates."""
-        results: List[ServeResult] = []
-        failed: List[tuple] = []            # (request, its exception)
+        Both paths attribute failures per lane: the sequential path is a
+        lane loop, the batched path isolates inside `_run_batched`.  The
+        batch is recorded in the metrics only if at least one lane
+        completed in the dispatch — an all-lanes failure is a failed
+        dispatch, and solo quarantine retries are never recorded as
+        batches of their own (no phantom or duplicate batches)."""
+        poisoned: List[tuple] = []          # (request, its exception)
         if self.config.sequential:
-            for req in batch:
-                try:
-                    results.append(self._run_one(req))
-                except Exception as e:      # noqa: BLE001 — lane-isolated
-                    failed.append((req, e))
+            results, bad = _lane_stage(
+                lambda lane: self._run_one(batch[lane]),
+                range(len(batch)))
+            poisoned = [(batch[lane], err) for lane, err in bad.items()]
+            results = [results[lane] for lane in sorted(results)]
         else:
-            try:
-                results = self._run_batched(batch)
-            except Exception as e:          # noqa: BLE001 — batch-isolated
-                failed = [(req, e) for req in batch]
-        if not failed:
-            self.metrics.record_batch(len(batch))
+            results, poisoned = self._run_batched(batch)
+        if results:
+            # size = the dispatch slot, completed = the lanes that actually
+            # finished in it — occupancy() reads the latter, so quarantined
+            # lanes show up as lost occupancy instead of hiding behind a
+            # full-looking batch
+            self.metrics.record_batch(len(batch), completed=len(results))
+        elif poisoned:
+            self.metrics.record_dispatch_failure(len(batch))
+        by_id = {r.request_id: r for r in batch}
         for res in results:
             self.metrics.record(res.tenant, latency_s=res.latency_s,
                                 batch_size=res.batch_size,
                                 transcript=res.transcript)
-        if failed:
-            results = results + self._fail_or_requeue(failed, len(batch))
+            extra = by_id[res.request_id].encryptions - 1
+            if extra > 0:       # contract: healthy lanes encrypt once
+                self.metrics.record_healthy_reencryptions(extra)
+        if poisoned:
+            results = results + self._quarantine(poisoned, len(batch))
         return results
 
-    def _fail_or_requeue(self, failed: Sequence[tuple],
-                         batch_size: int) -> List[ServeResult]:
-        """Failure tail of `_dispatch` (``failed`` is (request, exception)
-        pairs — each lane keeps *its own* failure): re-enqueue requests
-        with retry budget (at the head of their group, preserving request
-        order) and turn the rest into error results."""
-        self.metrics.record_dispatch_failure(len(failed))
-        retry = [(r, e) for r, e in failed
-                 if r.retries < self.config.max_retries]
-        dead = [(r, e) for r, e in failed
-                if r.retries >= self.config.max_retries]
-        for req, _ in reversed(retry):      # appendleft: keep id order
-            req.retries += 1
-            self._queues.setdefault(req.group,
-                                    collections.deque()).appendleft(req)
-        if retry:
-            self.metrics.record_retries(len(retry))
-        out = []
-        for req, err in dead:
-            self.metrics.record_error(req.tenant)
-            out.append(ServeResult(
-                request_id=req.request_id, tenant=req.tenant, docs=[],
-                ids=np.empty(0, np.int64), transcript=None,
-                latency_s=self._clock() - req.t_enqueue,
-                batch_size=batch_size, error=repr(err)))
+    def _quarantine(self, poisoned: Sequence[tuple],
+                    batch_size: int) -> List[ServeResult]:
+        """Quarantine tail of `_dispatch` (``poisoned`` is (request,
+        exception) pairs — each lane carries *its own* attributed failure):
+        every poisoned lane is isolated from its batchmates and retried
+        solo on the sequential path (`EngineConfig.max_retries` attempts,
+        latency still measured from the original submit), then returned as
+        an error result.  Healthy lanes are untouched — no re-encryption,
+        no re-dispatch, no double-counted metrics."""
+        out: List[ServeResult] = []
+        self.metrics.record_quarantined(len(poisoned))
+        for req, err in poisoned:
+            res = None
+            while req.retries < self.config.max_retries:
+                req.retries += 1
+                self.metrics.record_retries(1)
+                try:
+                    res = self._run_one(req)
+                except Exception as e:  # noqa: BLE001 — retry keeps its err
+                    err = e
+                    continue
+                res.quarantined = True
+                self.metrics.record_quarantined_retry_ok(req.tenant)
+                # recorded exactly once, here (the failed batched attempt
+                # recorded nothing for this lane)
+                self.metrics.record(req.tenant, latency_s=res.latency_s,
+                                    batch_size=res.batch_size,
+                                    transcript=res.transcript)
+                break
+            if res is None:
+                self.metrics.record_error(req.tenant)
+                res = ServeResult(
+                    request_id=req.request_id, tenant=req.tenant, docs=[],
+                    ids=np.empty(0, np.int64), transcript=None,
+                    latency_s=self._clock() - req.t_enqueue,
+                    batch_size=batch_size, error=repr(err), quarantined=True)
+            out.append(res)
         return out
 
     # -- sequential comparison path ----------------------------------------
 
     def _run_one(self, req: ServeRequest) -> ServeResult:
         sess = self.sessions.get(req.tenant)
+        req.encryptions += 1
+        self.metrics.record_encryptions(1)
         docs, ids, tr = protocol.run_remoterag(sess.user, self.cloud,
                                                req.embedding, req.key)
         sess.num_requests += 1
@@ -284,92 +431,187 @@ class ServeEngine:
 
     # -- batched protocol path ---------------------------------------------
 
-    def _run_batched(self, batch: Sequence[ServeRequest]) -> List[ServeResult]:
+    def _run_batched(self, batch: Sequence[ServeRequest]) -> tuple:
+        """One batch through the staged batched protocol with lane-level
+        fault isolation.  Returns ``(results, poisoned)`` where ``results``
+        are the lanes that completed (in lane order) and ``poisoned`` is
+        ``[(request, exception)]`` for the lanes a failure was attributed
+        to.  A failure *outside* the attributable stages (batch assembly,
+        the lazy candidate-cache build, prefetch) cannot be pinned to a
+        lane, so the whole batch is returned as poisoned — every request
+        still gets its quarantine retry and error accounting; nothing is
+        ever lost to a propagating exception."""
+        try:
+            return self._run_batched_stages(batch)
+        except Exception as e:          # noqa: BLE001 — zero-loss contract
+            return [], [(req, e) for req in batch]
+
+    def _run_batched_stages(self, batch: Sequence[ServeRequest]) -> tuple:
+        """Stage pipeline behind `_run_batched`.  Batched stages attribute
+        failures by bisection (`_bisect_lanes`); naturally per-lane stages
+        attribute directly (`_lane_stage`).  Surviving lanes are re-batched
+        (compacted) after every stage and carry their already-computed
+        state forward — a healthy lane's query is encrypted exactly once,
+        whatever its batchmates do."""
         sessions = [self.sessions.get(r.tenant) for r in batch]
         users = [s.user for s in sessions]
         backend = users[0].backend
         kprime = users[0].plan.kprime
         params = self.sessions.rlwe_params
+        use_pallas = self.config.use_pallas
 
-        # module 1: vmapped DistanceDP over per-request keys / per-tenant eps
+        poisoned: List[tuple] = []
+        alive = list(range(len(batch)))
+
+        def drop(bad: dict) -> None:
+            nonlocal alive
+            if bad:
+                for lane in sorted(bad):
+                    poisoned.append((batch[lane], bad[lane]))
+                alive = [lane for lane in alive if lane not in bad]
+
+        # module 1: vmapped DistanceDP over per-request keys / per-tenant
+        # eps.  vmap guarantees lane b == perturb(keys[b], E[b], eps[b]),
+        # so a bisected re-run of any lane subset is bit-identical.
         E = np.stack([r.embedding for r in batch])
-        pert = batching.perturb_batch([r.key for r in batch], E,
-                                      [u.plan.eps for u in users])
+        pert, bad = _bisect_lanes(
+            lambda ls: list(batching.perturb_batch(
+                [batch[lane].key for lane in ls], E[list(ls)],
+                [users[lane].plan.eps for lane in ls])),
+            alive)
+        drop(bad)
+        if not alive:
+            return [], poisoned
 
-        # module 2a, cloud half first: one top-k' kernel call for all lanes.
-        # Running it before the host-side encryption surfaces the candidate
-        # ids early so sharded-cache shard admissions can be prefetched —
-        # the background H2D copy then overlaps the RLWE encrypt work below
-        # (the ROADMAP's async-overlap item, applied to data movement).
-        # Bit-identity is unaffected: top-k' consumes only the perturbed
-        # embeddings, never the tenants' rng streams.
-        res = batching.topk_batch(self.cloud.index, pert, kprime,
-                                  use_pallas=self.config.use_pallas)
-        cand_ids = np.asarray(res.indices)                    # (B, k')
-        if backend == "rlwe":
-            cache = self.cloud.candidate_cache
-            if isinstance(cache, rlwe.ShardedCandidateCache):
-                cache.prefetch(cand_ids)
+        # module 2a, cloud half first: one top-k' kernel call for all
+        # surviving lanes.  Running it before the host-side encryption
+        # surfaces the candidate ids early so sharded-cache shard
+        # admissions can be prefetched — the background H2D copy then
+        # overlaps the RLWE encrypt work below (the ROADMAP's async-overlap
+        # item, applied to data movement).  Bit-identity is unaffected:
+        # top-k' consumes only the perturbed embeddings, never the tenants'
+        # rng streams (which also makes its bisected re-runs exact).
+        cand, bad = _bisect_lanes(
+            lambda ls: list(np.asarray(batching.topk_batch(
+                self.cloud.index, np.stack([pert[lane] for lane in ls]),
+                kprime, use_pallas=use_pallas).indices)),
+            alive)
+        drop(bad)
+        if not alive:
+            return [], poisoned
+        cache = self.cloud.candidate_cache if backend == "rlwe" else None
+        if isinstance(cache, rlwe.ShardedCandidateCache):
+            try:
+                cache.prefetch(np.stack([cand[lane] for lane in alive]))
+            except Exception:   # noqa: BLE001 — prefetch is best-effort
+                # a pure admission hint: gather streams from the host pool
+                # without it, so a prefetch fault must not poison a batch
+                # whose crypto path is fine
+                pass
 
         # module 2a, user half: encrypt queries (host, submission order so
-        # each tenant's rng stream matches the sequential path)
-        wire_reqs = [
-            protocol.Request(perturbed=pb, kprime=kprime,
-                             enc_query=user.encrypt_query(req.embedding),
-                             backend=backend)
-            for user, req, pb in zip(users, batch, pert)]
-        # module 2a, cloud half continued: one batched encrypted re-rank.
-        # The RLWE path hits the index's NTT-domain candidate cache — dense
-        # (one device take) or sharded (batched lanes gather only their k'
-        # rows from the shard pool; prefetched admissions may already have
-        # swapped the hot shards in) — no per-request packing or candidate
-        # forward NTTs either way.
+        # each tenant's rng stream matches the sequential path).  Naturally
+        # per-lane — a raising lane is attributed directly, and healthy
+        # lanes keep their ciphertexts (they are never encrypted again).
+        def encrypt(lane: int):
+            batch[lane].encryptions += 1
+            self.metrics.record_encryptions(1)
+            return users[lane].encrypt_query(batch[lane].embedding)
+
+        enc, bad = _lane_stage(encrypt, alive)
+        drop(bad)
+        if not alive:
+            return [], poisoned
+        wire = {lane: protocol.Request(perturbed=pert[lane], kprime=kprime,
+                                       enc_query=enc[lane], backend=backend)
+                for lane in alive}
+
+        # module 2a, cloud half continued: one batched encrypted re-rank
+        # over the surviving lanes.  The RLWE path hits the index's
+        # NTT-domain candidate cache — dense (one device take) or sharded
+        # (lanes gather only their k' rows from the shard pool; prefetched
+        # admissions may already have swapped the hot shards in) — no
+        # per-request packing or candidate forward NTTs either way.  The
+        # stage is a pure function of the already-encrypted queries, so
+        # bisection re-runs scoring, never encryption.
         if backend == "rlwe":
-            if cache is not None:
-                enc_stack = batching.encrypted_scores_cached_batch(
-                    params, [w.enc_query for w in wire_reqs], cache,
-                    cand_ids, use_pallas=self.config.use_pallas)
-            else:                         # cold reference path
+            # the clean path keeps the whole-batch ScoreCiphertextBatch
+            # alive so decryption can take the stacked fast path (no
+            # per-lane restack); per-lane views are still handed out for
+            # the wire Reply objects and for bisected fallbacks
+            full_stack: List[object] = []
+
+            def score(ls):
+                ids = np.stack([cand[lane] for lane in ls])
+                q_cts = [enc[lane] for lane in ls]
+                if cache is not None:
+                    stack = batching.encrypted_scores_cached_batch(
+                        params, q_cts, cache, ids, use_pallas=use_pallas)
+                else:                     # cold reference path
+                    rows = np.asarray(
+                        self.cloud.index.rows(ids.reshape(-1)))
+                    cand_rows = rows.reshape(len(ls), kprime, -1)
+                    packed = batching.pack_candidates_batch(params,
+                                                            cand_rows)
+                    stack = batching.encrypted_scores_batch_stacked(
+                        params, q_cts, packed, num_cands=kprime,
+                        n_dim=cand_rows.shape[-1], use_pallas=use_pallas)
+                if len(ls) == len(alive):     # full-set call succeeded
+                    full_stack.append(stack)
+                return stack.lanes()
+
+            cts, bad = _bisect_lanes(score, alive)
+            if bad:
+                full_stack.clear()        # stack no longer matches alive
+        else:
+            def score_one(lane: int):
                 rows = np.asarray(
-                    self.cloud.index.rows(cand_ids.reshape(-1)))
-                cand_rows = rows.reshape(len(batch), kprime, -1)
-                packed = batching.pack_candidates_batch(params, cand_rows)
-                enc_stack = batching.encrypted_scores_batch_stacked(
-                    params, [w.enc_query for w in wire_reqs], packed,
-                    num_cands=kprime, n_dim=cand_rows.shape[-1],
-                    use_pallas=self.config.use_pallas)
-            encs = enc_stack.lanes()
-        else:
-            rows = np.asarray(self.cloud.index.rows(cand_ids.reshape(-1)))
-            cand_rows = rows.reshape(len(batch), kprime, -1)
-            encs = [pai.encrypted_scores(u.sk.pub, w.enc_query, cr)
-                    for u, w, cr in zip(users, wire_reqs, cand_rows)]
-        replies = [protocol.Reply(candidate_ids=cand_ids[b], enc_scores=encs[b])
-                   for b in range(len(batch))]
+                    self.cloud.index.rows(cand[lane].reshape(-1)))
+                return pai.encrypted_scores(users[lane].sk.pub, enc[lane],
+                                            rows.reshape(kprime, -1))
 
-        # back on the users: batched decryption (per-tenant keys) + sort
+            cts, bad = _lane_stage(score_one, alive)
+        drop(bad)
+        if not alive:
+            return [], poisoned
+
+        # back on the users: batched decryption (per-tenant keys) + sort —
+        # again pure in the ciphertexts, so bisection is re-decryption only
         if backend == "rlwe":
-            scores_list = batching.decrypt_scores_batch(
-                [u.sk for u in users], enc_stack,
-                use_pallas=self.config.use_pallas)
-        else:
-            scores_list = [pai.decrypt_scores(u.sk, e)
-                           for u, e in zip(users, encs)]
+            def decrypt(ls):
+                stacked = (full_stack[0]
+                           if full_stack and len(ls) == len(alive)
+                           else [cts[lane] for lane in ls])
+                return batching.decrypt_scores_batch(
+                    [users[lane].sk for lane in ls], stacked,
+                    use_pallas=use_pallas)
 
-        results = []
-        for sess, user, req, wreq, reply, scores in zip(
-                sessions, users, batch, wire_reqs, replies, scores_list):
+            scores, bad = _bisect_lanes(decrypt, alive)
+        else:
+            scores, bad = _lane_stage(
+                lambda lane: pai.decrypt_scores(users[lane].sk, cts[lane]),
+                alive)
+        drop(bad)
+
+        # module 2b/2c + accounting, per lane (direct attribution)
+        def finish(lane: int) -> ServeResult:
+            user = users[lane]
+            reply = protocol.Reply(candidate_ids=cand[lane],
+                                   enc_scores=cts[lane])
             positions = user.positions_from_scores(
-                scores, len(reply.candidate_ids))
+                scores[lane], len(reply.candidate_ids))
             docs, ids, tr = protocol.finish_request(
-                user, self.cloud, wreq, reply, positions)
-            sess.num_requests += 1
-            results.append(ServeResult(
-                request_id=req.request_id, tenant=req.tenant, docs=docs,
-                ids=ids, transcript=tr,
-                latency_s=self._clock() - req.t_enqueue,
-                batch_size=len(batch)))
-        return results
+                user, self.cloud, wire[lane], reply, positions)
+            sessions[lane].num_requests += 1
+            return ServeResult(
+                request_id=batch[lane].request_id,
+                tenant=batch[lane].tenant, docs=docs, ids=ids, transcript=tr,
+                latency_s=self._clock() - batch[lane].t_enqueue,
+                batch_size=len(batch))
+
+        done, bad = _lane_stage(finish, alive)
+        drop(bad)
+        return [done[lane] for lane in alive], poisoned
 
 
 __all__ = ["EngineConfig", "ServeRequest", "ServeResult", "ServeEngine"]

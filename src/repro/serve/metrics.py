@@ -11,13 +11,28 @@ sliding window (``window`` items, default 8192 — configurable through
 under the million-user north star cannot grow without bound.  Counts and
 byte totals stay exact forever (they are plain integer accumulators);
 `percentile`/`summary` statistics are computed over the current window.
+
+Fault-isolation accounting (all exact integers): a lane pulled out of a
+batched dispatch after fault attribution is *quarantined*
+(``quarantined_lanes``); its solo retries are ``retried_requests`` and a
+retry that succeeds is ``quarantined_retry_ok`` (also tracked per tenant, so
+per-tenant error counts distinguish healed lanes from terminal
+``errors``).  ``lane_encryptions`` counts every tenant-side query
+encryption the engine performs; ``healthy_reencryptions`` counts
+encryptions beyond the first for lanes that were never quarantined — the
+isolation contract keeps it at zero (gated in CI by
+``scripts/check_bench_regression.py``).  ``dispatch_lanes`` accumulates
+the lanes *completed* inside batched dispatches so `occupancy` reports
+useful batch fill (a quarantined lane is lost fill, not a full batch);
+refill-triggered dispatches are counted separately
+(``refill_dispatches`` / ``refilled_requests``).
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, Dict
+from typing import Deque, Dict, Optional
 
 import numpy as np
 
@@ -31,7 +46,8 @@ class TenantStats:
     """Exact integer totals + windowed latency/batch-size samples."""
     window: int = DEFAULT_WINDOW
     count: int = 0                 # exact: every recorded result
-    errors: int = 0                # exact: dispatch failures after retries
+    errors: int = 0                # exact: terminal failures (retries spent)
+    quarantined_retry_ok: int = 0  # exact: quarantined, healed on solo retry
     request_bytes: int = 0
     reply_bytes: int = 0
     fetch_bytes: int = 0
@@ -65,6 +81,8 @@ class TenantStats:
             out = {"count": self.count}
             if self.errors:
                 out["errors"] = self.errors
+            if self.quarantined_retry_ok:
+                out["quarantined_retry_ok"] = self.quarantined_retry_ok
             return out
         out = {
             "count": self.count,
@@ -78,6 +96,8 @@ class TenantStats:
         }
         if self.errors:
             out["errors"] = self.errors
+        if self.quarantined_retry_ok:
+            out["quarantined_retry_ok"] = self.quarantined_retry_ok
         return out
 
 
@@ -85,11 +105,14 @@ class ServeMetrics:
     """Accumulates TenantStats per tenant plus a process-wide aggregate.
 
     Dispatch-level accounting is exact-total + windowed-sample like the
-    tenant stats: ``num_batches``/``failed_dispatches``/``retried_requests``
-    are exact counters; ``dispatch_sizes`` keeps the trailing ``window``
-    batch sizes.  A batch is recorded only once it *completed* — the engine
-    calls `record_dispatch_failure` (never `record_batch`) for a dispatch
-    that raised, so failed batches can never masquerade as served traffic.
+    tenant stats: ``num_batches``/``dispatch_lanes``/``failed_dispatches``
+    and the quarantine/refill counters are exact; ``dispatch_sizes`` keeps
+    the trailing ``window`` batch sizes.  A batch is recorded only once the
+    dispatch *completed for at least one lane* — a dispatch whose every
+    lane failed calls `record_dispatch_failure` (never `record_batch`), so
+    failed batches can never masquerade as served traffic, and a
+    quarantined lane's solo retry is never recorded as a batch of its own
+    (no phantom or duplicate batches).
     """
 
     def __init__(self, window: int = DEFAULT_WINDOW) -> None:
@@ -98,10 +121,17 @@ class ServeMetrics:
         self.aggregate = TenantStats(window=window)
         self.dispatch_sizes: Deque[int] = collections.deque(maxlen=window)
         self.num_batches = 0           # exact: completed dispatches
-        self.failed_dispatches = 0     # exact: dispatches that raised
+        self.dispatch_lanes = 0        # exact: lanes *completed* in batches
+        self.failed_dispatches = 0     # exact: dispatches with zero lanes ok
         self.failed_requests = 0       # exact: requests in failed dispatches
-        self.retried_requests = 0      # exact: requests re-enqueued once
+        self.quarantined_lanes = 0     # exact: lanes isolated out of a batch
+        self.retried_requests = 0      # exact: solo quarantine retries run
+        self.quarantined_retry_ok = 0   # exact: solo retries that healed
         self.error_results = 0         # exact: error results handed back
+        self.lane_encryptions = 0      # exact: tenant query encryptions
+        self.healthy_reencryptions = 0  # exact: must stay 0 (CI-gated)
+        self.refill_dispatches = 0     # exact: dispatches on the refill path
+        self.refilled_requests = 0     # exact: requests they carried
 
     def _tenant(self, tenant: str) -> TenantStats:
         stats = self.tenants.get(tenant)
@@ -109,16 +139,46 @@ class ServeMetrics:
             stats = self.tenants[tenant] = TenantStats(window=self.window)
         return stats
 
-    def record_batch(self, size: int) -> None:
+    def record_batch(self, size: int, completed: Optional[int] = None) -> None:
+        """One batched dispatch went out: ``size`` lanes in the slot, of
+        which ``completed`` (default: all) actually finished there.
+        `occupancy` reads the completed count, so a quarantined lane shows
+        up as lost occupancy instead of hiding inside a full-looking
+        batch."""
         self.num_batches += 1
+        self.dispatch_lanes += size if completed is None else completed
         self.dispatch_sizes.append(size)
 
     def record_dispatch_failure(self, size: int) -> None:
         self.failed_dispatches += 1
         self.failed_requests += size
 
-    def record_retries(self, n: int) -> None:
+    def record_quarantined(self, n: int = 1) -> None:
+        """n lanes were attributed a fault and pulled out of their batch."""
+        self.quarantined_lanes += n
+
+    def record_retries(self, n: int = 1) -> None:
         self.retried_requests += n
+
+    def record_quarantined_retry_ok(self, tenant: str) -> None:
+        """A quarantined lane healed on its solo retry (counted per tenant
+        so error accounting distinguishes healed from terminal)."""
+        self.quarantined_retry_ok += 1
+        for stats in (self._tenant(tenant), self.aggregate):
+            stats.quarantined_retry_ok += 1
+
+    def record_encryptions(self, n: int = 1) -> None:
+        self.lane_encryptions += n
+
+    def record_healthy_reencryptions(self, n: int) -> None:
+        """Encryptions beyond the first for a never-quarantined lane —
+        wasted crypto the lane-isolation contract promises never happens."""
+        self.healthy_reencryptions += n
+
+    def record_refill(self, size: int) -> None:
+        """One dispatch went out on the refill trigger (group credit)."""
+        self.refill_dispatches += 1
+        self.refilled_requests += size
 
     def record_error(self, tenant: str) -> None:
         """One request came back as an error result (retries exhausted)."""
@@ -142,16 +202,35 @@ class ServeMetrics:
             else:
                 stats.direct_count += 1
 
+    def occupancy(self, max_batch: int) -> Optional[float]:
+        """Mean *completed-lane* fill of batched dispatches relative to
+        ``max_batch`` (1.0 = every batch went out full and every lane
+        finished in it; quarantined lanes count as lost fill).  None
+        before any batch completed."""
+        if not self.num_batches or max_batch <= 0:
+            return None
+        return self.dispatch_lanes / (self.num_batches * max_batch)
+
     def summary(self) -> dict:
         out = {"aggregate": self.aggregate.summary(),
                "num_batches": self.num_batches,
+               "dispatch_lanes": self.dispatch_lanes,
                "tenants": {t: s.summary() for t, s in self.tenants.items()}}
-        if self.failed_dispatches:
+        if self.refill_dispatches:
+            out["refills"] = {
+                "refill_dispatches": self.refill_dispatches,
+                "refilled_requests": self.refilled_requests,
+            }
+        if (self.failed_dispatches or self.quarantined_lanes
+                or self.error_results):
             out["failures"] = {
                 "failed_dispatches": self.failed_dispatches,
                 "failed_requests": self.failed_requests,
+                "quarantined_lanes": self.quarantined_lanes,
                 "retried_requests": self.retried_requests,
+                "quarantined_retry_ok": self.quarantined_retry_ok,
                 "error_results": self.error_results,
+                "healthy_reencryptions": self.healthy_reencryptions,
             }
         return out
 

@@ -169,6 +169,11 @@ def test_submit_without_session_raises_keyerror(corpus):
     eng = _build(index, sequential=False, max_batch=2)
     with pytest.raises(KeyError, match="nobody"):
         eng.submit("nobody", queries[0])
+    # a (1, n) embedding would group with (n,) requests (the key uses the
+    # last axis) and then blow up the batch stack mid-dispatch — rejected
+    # at submit instead
+    with pytest.raises(ValueError, match="1-D"):
+        eng.submit(TENANTS[0], queries[0][None, :])
 
 
 class _FaultyFetch:
@@ -189,10 +194,70 @@ class _FaultyFetch:
         return type(self.cloud).handle_fetch(self.cloud, cand_ids, msg)
 
 
-def test_failed_dispatch_loses_zero_requests(corpus):
-    """A dispatch that raises re-enqueues its requests (one retry) and
-    records no phantom batch; the retried dispatch returns every request
-    with the same docs/ids the clean run produces."""
+class _PoisonIds:
+    """Persistently poison ONE lane: raise whenever the fetch resolves to
+    the poisoned request's result ids (its batched lane *and* its solo
+    quarantine retry fail; every other lane's fetch delegates)."""
+
+    def __init__(self, cloud, poison_ids):
+        self.cloud = cloud
+        self.poison_ids = list(poison_ids)
+
+    def __call__(self, cand_ids, msg):
+        ids = [int(cand_ids[p]) for p in msg.positions]
+        if ids == self.poison_ids:
+            raise RuntimeError("persistently poisoned lane")
+        return type(self.cloud).handle_fetch(self.cloud, cand_ids, msg)
+
+
+def test_single_poisoned_lane_in_full_batch(corpus):
+    """One persistently poisoned lane in a batch of 8: exactly that request
+    errors, the other 7 succeed bit-identically to the sequential path, no
+    healthy lane is encrypted twice, and the metrics record exactly one
+    batch (no phantom or duplicate batches)."""
+    index, _, queries = corpus
+    _, want = _run(index, queries, sequential=True, max_batch=1)
+    # distinct result sets per request, so ids identify the poisoned lane
+    assert len({tuple(r.ids.tolist()) for r in want}) == N_REQ
+    eng = _build(index, sequential=False, max_batch=8)
+    eng.cloud.handle_fetch = _PoisonIds(eng.cloud, want[0].ids.tolist())
+    for i, q in enumerate(queries):
+        eng.submit(TENANTS[i % len(TENANTS)], q, key=jax.random.PRNGKey(i))
+    got = eng.drain()
+    assert len(got) == N_REQ
+    bad = [r for r in got if not r.ok]
+    assert [r.request_id for r in bad] == [0]
+    assert "persistently poisoned lane" in bad[0].error
+    assert bad[0].quarantined and bad[0].docs == [] and bad[0].ids.size == 0
+    for rs, rb in zip(want[1:], got[1:]):
+        assert rb.ok and not rb.quarantined
+        assert rs.request_id == rb.request_id
+        assert rs.ids.tolist() == rb.ids.tolist()
+        assert rs.docs == rb.docs
+        assert rs.transcript.total_bytes == rb.transcript.total_bytes
+        assert rs.transcript.request_bytes == rb.transcript.request_bytes
+        assert rs.transcript.reply_bytes == rb.transcript.reply_bytes
+    m = eng.metrics
+    assert m.num_batches == 1 and list(m.dispatch_sizes) == [N_REQ]
+    assert m.failed_dispatches == 0
+    assert m.quarantined_lanes == 1 and m.retried_requests == 1
+    assert m.quarantined_retry_ok == 0 and m.error_results == 1
+    # 8 batched lane encryptions + 1 solo-retry encryption; the 7 healthy
+    # lanes were each encrypted exactly once
+    assert m.lane_encryptions == N_REQ + 1
+    assert m.healthy_reencryptions == 0
+    assert m.aggregate.count == N_REQ - 1       # healthy lanes, once each
+    # occupancy counts *completed* lanes: the quarantined one is lost fill
+    assert m.dispatch_lanes == N_REQ - 1
+    assert m.occupancy(N_REQ) == (N_REQ - 1) / N_REQ
+    assert eng.pending == 0
+
+
+def test_poison_that_disappears_on_retry(corpus):
+    """A transient lane fault quarantines only that lane: its batchmates
+    complete from their already-computed state (never re-encrypted), the
+    quarantined lane heals on its solo retry and is recorded exactly once,
+    with latency measured from the original submit."""
     index, _, queries = corpus
     _, want = _run(index, queries, sequential=False, max_batch=8)
     eng = _build(index, sequential=False, max_batch=8)
@@ -201,23 +266,35 @@ def test_failed_dispatch_loses_zero_requests(corpus):
         eng.submit(TENANTS[i % len(TENANTS)], q, key=jax.random.PRNGKey(i))
     got = eng.drain()
     assert len(got) == N_REQ and all(r.ok for r in got)
+    healed = [r for r in got if r.quarantined]
+    assert [r.request_id for r in healed] == [0]
     for rs, rb in zip(want, got):
         assert rs.request_id == rb.request_id
         assert rs.ids.tolist() == rb.ids.tolist()
         assert rs.docs == rb.docs
-    # only the *completed* dispatch is recorded; the failure is accounted
-    # separately and every popped request was retried, none lost
-    assert eng.metrics.num_batches == 1
-    assert list(eng.metrics.dispatch_sizes) == [N_REQ]
-    assert eng.metrics.failed_dispatches == 1
-    assert eng.metrics.retried_requests == N_REQ
-    assert eng.metrics.error_results == 0 and eng.pending == 0
+    m = eng.metrics
+    # one real batch; the solo retry is not a batch of its own, and the
+    # quarantined lane is not counted as completed in-batch fill
+    assert m.num_batches == 1 and list(m.dispatch_sizes) == [N_REQ]
+    assert m.dispatch_lanes == N_REQ - 1
+    assert m.failed_dispatches == 0
+    assert m.quarantined_lanes == 1 and m.retried_requests == 1
+    assert m.quarantined_retry_ok == 1 and m.error_results == 0
+    # recorded once per request — no double count for the healed lane
+    assert m.aggregate.count == N_REQ
+    assert m.healthy_reencryptions == 0
+    assert m.lane_encryptions == N_REQ + 1      # only the healed lane twice
+    summary = eng.metrics.summary()
+    healed_tenant = summary["tenants"][healed[0].tenant]
+    assert healed_tenant["quarantined_retry_ok"] == 1
+    assert "errors" not in healed_tenant        # healed != terminal error
+    assert eng.pending == 0
 
 
 def test_dispatch_failure_after_retries_returns_error_results(corpus):
-    """When the cloud keeps failing, drain() still terminates and hands
-    every request back as an error result — zero requests lost, zero
-    phantom batches recorded."""
+    """When the cloud keeps failing for every lane, drain() still
+    terminates and hands every request back as an error result — zero
+    requests lost, zero phantom batches recorded."""
     index, _, queries = corpus
     eng = _build(index, sequential=False, max_batch=3)
     eng.cloud.handle_fetch = _FaultyFetch(eng.cloud, fail_times=10**9)
@@ -231,7 +308,10 @@ def test_dispatch_failure_after_retries_returns_error_results(corpus):
                for r in got)
     assert eng.pending == 0
     assert eng.metrics.num_batches == 0      # no phantom batches
-    assert eng.metrics.failed_dispatches == 2    # first try + one retry
+    assert eng.metrics.failed_dispatches == 1    # all lanes quarantined
+    assert eng.metrics.quarantined_lanes == 3
+    assert eng.metrics.retried_requests == 3     # one solo retry each
+    assert eng.metrics.quarantined_retry_ok == 0
     summary = eng.metrics.summary()
     assert summary["failures"]["error_results"] == 3
     assert eng.metrics.aggregate.errors == 3
@@ -247,15 +327,84 @@ def test_dispatch_failure_after_retries_returns_error_results(corpus):
     assert len(ok) == 1 and ok[0].ok
 
 
+def test_batched_stage_fault_is_bisected_to_one_lane(corpus, monkeypatch):
+    """A fault inside a *batched* stage (here: the vmapped DistanceDP
+    perturbation) is attributed by bisection to the one offending lane:
+    its batchmates survive the same dispatch, and the quarantined lane
+    heals on the solo sequential retry (which does not use the batched
+    seam).  The poisoned lane never reached encryption, so no healthy
+    crypto is wasted."""
+    from repro.serve import batching as batching_mod
+
+    index, _, queries = corpus
+    poison_q = np.asarray(queries[2], np.float32)
+    real = batching_mod.perturb_batch
+
+    def poisoned(keys, E, epss):
+        if any(np.array_equal(row, poison_q) for row in np.asarray(E)):
+            raise RuntimeError("poisoned batched stage")
+        return real(keys, E, epss)
+
+    monkeypatch.setattr(batching_mod, "perturb_batch", poisoned)
+    _, want = _run(index, queries, sequential=True, max_batch=1)
+    eng = _build(index, sequential=False, max_batch=8)
+    for i, q in enumerate(queries):
+        eng.submit(TENANTS[i % len(TENANTS)], q, key=jax.random.PRNGKey(i))
+    got = eng.drain()
+    assert len(got) == N_REQ and all(r.ok for r in got)
+    assert [r.request_id for r in got if r.quarantined] == [2]
+    for rs, rb in zip(want, got):
+        assert rs.ids.tolist() == rb.ids.tolist()
+        assert rs.docs == rb.docs
+    m = eng.metrics
+    assert m.quarantined_lanes == 1 and m.quarantined_retry_ok == 1
+    # 7 healthy batched encryptions + 1 solo-retry encryption; the
+    # quarantined lane was dropped before the encrypt stage
+    assert m.lane_encryptions == N_REQ
+    assert m.healthy_reencryptions == 0
+    assert m.num_batches == 1 and list(m.dispatch_sizes) == [N_REQ]
+
+
+def test_batch_only_heisenbug_heals_without_quarantine(corpus, monkeypatch):
+    """A fault that only manifests on multi-lane invocations (a batch-only
+    heisenbug) bisects down to singleton re-runs that all succeed: every
+    lane completes, nothing is quarantined, and — because the fault sat in
+    a pre-encryption stage — no query is encrypted twice."""
+    from repro.serve import batching as batching_mod
+
+    index, _, queries = corpus
+    real = batching_mod.topk_batch
+
+    def flaky(index_, pert, kprime, *, use_pallas=None):
+        if np.shape(pert)[0] > 1:
+            raise RuntimeError("batch-only fault")
+        return real(index_, pert, kprime, use_pallas=use_pallas)
+
+    monkeypatch.setattr(batching_mod, "topk_batch", flaky)
+    _, want = _run(index, queries, sequential=True, max_batch=1)
+    eng = _build(index, sequential=False, max_batch=8)
+    for i, q in enumerate(queries):
+        eng.submit(TENANTS[i % len(TENANTS)], q, key=jax.random.PRNGKey(i))
+    got = eng.drain()
+    assert len(got) == N_REQ and all(r.ok for r in got)
+    assert not any(r.quarantined for r in got)
+    for rs, rb in zip(want, got):
+        assert rs.ids.tolist() == rb.ids.tolist()
+        assert rs.docs == rb.docs
+    m = eng.metrics
+    assert m.quarantined_lanes == 0 and m.error_results == 0
+    assert m.lane_encryptions == N_REQ and m.healthy_reencryptions == 0
+
+
 def test_sequential_dispatch_isolates_poisoned_lane(corpus):
     """On the sequential comparison path a single poisoned request must not
     sink its batchmates: healthy lanes complete, the poisoned one errors
-    after its retry."""
+    after its solo quarantine retry."""
     index, _, queries = corpus
     eng = _build(index, sequential=True, max_batch=3)
     # fail exactly the 2nd request and its retry: lane order is r0(1),
-    # r1(2, fails), r2(3) — the loop continues past the failure — then the
-    # re-enqueued r1 dispatches alone as call 4 and fails for good
+    # r1(2, fails), r2(3) — the lane loop continues past the failure —
+    # then the quarantined r1 retries solo as call 4 and fails for good
     calls = [0]
 
     def poisoned(cand_ids, msg):
@@ -271,7 +420,133 @@ def test_sequential_dispatch_isolates_poisoned_lane(corpus):
     oks = [r for r in got if r.ok]
     bad = [r for r in got if not r.ok]
     assert len(oks) == 2 and len(bad) == 1
-    assert "poisoned lane" in bad[0].error
+    assert "poisoned lane" in bad[0].error and bad[0].quarantined
+
+
+def _refill_engine(index, clock, *, max_batch=3, max_wait_s=5.0):
+    eng = ServeEngine(
+        index,
+        config=EngineConfig(max_batch=max_batch, max_wait_s=max_wait_s,
+                            sequential=False),
+        sessions=SessionManager(rlwe_params=PARAMS,
+                                deterministic_seeds=True), clock=clock)
+    for t in TENANTS:
+        eng.open_session(t, n=DIM, N=N_DOCS, k=K, radius=0.05,
+                         backend="rlwe")
+    return eng
+
+
+def test_refill_admits_compatible_request_immediately(corpus):
+    """A group whose batch dispatched under max_batch holds a refill
+    credit: a compatible request arriving within the batching window is
+    dispatched by the next step() immediately, without aging out
+    max_wait_s again.  The credit expires after one window."""
+    index, _, queries = corpus
+    now = [0.0]
+    eng = _refill_engine(index, lambda: now[0])
+    eng.submit("alice", queries[0], key=jax.random.PRNGKey(0))
+    eng.submit("bob", queries[1], key=jax.random.PRNGKey(1))
+    assert eng.step() == []              # neither trigger fired
+    now[0] = 5.0                         # deadline: partial batch of 2 < 3
+    assert len(eng.step()) == 2
+    # refill: a compatible late arrival does not wait out a new deadline
+    eng.submit("carol", queries[2], key=jax.random.PRNGKey(2))
+    now[0] = 5.001
+    out = eng.step()
+    assert len(out) == 1 and out[0].ok
+    assert eng.metrics.refill_dispatches == 1
+    assert eng.metrics.refilled_requests == 1
+    # a refill dispatch must not re-grant the credit (it would self-renew
+    # and the group would never form a real batch again): the next arrival
+    # is back to normal size/deadline batching
+    now[0] = 5.002
+    eng.submit("alice", queries[3], key=jax.random.PRNGKey(3))
+    assert eng.step() == []              # no credit: back to batching
+    assert eng.metrics.refill_dispatches == 1
+    now[0] = 10.002                      # its own deadline fires normally
+    assert len(eng.step()) == 1
+    assert eng.metrics.refill_dispatches == 1
+    # ... and a deadline-granted credit expires after one batching window
+    now[0] = 15.2                        # credit from 10.002 expired at
+    eng.submit("bob", queries[4], key=jax.random.PRNGKey(4))
+    assert eng.step() == []              # 15.002; request age is only 0
+    assert eng.metrics.refill_dispatches == 1
+    now[0] = 20.2
+    assert len(eng.step()) == 1          # deadline again
+    assert eng.metrics.summary()["refills"]["refill_dispatches"] == 1
+
+
+def test_refill_serves_burst_tail(corpus):
+    """A full size-triggered dispatch that leaves requests queued grants a
+    credit too: the burst tail rides the next step() instead of waiting
+    out the deadline (and the refill dispatch does not re-grant)."""
+    index, _, queries = corpus
+    now = [0.0]
+    eng = _refill_engine(index, lambda: now[0])
+    for i in range(4):
+        eng.submit(TENANTS[i % 3], queries[i], key=jax.random.PRNGKey(i))
+    assert len(eng.step()) == 3          # size trigger: 3 of the 4
+    now[0] = 0.001
+    out = eng.step()                     # tail of 1 rides the credit
+    assert len(out) == 1 and out[0].ok
+    assert eng.metrics.refill_dispatches == 1
+    assert eng.metrics.refilled_requests == 1
+    now[0] = 0.002                       # no self-renewal from the refill
+    eng.submit("alice", queries[4], key=jax.random.PRNGKey(4))
+    assert eng.step() == []
+
+
+def test_refill_ignores_incompatible_group(corpus):
+    """A refill credit belongs to the (backend, n, k') group that earned
+    it: an incompatible request (paillier backend here, so a different
+    group key) must wait out its own triggers."""
+    index, _, queries = corpus
+    now = [0.0]
+    eng = _refill_engine(index, lambda: now[0])
+    eng.open_session("dora", n=DIM, N=N_DOCS, k=K, radius=0.05,
+                     backend="paillier", paillier_bits=256)
+    eng.submit("alice", queries[0], key=jax.random.PRNGKey(0))
+    now[0] = 5.0
+    assert len(eng.step()) == 1          # partial dispatch -> rlwe credit
+    # incompatible arrival: different (backend, n, k') group, no credit
+    eng.submit("dora", queries[1], key=jax.random.PRNGKey(1))
+    now[0] = 5.001
+    assert eng.step() == []              # must not ride the rlwe credit
+    assert eng.metrics.refill_dispatches == 0
+    now[0] = 5.001 + 5.0                 # its own deadline
+    out = eng.step()
+    assert len(out) == 1 and out[0].ok
+
+
+def test_close_drains_and_stops_admitter(corpus):
+    """`close()` (and the context manager) drains pending work, stops the
+    sharded cache's background admitter thread, and rejects further
+    submissions; close is idempotent."""
+    index, _, queries = corpus
+    cfg = EngineConfig(
+        max_batch=4, max_wait_s=30.0,
+        cache_config=rlwe.CandidateCacheConfig(num_shards=4))
+    with ServeEngine(index, config=cfg,
+                     sessions=SessionManager(
+                         rlwe_params=PARAMS,
+                         deterministic_seeds=True)) as eng:
+        for t in TENANTS:
+            eng.open_session(t, n=DIM, N=N_DOCS, k=K, radius=0.05,
+                             backend="rlwe")
+        for i in range(3):
+            eng.submit(TENANTS[i], queries[i], key=jax.random.PRNGKey(i))
+        out = eng.close()                # drains the queued requests
+        assert len(out) == 3 and all(r.ok for r in out)
+        cache = eng.cloud.index.peek_candidate_cache(
+            eng.cloud.rlwe_params, eng.cloud.cache_config)
+        assert isinstance(cache, rlwe.ShardedCandidateCache)
+        worker = cache._worker
+        assert worker is None or not worker.is_alive()
+        with pytest.raises(RuntimeError, match="closed"):
+            eng.submit(TENANTS[0], queries[0])
+        assert eng.close() == []         # idempotent
+    # __exit__ re-closes (a no-op); the engine object stays inspectable
+    assert eng.metrics.aggregate.count == 3
 
 
 def test_metrics_window_bounded():
