@@ -10,10 +10,17 @@ checks the two paths return identical per-query results (ids + wire bytes).
 
 Default sizes finish in a few minutes on CPU; REPRO_BENCH_FULL=1 scales the
 corpus and request count toward the paper's 10^6-document setting.
+
+Beyond the CSV rows this writes machine-readable ``BENCH_serve.json``
+(path override: BENCH_SERVE_JSON); ``scripts/check_bench_regression.py
+--serve-json`` gates batch-8 occupancy and the batched-vs-sequential QPS
+ratio on it.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -36,6 +43,8 @@ BATCH_SIZES = (1, 4, 8)
 # CPU-friendly ring: the serving hot loop is NTT-bound, and n_poly=1024
 # still fits DIM-dim queries in one chunk (identical protocol semantics).
 RLWE_PARAMS = rlwe.RlweParams(n_poly=1024, chunk=512)
+
+OUT_PATH = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
 
 
 def build_engine(index, *, sequential: bool, max_batch: int) -> ServeEngine:
@@ -92,6 +101,12 @@ def main() -> None:
          f"qps={seq_qps:.3f} p50={agg.percentile(50):.3f}s "
          f"p99={agg.percentile(99):.3f}s "
          f"wire_kb={agg.total_wire_bytes / agg.count / 1024:.1f}")
+    results_json = {"sequential": {
+        "qps": seq_qps,
+        "p50_s": agg.percentile(50),
+        "p99_s": agg.percentile(99),
+        "wire_kb_per_request": agg.total_wire_bytes / agg.count / 1024,
+    }}
 
     qps_by_bs = {}
     for bs in BATCH_SIZES:
@@ -117,12 +132,37 @@ def main() -> None:
             assert rs.docs == rb.docs
             assert rs.transcript.total_bytes == rb.transcript.total_bytes, (
                 f"wire mismatch at batch {bs}")
+        results_json[f"batch{bs}"] = {
+            "qps": qps,
+            "p50_s": agg.percentile(50),
+            "p99_s": agg.percentile(99),
+            "speedup_vs_sequential": qps / seq_qps,
+            "occupancy": occ,
+            "num_batches": engine.metrics.num_batches,
+            "refill_dispatches": engine.metrics.refill_dispatches,
+        }
 
     big = max(bs for bs in BATCH_SIZES if bs >= 8)
     print(f"# batched (b={big}) {qps_by_bs[big]:.3f} qps vs sequential "
           f"{seq_qps:.3f} qps ({qps_by_bs[big] / seq_qps:.2f}x)")
     assert qps_by_bs[big] > seq_qps, \
         "batched throughput at batch >= 8 must beat sequential"
+    results_json["parity_checked"] = True
+    results_json["big_batch"] = big
+
+    payload = {
+        "bench": "serve",
+        "backend": jax.default_backend(),
+        "config": {"num_docs": N_DOCS, "dim": DIM,
+                   "requests": N_REQUESTS, "tenants": N_TENANTS, "k": K,
+                   "batch_sizes": list(BATCH_SIZES),
+                   "n_poly": RLWE_PARAMS.n_poly,
+                   "chunk": RLWE_PARAMS.chunk, "full": FULL},
+        "results": results_json,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {OUT_PATH}", flush=True)
 
 
 if __name__ == "__main__":

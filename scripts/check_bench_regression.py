@@ -20,16 +20,29 @@ and fails if
     healthy-lane re-encryption under a persistently poisoned lane (must be
     exactly 0), more/fewer error results than poisoned lanes, or batch
     occupancy under faults below ``min_occupancy_ratio`` (default 0.9) of
-    the fault-free run.
+    the fault-free run, or
+  * (stage_breakdown section) the repro.obs stage timeline stopped
+    accounting for the dispatch it claims to explain: a core pipeline
+    stage went missing from a traced serve stream, or the summed stage
+    durations fall outside [0.5, 1.05] of the dispatch wall.
+
+With ``--serve-json BENCH_serve.json`` (written by
+``python -m benchmarks.serve_bench``) it additionally gates the serving
+engine itself: batch-8 occupancy must reach ``--min-serve-occupancy``
+(default 0.8) and batch-8 QPS must beat sequential by
+``--min-serve-speedup`` (default 1.0x).
 
     scripts/check_bench_regression.py [BENCH_rlwe.json] [min_speedup=1.0]
         [max_sharded_ratio=1.3] [min_mem_reduction=4.0]
         [max_skewed_ratio=1.2] [max_uniform_ratio=1.3]
         [min_occupancy_ratio=0.9]
+        [--serve-json BENCH_serve.json] [--min-serve-speedup 1.0]
+        [--min-serve-occupancy 0.8]
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 
@@ -170,34 +183,127 @@ def _check_serve_faults(section: dict, min_occupancy_ratio: float) -> int:
     return failures
 
 
-def main() -> int:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_rlwe.json"
-    min_speedup = float(sys.argv[2]) if len(sys.argv) > 2 else 1.0
-    max_ratio = float(sys.argv[3]) if len(sys.argv) > 3 else 1.3
-    min_mem_reduction = float(sys.argv[4]) if len(sys.argv) > 4 else 4.0
-    max_skewed = float(sys.argv[5]) if len(sys.argv) > 5 else 1.2
-    max_uniform = float(sys.argv[6]) if len(sys.argv) > 6 else 1.3
-    min_occupancy = float(sys.argv[7]) if len(sys.argv) > 7 else 0.9
+def _check_stage_breakdown(section: dict, min_coverage: float = 0.5,
+                           max_coverage: float = 1.05) -> int:
+    """Observability gate: the traced serve stream must record every core
+    pipeline stage, and the summed stage durations must reconcile with
+    the dispatch wall they partition.  A JSON without the section fails —
+    the gate must not silently pass after a results-key rename."""
+    if section is None:
+        print("FAIL stage_breakdown: results lack the traced stage-"
+              "breakdown section — the observability gate did not run",
+              file=sys.stderr)
+        return 1
+    failures = 0
+    stages = section.get("stages", {})
+    core = ("queue_wait", "dispatch", "perturb", "topk", "encrypt",
+            "score", "decrypt", "finish")
+    missing = [s for s in core
+               if stages.get(s, {}).get("count", 0) <= 0]
+    if missing:
+        print(f"FAIL stage_breakdown: traced stream recorded no spans for "
+              f"stage(s) {missing} — the timeline lost part of the "
+              f"pipeline", file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   stage_breakdown: all {len(core)} core stages present "
+              f"({section.get('trace_spans')} spans, "
+              f"{section.get('trace_dropped')} dropped)")
+    coverage = section.get("stage_coverage")
+    if coverage is None or not (min_coverage <= coverage <= max_coverage):
+        print(f"FAIL stage_breakdown: stage durations cover {coverage}x of "
+              f"the dispatch wall, outside [{min_coverage}, "
+              f"{max_coverage}] — spans no longer reconcile with "
+              f"end-to-end latency", file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   stage_breakdown: stage durations cover "
+              f"{coverage:.2f}x of the dispatch wall")
+    return failures
+
+
+def _check_serve(path: str, min_speedup: float,
+                 min_occupancy: float) -> int:
+    """Serving-engine gate on BENCH_serve.json: batch-8 fill and the
+    batched-vs-sequential throughput win."""
     try:
         with open(path) as f:
             data = json.load(f)
-    except (OSError, ValueError) as e:   # missing file or truncated JSON
+    except (OSError, ValueError) as e:
         print(f"FAIL: cannot read {path}: {e}", file=sys.stderr)
+        return 1
+    results = data.get("results", {})
+    big = results.get("big_batch", 8)
+    row = results.get(f"batch{big}")
+    if row is None:
+        print(f"FAIL serve: no batch{big} row in {path}", file=sys.stderr)
+        return 1
+    failures = 0
+    speedup = row.get("speedup_vs_sequential")
+    if speedup is None or speedup < min_speedup:
+        print(f"FAIL serve/batch{big}: batched qps {speedup}x sequential "
+              f"< {min_speedup}x (qps {row.get('qps')})", file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   serve/batch{big}: batched {speedup:.2f}x sequential "
+              f"qps ({row.get('qps'):.3f} qps)")
+    occ = row.get("occupancy")
+    if occ is None or occ < min_occupancy:
+        print(f"FAIL serve/batch{big}: occupancy {occ} < {min_occupancy} "
+              f"(batching is dispatching underfilled slots)",
+              file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   serve/batch{big}: occupancy {occ:.2f} "
+              f"(>= {min_occupancy})")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="CI gate on BENCH_rlwe.json (and optionally "
+                    "BENCH_serve.json) perf/contract sections.")
+    # positionals keep the historical argv layout working
+    ap.add_argument("path", nargs="?", default="BENCH_rlwe.json")
+    ap.add_argument("min_speedup", nargs="?", type=float, default=1.0)
+    ap.add_argument("max_sharded_ratio", nargs="?", type=float, default=1.3)
+    ap.add_argument("min_mem_reduction", nargs="?", type=float, default=4.0)
+    ap.add_argument("max_skewed_ratio", nargs="?", type=float, default=1.2)
+    ap.add_argument("max_uniform_ratio", nargs="?", type=float, default=1.3)
+    ap.add_argument("min_occupancy_ratio", nargs="?", type=float,
+                    default=0.9)
+    ap.add_argument("--serve-json", default=None, metavar="PATH",
+                    help="also gate BENCH_serve.json (serving-engine "
+                         "occupancy + batched-vs-sequential QPS)")
+    ap.add_argument("--min-serve-speedup", type=float, default=1.0)
+    ap.add_argument("--min-serve-occupancy", type=float, default=0.8)
+    args = ap.parse_args()
+    try:
+        with open(args.path) as f:
+            data = json.load(f)
+    except (OSError, ValueError) as e:   # missing file or truncated JSON
+        print(f"FAIL: cannot read {args.path}: {e}", file=sys.stderr)
         return 2
     results = data.get("results", {})
     if not results:
-        print(f"FAIL: {path} has no results", file=sys.stderr)
+        print(f"FAIL: {args.path} has no results", file=sys.stderr)
         return 2
-    failures = _check_cached_vs_cold(results, min_speedup)
+    failures = _check_cached_vs_cold(results, args.min_speedup)
     sharded = results.get("sharded")
     if sharded is not None:
-        failures += _check_sharded(sharded, max_ratio, min_mem_reduction)
-        failures += _check_default_config(sharded, max_skewed, max_uniform)
+        failures += _check_sharded(sharded, args.max_sharded_ratio,
+                                   args.min_mem_reduction)
+        failures += _check_default_config(sharded, args.max_skewed_ratio,
+                                          args.max_uniform_ratio)
     else:
         print("note: no sharded section in results (pre-sharded-cache "
               "JSON); skipping the sharded gates")
     failures += _check_serve_faults(results.get("serve_faults"),
-                                    min_occupancy)
+                                    args.min_occupancy_ratio)
+    failures += _check_stage_breakdown(results.get("stage_breakdown"))
+    if args.serve_json is not None:
+        failures += _check_serve(args.serve_json, args.min_serve_speedup,
+                                 args.min_serve_occupancy)
     return 1 if failures else 0
 
 

@@ -1,0 +1,173 @@
+#!/usr/bin/env python3
+"""CI gate: tracing must be free when off and loadable when on.
+
+Three checks, in order:
+
+1. **Disabled call-site overhead** — every instrumented call site pays
+   one NULL-tracer method call when tracing is off; that must stay under
+   ``MAX_DISABLED_US_PER_CALL`` (a microsecond-scale bound, measured over
+   a million calls), so `EngineConfig(trace=False)` engines are
+   indistinguishable from the pre-instrumentation engine.
+2. **Enabled end-to-end factor** — a traced serve stream must finish
+   within ``MAX_TRACED_FACTOR`` of the same stream untraced (plus a
+   fixed slack absorbing wall-clock noise on a seconds-long run).  The
+   crypto dominates; span recording is microseconds per stage.
+3. **Trace file validity** — the traced run must write a Chrome-trace
+   JSON that loads, covers every core pipeline stage, and whose
+   queue_wait + dispatch intervals reconcile with each request's
+   end-to-end latency.
+
+    PYTHONPATH=src python scripts/check_trace_overhead.py
+
+Exit 0 on pass, 1 on any failed check (wired into scripts/smoke.sh).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+
+from repro import obs
+from repro.crypto import rlwe
+from repro.retrieval.index import FlatIndex
+from repro.serve import EngineConfig, ServeEngine
+from repro.serve.session import SessionManager
+
+MAX_DISABLED_US_PER_CALL = 10.0   # NULL-tracer span call, amortized
+MAX_TRACED_FACTOR = 1.5           # traced wall vs untraced wall ...
+TRACED_SLACK_S = 1.0              # ... plus fixed noise slack
+CORE_STAGES = ("queue_wait", "dispatch", "perturb", "topk", "encrypt",
+               "score", "decrypt", "finish")
+
+N_DOCS, DIM, K, N_REQ, MAX_BATCH = 512, 64, 4, 8, 4
+PARAMS = rlwe.RlweParams(n_poly=1024, chunk=512)
+
+
+def check_disabled_overhead() -> int:
+    n = 1_000_000
+    tracer = obs.NULL_TRACER
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with tracer.span("stage", batch_id=1, lanes=8):
+            pass
+    per_call_us = (time.perf_counter() - t0) / n * 1e6
+    if per_call_us > MAX_DISABLED_US_PER_CALL:
+        print(f"FAIL disabled-overhead: {per_call_us:.2f}us per NULL span "
+              f"call > {MAX_DISABLED_US_PER_CALL}us", file=sys.stderr)
+        return 1
+    print(f"ok   disabled-overhead: {per_call_us:.2f}us per NULL span "
+          f"call (bound {MAX_DISABLED_US_PER_CALL}us)")
+    return 0
+
+
+def _run_stream(index, queries, *, trace: bool):
+    eng = ServeEngine(
+        index,
+        config=EngineConfig(max_batch=MAX_BATCH, max_wait_s=30.0,
+                            trace=trace),
+        sessions=SessionManager(rlwe_params=PARAMS,
+                                deterministic_seeds=True))
+    for t in range(4):
+        eng.open_session(f"smoke-{t}", n=DIM, N=N_DOCS, k=K,
+                         radius=0.05, backend="rlwe")
+    for i in range(N_REQ):
+        eng.submit(f"smoke-{i % 4}", queries[i], key=jax.random.PRNGKey(i))
+    t0 = time.perf_counter()
+    results = eng.drain()
+    wall = time.perf_counter() - t0
+    assert all(r.ok for r in results), "smoke stream must succeed"
+    eng.close()
+    return wall, results, eng
+
+
+def check_traced_run() -> int:
+    rng = np.random.default_rng(0)
+    emb = rng.standard_normal((N_DOCS, DIM)).astype(np.float32)
+    emb /= np.linalg.norm(emb, axis=1, keepdims=True)
+    index = FlatIndex.build(
+        emb, documents=[f"doc-{i}".encode() for i in range(N_DOCS)])
+    queries = emb[:N_REQ] + rng.standard_normal(
+        (N_REQ, DIM)).astype(np.float32) * 0.01
+
+    _run_stream(index, queries, trace=False)          # jit warmup
+    untraced_wall, untraced_res, _ = _run_stream(index, queries,
+                                                 trace=False)
+    traced_wall, traced_res, eng = _run_stream(index, queries, trace=True)
+
+    failures = 0
+    bound = untraced_wall * MAX_TRACED_FACTOR + TRACED_SLACK_S
+    if traced_wall > bound:
+        print(f"FAIL traced-overhead: traced stream took {traced_wall:.3f}s "
+              f"vs {untraced_wall:.3f}s untraced (bound {bound:.3f}s)",
+              file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   traced-overhead: {traced_wall:.3f}s traced vs "
+              f"{untraced_wall:.3f}s untraced "
+              f"(bound {MAX_TRACED_FACTOR}x + {TRACED_SLACK_S}s)")
+
+    # tracing must not change results (bit-identity with tracing off)
+    for ru, rt in zip(untraced_res, traced_res):
+        assert ru.ids.tolist() == rt.ids.tolist(), \
+            "tracing changed result ids"
+        assert ru.docs == rt.docs, "tracing changed result docs"
+    print("ok   traced-identity: traced results bit-identical to untraced")
+
+    fd, path = tempfile.mkstemp(suffix=".json", prefix="trace-smoke-")
+    os.close(fd)
+    try:
+        n_events = eng.write_trace(path)
+        doc = obs.load_chrome_trace(path)
+        names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+        missing = [s for s in CORE_STAGES if s not in names]
+        if missing or n_events == 0:
+            print(f"FAIL trace-file: {n_events} events, missing stages "
+                  f"{missing}", file=sys.stderr)
+            failures += 1
+        else:
+            print(f"ok   trace-file: {n_events} events load, all "
+                  f"{len(CORE_STAGES)} core stages present")
+    finally:
+        os.unlink(path)
+
+    # per-request reconciliation: queue_wait + dispatch must bound the
+    # reported end-to-end latency (small tolerance for clock reads
+    # between the dispatch span end and the latency stamp)
+    spans = eng.tracer.spans()
+    dispatches = {s.batch_id: s for s in spans if s.name == "dispatch"}
+    waits = {s.request_id: s for s in spans if s.name == "queue_wait"}
+    bad = 0
+    for res in traced_res:
+        w = waits.get(res.request_id)
+        d = dispatches.get(w.batch_id) if w is not None else None
+        if w is None or d is None:
+            bad += 1
+            continue
+        explained = w.duration_s + d.duration_s
+        if not (res.latency_s <= explained + 0.05):
+            bad += 1
+    if bad:
+        print(f"FAIL trace-reconcile: {bad}/{len(traced_res)} requests' "
+              f"latency not explained by queue_wait + dispatch",
+              file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   trace-reconcile: all {len(traced_res)} request "
+              f"latencies within queue_wait + dispatch")
+    return failures
+
+
+def main() -> int:
+    failures = check_disabled_overhead()
+    failures += check_traced_run()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,7 +21,14 @@ python -m pytest -q -m "not slow" "$@"
 # documented `repro.*` symbol imports
 python scripts/check_docs.py
 
+# observability gate: tracing disabled costs ~nothing, a traced run
+# writes a loadable Chrome-trace covering every pipeline stage, and
+# tracing never changes results
+python scripts/check_trace_overhead.py
+
 if [[ "${SMOKE_BENCH:-0}" == "1" ]]; then
   python -m benchmarks.run --only rlwe
-  python scripts/check_bench_regression.py BENCH_rlwe.json
+  python -m benchmarks.serve_bench
+  python scripts/check_bench_regression.py BENCH_rlwe.json \
+    --serve-json BENCH_serve.json
 fi

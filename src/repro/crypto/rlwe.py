@@ -58,6 +58,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from repro.crypto import modring
 from repro.crypto.modring import PrimeCtx
 from repro.kernels.ntt import ops as ntt_ops
@@ -635,6 +637,20 @@ class ShardedCandidateCache:
         self._worker: Optional[threading.Thread] = None
         self._closed = False
         self._admit_hook = None           # test seam: called(s) pre-swap
+        # telemetry sink (repro.obs): the serving engine re-binds these
+        # every dispatch via `set_trace_context` — the cache is index-
+        # memoized and may outlive any one engine.  Spans record only
+        # shard ids and byte/row counts (redaction enforced by the
+        # tracer); the admitter thread records on its own "admitter"
+        # track, parented to the batch whose prefetch/gather enqueued it.
+        self.tracer = obs.NULL_TRACER
+        self._trace_batch: Optional[int] = None
+
+    def set_trace_context(self, tracer, batch_id: Optional[int]) -> None:
+        """Bind the tracer + current batch id for spans this cache emits
+        (including admissions completed later on the admitter thread)."""
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
+        self._trace_batch = batch_id
 
     @property
     def num_shards(self) -> int:
@@ -705,8 +721,10 @@ class ShardedCandidateCache:
         most-recent); evicts oldest shards if over budget.  Always
         synchronous — operator placement wants the shard resident on
         return, whatever the background policy."""
-        with self._lock:
-            self._admit_locked(int(shard_id))
+        with self.tracer.span("cache_pin", shard=int(shard_id),
+                              batch_id=self._trace_batch):
+            with self._lock:
+                self._admit_locked(int(shard_id))
 
     # -- admission: shared swap-in (caller holds the lock) -------------------
 
@@ -725,8 +743,12 @@ class ShardedCandidateCache:
         if self.max_resident_bytes is not None:
             while (self._resident_bytes_locked() + nbytes
                    > self.max_resident_bytes):
-                self._resident.popitem(last=False)
+                evicted, _ = self._resident.popitem(last=False)
                 self.evictions += 1
+                # tracer has its own lock and never takes the cache lock,
+                # so recording under the cache lock cannot deadlock
+                self.tracer.event("cache_evict", shard=int(evicted),
+                                  batch_id=self._trace_batch)
         self._resident[s] = arr
         self.admissions += 1
         self.peak_resident_bytes = max(self.peak_resident_bytes,
@@ -745,7 +767,10 @@ class ShardedCandidateCache:
             return
         if not self._fits_budget(s):
             return                  # shard alone exceeds the budget: stream
-        self._swap_in_locked(s, self._stage_copy(s))
+        with self.tracer.span("cache_admit", shard=int(s),
+                              batch_id=self._trace_batch,
+                              bytes=int(self.shards[s].nbytes)):
+            self._swap_in_locked(s, self._stage_copy(s))
 
     # -- admission: frequency-aware policy + background admitter -------------
 
@@ -773,7 +798,9 @@ class ShardedCandidateCache:
             return
         self._touch_counts.pop(s, None)
         self._inflight.add(s)
-        self._queue.append(s)
+        # the triggering batch rides along so the admitter's span is
+        # parented to the request that earned the admission
+        self._queue.append((s, self._trace_batch))
         self.admit_enqueued += 1
         if self._worker is None or not self._worker.is_alive():
             self._worker = threading.Thread(
@@ -796,7 +823,9 @@ class ShardedCandidateCache:
                 if not self._queue:       # closed, or idled out: retire
                     self._worker = None
                     return
-                s = self._queue.popleft()
+                s, parent = self._queue.popleft()
+            tracer = self.tracer
+            t0 = tracer.clock() if tracer.enabled else 0.0
             try:
                 hook = self._admit_hook   # test seam: delay/observe the copy
                 if hook is not None:
@@ -805,6 +834,7 @@ class ShardedCandidateCache:
                 jax.block_until_ready(arr)   # the copy, off-request-path
             except Exception:             # noqa: BLE001 — a failed copy must
                 arr = None                # not strand flush()/later admits
+            swapped = False
             with self._cv:
                 self._inflight.discard(s)
                 if arr is None:
@@ -814,7 +844,17 @@ class ShardedCandidateCache:
                 elif self._fits_budget(s) and self.max_resident_bytes != 0:
                     self._swap_in_locked(s, arr)
                     self.async_admissions += 1
+                    swapped = True
                 self._cv.notify_all()     # wake flush()
+            if tracer.enabled:
+                # span covers the whole off-path admission (staged copy +
+                # swap) on the admitter's own track, so the timeline shows
+                # it overlapping the request's encrypt/score compute
+                tracer.record("cache_admit", t0, tracer.clock(),
+                              track="admitter", batch_id=parent,
+                              shard=int(s),
+                              bytes=int(self.shards[s].nbytes),
+                              ok=swapped)
 
     def prefetch(self, ids) -> int:
         """Serving-engine admission hook: note the shard touches implied by
@@ -830,6 +870,8 @@ class ShardedCandidateCache:
         shard_ids = self._shard_ids(flat)
         if flat.size == 0:
             return 0
+        tracer = self.tracer
+        t0 = tracer.clock() if tracer.enabled else 0.0
         touched = 0
         with self._lock:
             # one fresh credit set per batch: stale credits from a previous
@@ -844,6 +886,9 @@ class ShardedCandidateCache:
                 self._prefetched.add(s)
                 self.prefetches += 1
                 touched += 1
+        if tracer.enabled:
+            tracer.record("cache_prefetch", t0, tracer.clock(),
+                          batch_id=self._trace_batch, shards=touched)
         return touched
 
     def flush(self, timeout: float = 60.0) -> None:
@@ -888,6 +933,9 @@ class ShardedCandidateCache:
         ids = np.asarray(ids)
         assert ids.ndim == 2, "ids must be (B, num_cands)"
         bsz, nc = ids.shape
+        tracer = self.tracer
+        t0 = tracer.clock() if tracer.enabled else 0.0
+        h0, m0, g0 = self.hits, self.misses, self.gathered_bytes
         flat = ids.reshape(-1)
         shard_ids = self._shard_ids(flat)
         local = flat - shard_ids * self.shard_docs
@@ -923,8 +971,15 @@ class ShardedCandidateCache:
         inv = np.empty_like(order)
         inv[order] = np.arange(order.size)                # undo the grouping
         g = jnp.take(g, jnp.asarray(inv), axis=0)
-        return g.reshape(bsz, nc, self.num_chunks,
-                         self.params.num_primes, self.params.n_poly)
+        out = g.reshape(bsz, nc, self.num_chunks,
+                        self.params.num_primes, self.params.n_poly)
+        if tracer.enabled:
+            tracer.record("cache_gather", t0, tracer.clock(),
+                          batch_id=self._trace_batch, lanes=int(bsz),
+                          num_cands=int(nc), shards=int(uniq.size),
+                          hits=self.hits - h0, misses=self.misses - m0,
+                          bytes=self.gathered_bytes - g0)
+        return out
 
 
 def _check_cache_compatible(cache, params: RlweParams, n_dim=None) -> None:

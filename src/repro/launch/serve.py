@@ -8,6 +8,9 @@ wire-size stats per request plus the per-tenant engine metrics.
 
 `python -m repro.launch.serve --n-docs 20000 --requests 8 --backend rlwe`
 `... --no-batch` runs the sequential one-query-at-a-time comparison path.
+`... --trace-out trace.json` enables stage-level span tracing (repro.obs)
+and writes a Chrome-trace timeline loadable at https://ui.perfetto.dev;
+the summary then carries per-stage latency histograms.
 """
 
 from __future__ import annotations
@@ -40,6 +43,9 @@ def main() -> None:
     ap.add_argument("--max-wait-ms", type=float, default=20.0)
     ap.add_argument("--no-batch", action="store_true",
                     help="sequential comparison path (one query per step)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable stage tracing and write a Perfetto-"
+                         "loadable Chrome-trace JSON timeline to PATH")
     args = ap.parse_args()
     if args.tenants < 1 or args.requests < 1:
         ap.error("--tenants and --requests must be >= 1")
@@ -57,7 +63,8 @@ def main() -> None:
     with ServeEngine(index, config=EngineConfig(
             max_batch=1 if args.no_batch else args.max_batch,
             max_wait_s=args.max_wait_ms / 1e3,
-            sequential=args.no_batch)) as engine:
+            sequential=args.no_batch,
+            trace=args.trace_out is not None)) as engine:
         for t in range(args.tenants):
             sess = engine.open_session(f"tenant-{t}", n=args.dim,
                                        N=args.n_docs, k=args.k,
@@ -105,7 +112,14 @@ def main() -> None:
                else round(occupancy, 3)}
         if "failures" in summary:
             out["failures"] = summary["failures"]
+        if "trace" in summary:
+            out["stages"] = summary["trace"]["stages"]
         print(json.dumps(out))
+        if args.trace_out is not None:
+            n_events = engine.write_trace(args.trace_out)
+            print(json.dumps({"trace_out": args.trace_out,
+                              "trace_events": n_events,
+                              "view": "https://ui.perfetto.dev"}))
 
 
 if __name__ == "__main__":

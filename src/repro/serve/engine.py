@@ -48,6 +48,7 @@ import numpy as np
 
 import jax
 
+from repro import obs
 from repro.core import protocol
 from repro.crypto import paillier as pai
 from repro.crypto import rlwe
@@ -81,6 +82,13 @@ class EngineConfig:
     # bounded per-tenant latency/batch-size sample windows (exact totals
     # for counts and wire bytes are kept regardless) — see serve.metrics
     metrics_window: int = 8192
+    # stage-level span tracing (repro.obs): off by default — the NULL
+    # tracer keeps the disabled cost near zero (CI-gated by
+    # scripts/check_trace_overhead.py).  Spans carry only structural
+    # facts (redaction enforced at record time, see repro.obs.trace).
+    trace: bool = False
+    # span ring-buffer capacity; stage histograms stay complete past it
+    trace_capacity: int = 65536
 
 
 @dataclasses.dataclass
@@ -116,7 +124,9 @@ class ServeResult:
         return self.error is None
 
 
-def _bisect_lanes(run, lanes: Sequence[int]) -> Tuple[dict, dict]:
+def _bisect_lanes(run, lanes: Sequence[int], *,
+                  tracer=obs.NULL_TRACER, batch_id: Optional[int] = None,
+                  stage: str = "") -> Tuple[dict, dict]:
     """Fault-attribute one batched stage.  ``run(lane_list)`` computes the
     stage for those lanes and returns one output per lane; the full set is
     tried first (the clean-path fast case — identical work to a monolithic
@@ -138,6 +148,8 @@ def _bisect_lanes(run, lanes: Sequence[int]) -> Tuple[dict, dict]:
         try:
             vals = run(ls)
         except Exception as e:        # noqa: BLE001 — attribution scope
+            tracer.event("bisect", batch_id=batch_id, stage=stage,
+                         subset=len(ls), error_type=type(e).__name__)
             if len(ls) == 1:
                 bad[ls[0]] = e
             else:
@@ -173,7 +185,8 @@ class ServeEngine:
     def __init__(self, index: FlatIndex, *,
                  config: Optional[EngineConfig] = None,
                  sessions: Optional[SessionManager] = None,
-                 clock=time.monotonic):
+                 clock=time.monotonic,
+                 tracer: Optional[obs.Tracer] = None):
         self.config = EngineConfig() if config is None else config
         # `is None` (not truthiness): an empty SessionManager has len 0
         self.sessions = SessionManager() if sessions is None else sessions
@@ -182,9 +195,23 @@ class ServeEngine:
             use_pallas=self.config.use_pallas,
             use_candidate_cache=self.config.use_candidate_cache,
             cache_config=self.config.cache_config)
-        self.metrics = ServeMetrics(window=self.config.metrics_window)
+        # an explicit tracer wins (tests inject one built on a fake
+        # clock); otherwise EngineConfig.trace selects a real tracer on
+        # *the engine's own clock* — queue-wait spans are computed from
+        # t_enqueue, so tracer and engine must share one timeline
+        if tracer is not None:
+            self.tracer = tracer
+        elif self.config.trace:
+            self.tracer = obs.Tracer(capacity=self.config.trace_capacity,
+                                     clock=clock)
+        else:
+            self.tracer = obs.NULL_TRACER
+        self.metrics = ServeMetrics(
+            window=self.config.metrics_window,
+            tracer=self.tracer if self.tracer.enabled else None)
         self._clock = clock
         self._ids = itertools.count()
+        self._batch_ids = itertools.count()
         # per-group FIFO queues keyed once at submit: dispatch pops from a
         # group head instead of rescanning/rewriting one global list
         self._queues: Dict[tuple, Deque[ServeRequest]] = {}
@@ -245,6 +272,25 @@ class ServeEngine:
         if isinstance(cache, rlwe.ShardedCandidateCache):
             return cache.stats()
         return None
+
+    # -- telemetry ----------------------------------------------------------
+
+    def trace_summary(self) -> Optional[dict]:
+        """JSON-ready stage-level telemetry snapshot (span counts + per-
+        stage histograms); None when tracing is disabled.  The same
+        snapshot rides along in ``metrics.summary()["trace"]``."""
+        return self.tracer.snapshot() if self.tracer.enabled else None
+
+    def write_trace(self, path: str) -> int:
+        """Write the span ring as a Chrome-trace (Perfetto-loadable) JSON
+        timeline; returns the number of duration events written."""
+        if not self.tracer.enabled:
+            raise RuntimeError(
+                "tracing is disabled; construct the engine with "
+                "EngineConfig(trace=True) or pass tracer=")
+        return obs.write_chrome_trace(
+            path, self.tracer.spans(),
+            stage_summary=self.tracer.stage_summary())
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -315,6 +361,7 @@ class ServeEngine:
             # recorded post-dispatch like record_batch: an all-lanes
             # failure must not read as refill-served traffic
             self.metrics.record_refill(len(batch))
+            self.tracer.event("refill", requests=len(batch))
         # only a deadline/size-triggered dispatch grants a credit — for a
         # partial batch (spare lanes for late arrivals) or a full one that
         # left a burst tail queued.  A refill dispatch must not re-grant
@@ -348,14 +395,29 @@ class ServeEngine:
         dispatch, and solo quarantine retries are never recorded as
         batches of their own (no phantom or duplicate batches)."""
         poisoned: List[tuple] = []          # (request, its exception)
-        if self.config.sequential:
-            results, bad = _lane_stage(
-                lambda lane: self._run_one(batch[lane]),
-                range(len(batch)))
-            poisoned = [(batch[lane], err) for lane, err in bad.items()]
-            results = [results[lane] for lane in sorted(results)]
-        else:
-            results, poisoned = self._run_batched(batch)
+        bid = next(self._batch_ids)
+        tr = self.tracer
+        if tr.enabled:
+            # queue wait is the interval the tenant already spent before
+            # any stage ran: t_enqueue -> dispatch start, on the engine's
+            # own clock (same one t_enqueue was stamped with)
+            now = self._clock()
+            for req in batch:
+                tr.record("queue_wait", req.t_enqueue, now,
+                          track=f"request-{req.request_id}",
+                          request_id=req.request_id, batch_id=bid,
+                          tenant=req.tenant)
+        with tr.span("dispatch", batch_id=bid, batch_size=len(batch),
+                     backend=batch[0].group[0]):
+            if self.config.sequential:
+                results, bad = _lane_stage(
+                    lambda lane: self._run_one(batch[lane]),
+                    range(len(batch)))
+                poisoned = [(batch[lane], err)
+                            for lane, err in bad.items()]
+                results = [results[lane] for lane in sorted(results)]
+            else:
+                results, poisoned = self._run_batched(batch, bid)
         if results:
             # size = the dispatch slot, completed = the lanes that actually
             # finished in it — occupancy() reads the latter, so quarantined
@@ -387,13 +449,20 @@ class ServeEngine:
         no re-dispatch, no double-counted metrics."""
         out: List[ServeResult] = []
         self.metrics.record_quarantined(len(poisoned))
+        tr = self.tracer
         for req, err in poisoned:
+            tr.event("quarantine", track=f"request-{req.request_id}",
+                     request_id=req.request_id, tenant=req.tenant,
+                     error_type=type(err).__name__)
             res = None
             while req.retries < self.config.max_retries:
                 req.retries += 1
                 self.metrics.record_retries(1)
                 try:
-                    res = self._run_one(req)
+                    with tr.span("retry", track=f"request-{req.request_id}",
+                                 request_id=req.request_id,
+                                 tenant=req.tenant, attempt=req.retries):
+                        res = self._run_one(req)
                 except Exception as e:  # noqa: BLE001 — retry keeps its err
                     err = e
                     continue
@@ -421,8 +490,12 @@ class ServeEngine:
         sess = self.sessions.get(req.tenant)
         req.encryptions += 1
         self.metrics.record_encryptions(1)
-        docs, ids, tr = protocol.run_remoterag(sess.user, self.cloud,
-                                               req.embedding, req.key)
+        with self.tracer.span("sequential",
+                              track=f"request-{req.request_id}",
+                              request_id=req.request_id,
+                              tenant=req.tenant):
+            docs, ids, tr = protocol.run_remoterag(sess.user, self.cloud,
+                                                   req.embedding, req.key)
         sess.num_requests += 1
         return ServeResult(request_id=req.request_id, tenant=req.tenant,
                            docs=docs, ids=ids, transcript=tr,
@@ -431,7 +504,8 @@ class ServeEngine:
 
     # -- batched protocol path ---------------------------------------------
 
-    def _run_batched(self, batch: Sequence[ServeRequest]) -> tuple:
+    def _run_batched(self, batch: Sequence[ServeRequest],
+                     bid: Optional[int] = None) -> tuple:
         """One batch through the staged batched protocol with lane-level
         fault isolation.  Returns ``(results, poisoned)`` where ``results``
         are the lanes that completed (in lane order) and ``poisoned`` is
@@ -442,11 +516,12 @@ class ServeEngine:
         still gets its quarantine retry and error accounting; nothing is
         ever lost to a propagating exception."""
         try:
-            return self._run_batched_stages(batch)
+            return self._run_batched_stages(batch, bid)
         except Exception as e:          # noqa: BLE001 — zero-loss contract
             return [], [(req, e) for req in batch]
 
-    def _run_batched_stages(self, batch: Sequence[ServeRequest]) -> tuple:
+    def _run_batched_stages(self, batch: Sequence[ServeRequest],
+                            bid: Optional[int] = None) -> tuple:
         """Stage pipeline behind `_run_batched`.  Batched stages attribute
         failures by bisection (`_bisect_lanes`); naturally per-lane stages
         attribute directly (`_lane_stage`).  Surviving lanes are re-batched
@@ -459,6 +534,7 @@ class ServeEngine:
         kprime = users[0].plan.kprime
         params = self.sessions.rlwe_params
         use_pallas = self.config.use_pallas
+        tr = self.tracer
 
         poisoned: List[tuple] = []
         alive = list(range(len(batch)))
@@ -474,11 +550,12 @@ class ServeEngine:
         # eps.  vmap guarantees lane b == perturb(keys[b], E[b], eps[b]),
         # so a bisected re-run of any lane subset is bit-identical.
         E = np.stack([r.embedding for r in batch])
-        pert, bad = _bisect_lanes(
-            lambda ls: list(batching.perturb_batch(
-                [batch[lane].key for lane in ls], E[list(ls)],
-                [users[lane].plan.eps for lane in ls])),
-            alive)
+        with tr.span("perturb", batch_id=bid, lanes=len(alive)):
+            pert, bad = _bisect_lanes(
+                lambda ls: list(batching.perturb_batch(
+                    [batch[lane].key for lane in ls], E[list(ls)],
+                    [users[lane].plan.eps for lane in ls])),
+                alive, tracer=tr, batch_id=bid, stage="perturb")
         drop(bad)
         if not alive:
             return [], poisoned
@@ -491,16 +568,24 @@ class ServeEngine:
         # item, applied to data movement).  Bit-identity is unaffected:
         # top-k' consumes only the perturbed embeddings, never the tenants'
         # rng streams (which also makes its bisected re-runs exact).
-        cand, bad = _bisect_lanes(
-            lambda ls: list(np.asarray(batching.topk_batch(
-                self.cloud.index, np.stack([pert[lane] for lane in ls]),
-                kprime, use_pallas=use_pallas).indices)),
-            alive)
+        with tr.span("topk", batch_id=bid, lanes=len(alive),
+                     kprime=kprime):
+            cand, bad = _bisect_lanes(
+                lambda ls: list(np.asarray(batching.topk_batch(
+                    self.cloud.index, np.stack([pert[lane] for lane in ls]),
+                    kprime, use_pallas=use_pallas).indices)),
+                alive, tracer=tr, batch_id=bid, stage="topk")
         drop(bad)
         if not alive:
             return [], poisoned
         cache = self.cloud.candidate_cache if backend == "rlwe" else None
         if isinstance(cache, rlwe.ShardedCandidateCache):
+            # stamp the trace context every dispatch: the cache is index-
+            # memoized and may be shared across engines, so each dispatch
+            # (re)binds its own tracer, and admissions this batch enqueues
+            # are parented to it even when the admitter thread completes
+            # them later
+            cache.set_trace_context(tr, bid)
             try:
                 cache.prefetch(np.stack([cand[lane] for lane in alive]))
             except Exception:   # noqa: BLE001 — prefetch is best-effort
@@ -514,9 +599,13 @@ class ServeEngine:
         # per-lane — a raising lane is attributed directly, and healthy
         # lanes keep their ciphertexts (they are never encrypted again).
         def encrypt(lane: int):
-            batch[lane].encryptions += 1
+            req = batch[lane]
+            req.encryptions += 1
             self.metrics.record_encryptions(1)
-            return users[lane].encrypt_query(batch[lane].embedding)
+            with tr.span("encrypt", track=f"request-{req.request_id}",
+                         request_id=req.request_id, batch_id=bid,
+                         tenant=req.tenant, lane=lane):
+                return users[lane].encrypt_query(req.embedding)
 
         enc, bad = _lane_stage(encrypt, alive)
         drop(bad)
@@ -560,7 +649,10 @@ class ServeEngine:
                     full_stack.append(stack)
                 return stack.lanes()
 
-            cts, bad = _bisect_lanes(score, alive)
+            with tr.span("score", batch_id=bid, lanes=len(alive),
+                         kprime=kprime, backend=backend):
+                cts, bad = _bisect_lanes(score, alive, tracer=tr,
+                                         batch_id=bid, stage="score")
             if bad:
                 full_stack.clear()        # stack no longer matches alive
         else:
@@ -570,7 +662,9 @@ class ServeEngine:
                 return pai.encrypted_scores(users[lane].sk.pub, enc[lane],
                                             rows.reshape(kprime, -1))
 
-            cts, bad = _lane_stage(score_one, alive)
+            with tr.span("score", batch_id=bid, lanes=len(alive),
+                         kprime=kprime, backend=backend):
+                cts, bad = _lane_stage(score_one, alive)
         drop(bad)
         if not alive:
             return [], poisoned
@@ -586,27 +680,36 @@ class ServeEngine:
                     [users[lane].sk for lane in ls], stacked,
                     use_pallas=use_pallas)
 
-            scores, bad = _bisect_lanes(decrypt, alive)
+            with tr.span("decrypt", batch_id=bid, lanes=len(alive)):
+                scores, bad = _bisect_lanes(decrypt, alive, tracer=tr,
+                                            batch_id=bid, stage="decrypt")
         else:
-            scores, bad = _lane_stage(
-                lambda lane: pai.decrypt_scores(users[lane].sk, cts[lane]),
-                alive)
+            with tr.span("decrypt", batch_id=bid, lanes=len(alive)):
+                scores, bad = _lane_stage(
+                    lambda lane: pai.decrypt_scores(users[lane].sk,
+                                                    cts[lane]),
+                    alive)
         drop(bad)
 
         # module 2b/2c + accounting, per lane (direct attribution)
         def finish(lane: int) -> ServeResult:
             user = users[lane]
+            req = batch[lane]
             reply = protocol.Reply(candidate_ids=cand[lane],
                                    enc_scores=cts[lane])
-            positions = user.positions_from_scores(
-                scores[lane], len(reply.candidate_ids))
-            docs, ids, tr = protocol.finish_request(
-                user, self.cloud, wire[lane], reply, positions)
+            with tr.span("finish", track=f"request-{req.request_id}",
+                         request_id=req.request_id, batch_id=bid,
+                         tenant=req.tenant, lane=lane):
+                positions = user.positions_from_scores(
+                    scores[lane], len(reply.candidate_ids))
+                docs, ids, transcript = protocol.finish_request(
+                    user, self.cloud, wire[lane], reply, positions)
             sessions[lane].num_requests += 1
             return ServeResult(
-                request_id=batch[lane].request_id,
-                tenant=batch[lane].tenant, docs=docs, ids=ids, transcript=tr,
-                latency_s=self._clock() - batch[lane].t_enqueue,
+                request_id=req.request_id,
+                tenant=req.tenant, docs=docs, ids=ids,
+                transcript=transcript,
+                latency_s=self._clock() - req.t_enqueue,
                 batch_size=len(batch))
 
         done, bad = _lane_stage(finish, alive)

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 from typing import Deque, Dict, Optional
 
 import numpy as np
@@ -71,7 +72,11 @@ class TenantStats:
 
     def percentile(self, q: float) -> float:
         """Latency percentile over the current window (the trailing
-        ``window`` results), not all-time."""
+        ``window`` results), not all-time.  NaN on an empty window — an
+        error-only or untouched tenant has no latency samples, and that
+        must read as "no data", not an opaque numpy error."""
+        if not self.latencies_s:
+            return math.nan
         return float(np.percentile(self.latencies_s, q))
 
     def summary(self) -> dict:
@@ -115,8 +120,13 @@ class ServeMetrics:
     (no phantom or duplicate batches).
     """
 
-    def __init__(self, window: int = DEFAULT_WINDOW) -> None:
+    def __init__(self, window: int = DEFAULT_WINDOW, *,
+                 tracer=None) -> None:
         self.window = window
+        # optional repro.obs.Tracer: when attached (the engine does this
+        # under EngineConfig(trace=True)), summary() carries the stage-
+        # level telemetry snapshot alongside the tenant metrics
+        self.tracer = tracer
         self.tenants: Dict[str, TenantStats] = {}
         self.aggregate = TenantStats(window=window)
         self.dispatch_sizes: Deque[int] = collections.deque(maxlen=window)
@@ -221,8 +231,12 @@ class ServeMetrics:
                 "refill_dispatches": self.refill_dispatches,
                 "refilled_requests": self.refilled_requests,
             }
+        # healthy_reencryptions is part of the trigger: it is the CI-gated
+        # isolation contract, and a nonzero value must surface even when
+        # every other failure counter is zero (a healthy-looking run that
+        # silently re-encrypted would otherwise hide its contract breach)
         if (self.failed_dispatches or self.quarantined_lanes
-                or self.error_results):
+                or self.error_results or self.healthy_reencryptions):
             out["failures"] = {
                 "failed_dispatches": self.failed_dispatches,
                 "failed_requests": self.failed_requests,
@@ -232,6 +246,9 @@ class ServeMetrics:
                 "error_results": self.error_results,
                 "healthy_reencryptions": self.healthy_reencryptions,
             }
+        if self.tracer is not None and getattr(self.tracer, "enabled",
+                                               False):
+            out["trace"] = self.tracer.snapshot()
         return out
 
 

@@ -1,11 +1,16 @@
 """repro.serve engine: batched == sequential parity, micro-batch triggers,
 plan cache, metrics accounting."""
 
+import math
+import threading
+import time
+
 import numpy as np
 import pytest
 
 import jax
 
+from repro import obs
 from repro.crypto import rlwe
 from repro.data import synth
 from repro.retrieval.index import FlatIndex
@@ -29,12 +34,12 @@ def corpus():
     return index, emb, queries
 
 
-def _build(index, *, sequential, max_batch, clock=None):
+def _build(index, *, sequential, max_batch, clock=None, **config_kw):
     kw = {"clock": clock} if clock is not None else {}
     eng = ServeEngine(
         index,
         config=EngineConfig(max_batch=max_batch, max_wait_s=30.0,
-                            sequential=sequential),
+                            sequential=sequential, **config_kw),
         sessions=SessionManager(rlwe_params=PARAMS,
                                 deterministic_seeds=True), **kw)
     for t in TENANTS:
@@ -43,8 +48,9 @@ def _build(index, *, sequential, max_batch, clock=None):
     return eng
 
 
-def _run(index, queries, *, sequential, max_batch):
-    eng = _build(index, sequential=sequential, max_batch=max_batch)
+def _run(index, queries, *, sequential, max_batch, **config_kw):
+    eng = _build(index, sequential=sequential, max_batch=max_batch,
+                 **config_kw)
     for i, q in enumerate(queries):
         eng.submit(TENANTS[i % len(TENANTS)], q, key=jax.random.PRNGKey(i))
     return eng, eng.drain()
@@ -573,3 +579,194 @@ def test_metrics_window_bounded():
     with pytest.raises(ValueError, match="window"):
         ServeMetrics(window=0).record("t", latency_s=0.0, batch_size=1,
                                       transcript=tr)
+
+
+def test_tenant_percentile_nan_on_empty_window():
+    """An error-only (or untouched) tenant has no latency samples;
+    percentile must read as NaN, never an opaque numpy error."""
+    from repro.serve.metrics import ServeMetrics, TenantStats
+
+    stats = TenantStats(window=4)
+    assert math.isnan(stats.percentile(50))
+    assert math.isnan(stats.percentile(99))
+    assert stats.summary() == {"count": 0}
+    # the summary of an error-only tenant includes the error count but
+    # never calls percentile on the empty window
+    m = ServeMetrics()
+    m.record_error("ghost")
+    summ = m.summary()
+    assert summ["tenants"]["ghost"] == {"count": 0, "errors": 1}
+    assert math.isnan(m.aggregate.percentile(50))
+
+
+def test_summary_always_surfaces_healthy_reencryptions():
+    """healthy_reencryptions is the CI-gated isolation contract: a nonzero
+    value must surface in summary() even when every other failure counter
+    is zero (a healthy-looking run that silently re-encrypted would
+    otherwise hide its contract breach)."""
+    from repro.serve.metrics import ServeMetrics
+
+    m = ServeMetrics()
+    assert "failures" not in m.summary()         # clean run stays compact
+    m.record_healthy_reencryptions(2)
+    failures = m.summary()["failures"]
+    assert failures["healthy_reencryptions"] == 2
+    assert failures["quarantined_lanes"] == 0    # the only nonzero trigger
+
+
+def test_metrics_occupancy_and_window_edges():
+    from repro.core.protocol import ProtocolTranscript
+    from repro.serve.metrics import ServeMetrics
+
+    m = ServeMetrics()
+    assert m.occupancy(8) is None                # no batches yet
+    m.record_batch(8, completed=5)               # 3 lanes quarantined away
+    assert m.occupancy(8) == pytest.approx(5 / 8)
+    m.record_batch(8)                            # full batch, all completed
+    assert m.occupancy(8) == pytest.approx(13 / 16)
+    assert m.occupancy(0) is None                # degenerate max_batch
+
+    # window=1 is the tightest legal window: every sample evicts the last
+    tr = ProtocolTranscript(plan=None, path="direct", request_bytes=10,
+                            reply_bytes=5, fetch_bytes=1, docs_bytes=2,
+                            ot_wire_bytes=0)
+    m1 = ServeMetrics(window=1)
+    for i in range(3):
+        m1.record("t", latency_s=float(i), batch_size=1, transcript=tr)
+    agg = m1.aggregate
+    assert list(agg.latencies_s) == [2.0]
+    assert agg.percentile(50) == 2.0 and agg.percentile(99) == 2.0
+    assert agg.count == 3                        # exact total survives
+    assert agg.total_wire_bytes == 3 * 18
+
+
+def test_tracing_disabled_by_default(corpus):
+    """EngineConfig() leaves tracing off: the engine runs on the shared
+    NULL tracer, records nothing, and refuses to write an empty trace."""
+    index, _, queries = corpus
+    eng, got = _run(index, queries, sequential=False, max_batch=8)
+    assert all(r.ok for r in got)
+    assert eng.tracer is obs.NULL_TRACER
+    assert eng.tracer.spans() == []
+    assert eng.trace_summary() is None
+    assert "trace" not in eng.metrics.summary()
+    with pytest.raises(RuntimeError, match="trace"):
+        eng.write_trace("/tmp/should-not-exist.json")
+
+
+def test_traced_run_stages_redaction_reconciliation(corpus, tmp_path):
+    """The tentpole end-to-end: a traced batched run (a) stays
+    bit-identical to the untraced run, (b) covers every pipeline stage,
+    (c) carries only whitelisted scalar attrs on every span (redaction by
+    construction over a *real* stream), (d) nests stage spans inside
+    their dispatch and reconciles queue_wait + dispatch with each
+    request's end-to-end latency, and (e) exports a loadable
+    Chrome-trace."""
+    index, _, queries = corpus
+    _, base = _run(index, queries, sequential=False, max_batch=8)
+    eng, got = _run(index, queries, sequential=False, max_batch=8,
+                    trace=True)
+    assert len(got) == N_REQ and all(r.ok for r in got)
+    for rb, rt in zip(base, got):                # (a) tracing changes nothing
+        assert rb.ids.tolist() == rt.ids.tolist()
+        assert rb.docs == rt.docs
+        assert rb.transcript.total_bytes == rt.transcript.total_bytes
+
+    spans = eng.tracer.spans()
+    names = {s.name for s in spans}
+    assert {"queue_wait", "dispatch", "perturb", "topk", "encrypt",
+            "score", "decrypt", "finish"} <= names          # (b)
+
+    for s in spans:                              # (c) redaction contract
+        for key, val in s.attrs.items():
+            assert key in obs.ALLOWED_ATTR_KEYS
+            assert isinstance(val, (bool, int, float, str))
+            if isinstance(val, str):
+                assert len(val) <= 64
+
+    # (d) timeline consistency: every stage span nests inside its batch's
+    # dispatch interval, and queue_wait + dispatch explain each latency
+    dispatches = {s.batch_id: s for s in spans if s.name == "dispatch"}
+    waits = {s.request_id: s for s in spans if s.name == "queue_wait"}
+    eps = 1e-6
+    for s in spans:
+        if s.name in ("dispatch", "queue_wait") or s.batch_id is None \
+                or s.track == "admitter" or s.duration_s == 0.0:
+            continue
+        d = dispatches[s.batch_id]
+        assert d.t_start - eps <= s.t_start
+        assert s.t_end <= d.t_end + eps
+    assert len(waits) == N_REQ
+    for res in got:
+        w = waits[res.request_id]
+        d = dispatches[w.batch_id]
+        assert res.latency_s <= w.duration_s + d.duration_s + 0.05
+    # per-batch stage-duration sums can never exceed the dispatch span
+    for b, d in dispatches.items():
+        stage_sum = sum(s.duration_s for s in spans
+                        if s.batch_id == b and s.track == "engine"
+                        and s.name in ("perturb", "topk", "score",
+                                       "decrypt"))
+        assert stage_sum <= d.duration_s + eps
+
+    # summary merge + stage histograms
+    summ = eng.metrics.summary()
+    assert summ["trace"]["stages"]["dispatch"]["count"] >= 1
+    assert eng.trace_summary() == eng.tracer.snapshot()
+
+    path = tmp_path / "serve-trace.json"         # (e) export round-trip
+    n_events = eng.write_trace(str(path))
+    assert n_events == len(spans)
+    doc = obs.load_chrome_trace(str(path))
+    assert doc["metadata"]["stage_summary"] == eng.tracer.stage_summary()
+
+
+def test_sharded_admission_span_parented_and_overlapping_encrypt(corpus):
+    """The async shard admitter emits "cache_admit" spans on its own
+    "admitter" track, parented (batch_id) to the dispatch that enqueued
+    the admission — and the admission copy genuinely overlaps that
+    batch's encrypt stage.  The overlap is forced deterministically: the
+    admit hook blocks until the first encrypt begins, and the encrypts
+    are slowed enough that the copy lands inside one."""
+    index, _, queries = corpus
+    eng = _build(index, sequential=False, max_batch=8, trace=True,
+                 cache_config=rlwe.CandidateCacheConfig(
+                     num_shards=8, admit_threshold=1))
+    cache = eng.cloud.candidate_cache
+    assert isinstance(cache, rlwe.ShardedCandidateCache)
+    encrypt_started = threading.Event()
+    for t in TENANTS:
+        user = eng.sessions.get(t).user
+        orig = user.encrypt_query
+
+        def slow_encrypt(emb, _orig=orig):
+            encrypt_started.set()
+            time.sleep(0.05)        # hold the encrypt span open
+            return _orig(emb)
+
+        user.encrypt_query = slow_encrypt
+    cache._admit_hook = lambda s: encrypt_started.wait(timeout=10.0)
+    try:
+        for i, q in enumerate(queries):
+            eng.submit(TENANTS[i % len(TENANTS)], q,
+                       key=jax.random.PRNGKey(i))
+        got = eng.drain()
+        assert all(r.ok for r in got)
+        cache.flush()
+        spans = eng.tracer.spans()
+        admits = [s for s in spans
+                  if s.name == "cache_admit" and s.track == "admitter"]
+        assert admits, "background admitter must emit admission spans"
+        dispatch_bids = {s.batch_id for s in spans if s.name == "dispatch"}
+        for a in admits:                      # parented to a real dispatch
+            assert a.batch_id in dispatch_bids
+            assert a.attrs["ok"] is True and a.attrs["bytes"] > 0
+        gathers = [s for s in spans if s.name == "cache_gather"]
+        assert gathers and all(g.batch_id in dispatch_bids for g in gathers)
+        encrypts = [s for s in spans if s.name == "encrypt"]
+        assert any(a.t_start < e.t_end and e.t_start < a.t_end
+                   for a in admits for e in encrypts), \
+            "admission copy must overlap the encrypt stage"
+    finally:
+        cache._admit_hook = None              # cache is index-memoized
+        eng.close()
