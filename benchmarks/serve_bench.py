@@ -15,10 +15,23 @@ Beyond the CSV rows this writes machine-readable ``BENCH_serve.json``
 (path override: BENCH_SERVE_JSON); ``scripts/check_bench_regression.py
 --serve-json`` gates batch-8 occupancy and the batched-vs-sequential QPS
 ratio on it.
+
+The run finishes with a closed-loop offered-load sweep (the ``overload``
+section): a paced open-arrival driver pushes 0.5x/1x/2x the measured
+saturation throughput through an admission-controlled engine (token-free,
+bounded queue + deadline shedding, alternating interactive/best-effort
+priorities) and through an unlimited engine at 2x.  The gate
+(`_check_overload`) requires goodput to hold past the knee, interactive
+p99 to stay bounded, and offered == completed + shed at every point —
+zero lost requests — while the unlimited config collapses.
+
+``--overload-smoke`` runs a seconds-scale version of just that sweep on a
+tiny corpus (no JSON written) — wired into scripts/smoke.sh.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -31,7 +44,8 @@ from benchmarks.common import FULL, emit
 from repro.crypto import rlwe
 from repro.data import synth
 from repro.retrieval.index import FlatIndex
-from repro.serve import EngineConfig, ServeEngine
+from repro.serve import (AdmissionConfig, AdmissionError, EngineConfig,
+                         ServeEngine)
 
 N_DOCS = 200_000 if FULL else 20_000
 DIM = 384 if FULL else 128
@@ -47,18 +61,23 @@ RLWE_PARAMS = rlwe.RlweParams(n_poly=1024, chunk=512)
 OUT_PATH = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
 
 
-def build_engine(index, *, sequential: bool, max_batch: int) -> ServeEngine:
+def build_engine(index, *, sequential: bool, max_batch: int,
+                 admission: AdmissionConfig | None = None,
+                 n_docs: int = None, dim: int = None) -> ServeEngine:
     from repro.serve.session import SessionManager
 
+    n_docs = N_DOCS if n_docs is None else n_docs
+    dim = DIM if dim is None else dim
     # deterministic seeds: the sequential and batched engines must replay
     # identical tenant key/noise streams for the per-query parity check
     engine = ServeEngine(
         index,
-        config=EngineConfig(max_batch=max_batch, sequential=sequential),
+        config=EngineConfig(max_batch=max_batch, sequential=sequential,
+                            admission=admission),
         sessions=SessionManager(rlwe_params=RLWE_PARAMS,
                                 deterministic_seeds=True))
     for t in range(N_TENANTS):
-        engine.open_session(f"tenant-{t}", n=DIM, N=N_DOCS, k=K,
+        engine.open_session(f"tenant-{t}", n=dim, N=n_docs, k=K,
                             radius=RADIUS, backend="rlwe")
     return engine
 
@@ -81,6 +100,173 @@ def run_stream(engine: ServeEngine, queries, *, warmup: bool = True) -> tuple:
     results = engine.drain()
     wall = time.monotonic() - t0
     return results, wall
+
+
+# -- closed-loop offered-load sweep -----------------------------------------
+
+def warm_batch_sizes(index, max_batch: int, queries, *,
+                     n_docs: int = None, dim: int = None) -> None:
+    """Compile every dispatch shape 1..max_batch once.  The paced driver
+    forms whatever partial batches the arrival process yields; an
+    unwarmed shape would bill jit compilation to the measured latency."""
+    engine = build_engine(index, sequential=False, max_batch=max_batch,
+                          n_docs=n_docs, dim=dim)
+    for bs in range(1, max_batch + 1):
+        for i in range(bs):
+            engine.submit(f"tenant-{i % N_TENANTS}",
+                          queries[i % len(queries)],
+                          key=jax.random.PRNGKey(1000 + bs * 16 + i))
+        engine.drain()
+    engine.close()
+
+
+def run_offered_load(engine: ServeEngine, queries, *, offered_qps: float,
+                     n: int, deadline_s: float) -> dict:
+    """Paced open-arrival driver: request i arrives at i/offered_qps,
+    priorities alternate interactive/best-effort, every request carries
+    the same deadline.  Submits and step() share one thread (the engine
+    is synchronous), so a long dispatch naturally delays — then bursts —
+    the overdue arrivals, exactly the closed-loop overload shape.
+    Returns the per-point accounting dict for the bench JSON."""
+    results = []
+    prio_by_rid = {}
+    rejected = 0
+    submitted = 0
+    t0 = time.monotonic()
+    while submitted < n:
+        due = t0 + submitted / offered_qps
+        now = time.monotonic()
+        if now >= due:
+            i = submitted
+            prio = "interactive" if i % 2 == 0 else "best_effort"
+            try:
+                rid = engine.submit(
+                    f"tenant-{i % N_TENANTS}", queries[i % len(queries)],
+                    key=jax.random.PRNGKey(i), priority=prio,
+                    deadline_s=deadline_s)
+                prio_by_rid[rid] = prio
+            except AdmissionError:
+                rejected += 1
+            submitted += 1
+            continue
+        stepped = engine.step()
+        results.extend(stepped)
+        if not stepped:
+            time.sleep(min(0.0005, max(due - time.monotonic(), 0.0)))
+    results.extend(engine.drain())
+    wall = time.monotonic() - t0
+
+    rids = [r.request_id for r in results]
+    assert len(rids) == len(set(rids)), "duplicate results in paced run"
+    completed = [r for r in results if r.shed_reason is None]
+    ok = [r for r in completed if r.ok]
+    good = [r for r in ok if r.latency_s <= deadline_s]
+    shed = [r for r in results if r.shed_reason is not None]
+    lats = [r.latency_s for r in ok]
+    ia_lats = [r.latency_s for r in ok
+               if prio_by_rid.get(r.request_id) == "interactive"]
+    return {
+        "offered_qps": offered_qps,
+        "offered": n,
+        "completed": len(completed),
+        "completed_ok": len(ok),
+        "shed": len(shed) + rejected,
+        "rejected_submits": rejected,
+        # the zero-loss contract: every offered request is accounted for
+        # as a completion, a shed result, or a typed submit rejection
+        "lost": n - len(results) - rejected,
+        "wall_s": wall,
+        "goodput_qps": len(good) / wall,
+        "deadline_misses": len(ok) - len(good),
+        "p99_s": float(np.percentile(lats, 99)) if lats else None,
+        "p99_interactive_s": (float(np.percentile(ia_lats, 99))
+                              if ia_lats else None),
+        "shed_by_reason": dict(engine.metrics.shed_by_reason),
+    }
+
+
+def overload_sweep(index, queries, *, capacity_qps: float, max_batch: int,
+                   n_per_point: int, n_docs: int = None,
+                   dim: int = None) -> dict:
+    """Offered-load curve around the measured saturation point.
+
+    Admission-controlled points at 0.5x/1x/2x capacity (bounded queue +
+    deadline shedding; the deadline is four batch-services, the queue
+    bound four batches) and an unlimited point at 2x (admission=None —
+    requests still carry deadlines so misses are counted, but nothing is
+    ever shed and the queue grows without bound)."""
+    deadline_s = 4.0 * max_batch / capacity_qps
+    max_queue = 4 * max_batch
+    admission = AdmissionConfig(max_queue=max_queue,
+                                default_deadline_s=deadline_s)
+    warm_batch_sizes(index, max_batch, queries, n_docs=n_docs, dim=dim)
+    points = {}
+    for label, mult, adm_cfg in (("0.5x", 0.5, admission),
+                                 ("1x", 1.0, admission),
+                                 ("2x", 2.0, admission),
+                                 ("2x_unlimited", 2.0, None)):
+        engine = build_engine(index, sequential=False, max_batch=max_batch,
+                              admission=adm_cfg, n_docs=n_docs, dim=dim)
+        # one full unpaced batch: seeds the controller's per-group
+        # dispatch estimate (deadline shedding needs an observed p50)
+        for i in range(max_batch):
+            engine.submit(f"tenant-{i % N_TENANTS}",
+                          queries[i % len(queries)],
+                          key=jax.random.PRNGKey(2000 + i))
+        engine.drain()
+        from repro.serve.metrics import ServeMetrics
+        engine.metrics = ServeMetrics()
+        point = run_offered_load(engine, queries,
+                                 offered_qps=mult * capacity_qps,
+                                 n=n_per_point, deadline_s=deadline_s)
+        point["admission"] = adm_cfg is not None
+        engine.close()
+        points[label] = point
+        emit(f"serve_overload_{label}", point["wall_s"] * 1e6,
+             f"offered={point['offered_qps']:.1f}qps "
+             f"goodput={point['goodput_qps']:.2f}qps "
+             f"shed={point['shed']} lost={point['lost']} "
+             f"p99_ia={point['p99_interactive_s'] or float('nan'):.3f}s")
+        assert point["lost"] == 0, f"lost requests at {label}: {point}"
+    return {
+        "capacity_qps": capacity_qps,
+        "max_batch": max_batch,
+        "deadline_s": deadline_s,
+        "max_queue": max_queue,
+        # the CI bound on interactive p99 under overload: two deadlines
+        # (a request either completes within ~its budget or is shed)
+        "p99_bound_s": 2.0 * deadline_s,
+        "points": points,
+    }
+
+
+def overload_smoke() -> None:
+    """Seconds-scale overload sweep on a tiny corpus for scripts/smoke.sh:
+    checks the zero-loss contract and that the 2x point actually sheds.
+    Writes no JSON."""
+    n_docs, dim, max_batch, n_point = 2_000, 64, 4, 16
+    rng = np.random.default_rng(0)
+    emb = synth.uniform_corpus(rng, n_docs, dim)
+    docs = [f"doc-{i}".encode() for i in range(n_docs)]
+    index = FlatIndex.build(emb, documents=docs)
+    queries = synth.queries_near_corpus(rng, emb, 8)
+
+    engine = build_engine(index, sequential=False, max_batch=max_batch,
+                          n_docs=n_docs, dim=dim)
+    results, wall = run_stream(engine, queries, warmup=True)
+    engine.close()
+    capacity = len(results) / wall
+    print(f"# overload smoke: capacity ~{capacity:.1f} qps")
+    section = overload_sweep(index, queries, capacity_qps=capacity,
+                             max_batch=max_batch, n_per_point=n_point,
+                             n_docs=n_docs, dim=dim)
+    two_x = section["points"]["2x"]
+    assert two_x["shed"] > 0, "2x overload point must shed something"
+    for label, point in section["points"].items():
+        assert point["lost"] == 0, f"lost requests at {label}"
+        assert point["offered"] == (point["completed"] + point["shed"]), \
+            f"accounting mismatch at {label}: {point}"
+    print("# overload smoke ok")
 
 
 def main() -> None:
@@ -150,6 +336,11 @@ def main() -> None:
     results_json["parity_checked"] = True
     results_json["big_batch"] = big
 
+    # closed-loop offered-load sweep around the measured saturation point
+    results_json["overload"] = overload_sweep(
+        index, queries, capacity_qps=qps_by_bs[big], max_batch=big,
+        n_per_point=192 if FULL else 96)
+
     payload = {
         "bench": "serve",
         "backend": jax.default_backend(),
@@ -166,4 +357,12 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--overload-smoke", action="store_true",
+                    help="seconds-scale overload sweep on a tiny corpus "
+                         "(zero-loss + shed-at-2x asserts, no JSON) — "
+                         "used by scripts/smoke.sh")
+    if ap.parse_args().overload_smoke:
+        overload_smoke()
+    else:
+        main()

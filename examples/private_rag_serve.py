@@ -29,7 +29,7 @@ from repro.data import synth
 from repro.data.tokenizer import HashTokenizer
 from repro.models import embedder
 from repro.retrieval.index import FlatIndex
-from repro.serve import EngineConfig, ServeEngine
+from repro.serve import AdmissionError, EngineConfig, ServeEngine
 
 DIM = 256
 N_DOCS = 2_000
@@ -137,13 +137,24 @@ def main() -> None:
     q_embs = {}
     for rnd in range(max(args.rounds, 1)):
         for qi, (tenant, qtext, q_emb) in enumerate(embedded):
-            rid = engine.submit(
-                tenant, q_emb,
-                key=jax.random.PRNGKey(rnd * len(embedded) + qi))
+            # typed backpressure: with admission control configured a
+            # submit can be rejected (RateLimited, QueueFull, ...) — a
+            # client reports it and keeps serving the rest of its queue
+            try:
+                rid = engine.submit(
+                    tenant, q_emb,
+                    key=jax.random.PRNGKey(rnd * len(embedded) + qi))
+            except AdmissionError as e:
+                print(f"rejected ({type(e).__name__}): {qtext!r}")
+                continue
             q_embs[rid] = (qtext, q_emb)
     results = engine.drain()
 
     for res in results:
+        if res.shed_reason is not None:
+            print(f"shed ({res.shed_reason}): request {res.request_id} "
+                  f"for tenant {res.tenant}")
+            continue
         assert res.ok, f"dispatch failed: {res.error}"
         qtext, q_emb = q_embs[res.request_id]
         oracle = np.argsort(-(embs @ q_emb), kind="stable")[:K]

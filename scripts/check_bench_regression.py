@@ -29,8 +29,14 @@ and fails if
 With ``--serve-json BENCH_serve.json`` (written by
 ``python -m benchmarks.serve_bench``) it additionally gates the serving
 engine itself: batch-8 occupancy must reach ``--min-serve-occupancy``
-(default 0.8) and batch-8 QPS must beat sequential by
-``--min-serve-speedup`` (default 1.0x).
+(default 0.8), batch-8 QPS must beat sequential by
+``--min-serve-speedup`` (default 1.0x), and the closed-loop overload
+section must prove admission control works: zero lost requests at every
+offered-load point (offered == completed + shed), goodput at 2x the
+saturation knee >= ``--min-goodput-ratio`` (default 0.8) of goodput at
+the knee, interactive p99 under 2x overload within the recorded
+p99_bound, the 2x point actually shedding, and the unlimited config
+measurably collapsing where the admission config holds.
 
     scripts/check_bench_regression.py [BENCH_rlwe.json] [min_speedup=1.0]
         [max_sharded_ratio=1.3] [min_mem_reduction=4.0]
@@ -222,8 +228,94 @@ def _check_stage_breakdown(section: dict, min_coverage: float = 0.5,
     return failures
 
 
+def _check_overload(results: dict, min_goodput_ratio: float = 0.8) -> int:
+    """Overload gate on the closed-loop offered-load sweep: admission
+    control must keep goodput flat and interactive p99 bounded past the
+    saturation knee, account for every offered request (zero lost), and
+    beat the unlimited configuration it exists to replace.  A JSON
+    without the section fails — the gate must not silently pass after a
+    results-key rename."""
+    section = results.get("overload")
+    if section is None:
+        print("FAIL overload: serve results lack the offered-load sweep "
+              "section — the admission-control gate did not run",
+              file=sys.stderr)
+        return 1
+    failures = 0
+    points = section.get("points", {})
+    for label in ("0.5x", "1x", "2x", "2x_unlimited"):
+        point = points.get(label)
+        if point is None:
+            print(f"FAIL overload: missing point {label}", file=sys.stderr)
+            failures += 1
+            continue
+        lost = point.get("lost")
+        balanced = (point.get("offered")
+                    == point.get("completed", 0) + point.get("shed", 0))
+        if lost != 0 or not balanced:
+            print(f"FAIL overload/{label}: {lost} lost requests, offered "
+                  f"{point.get('offered')} != completed "
+                  f"{point.get('completed')} + shed {point.get('shed')} — "
+                  f"requests are being dropped silently", file=sys.stderr)
+            failures += 1
+        else:
+            print(f"ok   overload/{label}: offered {point['offered']} == "
+                  f"completed {point['completed']} + shed {point['shed']} "
+                  f"(0 lost)")
+    knee = points.get("1x", {})
+    two_x = points.get("2x", {})
+    unlimited = points.get("2x_unlimited", {})
+    g1, g2 = knee.get("goodput_qps"), two_x.get("goodput_qps")
+    if g1 is None or g2 is None or g2 < min_goodput_ratio * g1:
+        print(f"FAIL overload: goodput at 2x saturation {g2} qps < "
+              f"{min_goodput_ratio}x of the knee's {g1} qps — admission "
+              f"control no longer holds goodput past the knee",
+              file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   overload: goodput holds past the knee "
+              f"({g2:.2f} qps at 2x vs {g1:.2f} qps at 1x, "
+              f">= {min_goodput_ratio}x)")
+    bound = section.get("p99_bound_s")
+    p99 = two_x.get("p99_interactive_s")
+    if bound is None or p99 is None or p99 > bound:
+        print(f"FAIL overload: interactive p99 at 2x is {p99}s, above the "
+              f"recorded bound {bound}s — interactive traffic is no "
+              f"longer protected under overload", file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   overload: interactive p99 {p99:.3f}s <= bound "
+              f"{bound:.3f}s at 2x offered load")
+    if two_x.get("shed", 0) <= 0:
+        print("FAIL overload: the 2x point shed nothing — the sweep is "
+              "not actually overloading the engine", file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   overload: 2x point shed {two_x['shed']} requests "
+              f"({two_x.get('shed_by_reason')})")
+    # the point of the tier: at the same 2x offered load the unlimited
+    # config must do measurably worse — lower goodput (queue-wait
+    # latency eats the deadlines) or a blown p99
+    g_unl = unlimited.get("goodput_qps")
+    p99_unl = unlimited.get("p99_interactive_s")
+    collapsed = ((g_unl is not None and g2 is not None and g_unl < g2)
+                 or (p99_unl is not None and bound is not None
+                     and p99_unl > bound))
+    if not collapsed:
+        print(f"FAIL overload: unlimited config did not collapse at 2x "
+              f"(goodput {g_unl} vs admission {g2}, p99 {p99_unl}s vs "
+              f"bound {bound}s) — the sweep no longer demonstrates the "
+              f"admission win", file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   overload: unlimited config collapses at 2x "
+              f"(goodput {g_unl:.2f} vs {g2:.2f} qps, p99 "
+              f"{p99_unl:.3f}s vs bound {bound:.3f}s)")
+    return failures
+
+
 def _check_serve(path: str, min_speedup: float,
-                 min_occupancy: float) -> int:
+                 min_occupancy: float, min_goodput_ratio: float) -> int:
     """Serving-engine gate on BENCH_serve.json: batch-8 fill and the
     batched-vs-sequential throughput win."""
     try:
@@ -256,6 +348,7 @@ def _check_serve(path: str, min_speedup: float,
     else:
         print(f"ok   serve/batch{big}: occupancy {occ:.2f} "
               f"(>= {min_occupancy})")
+    failures += _check_overload(results, min_goodput_ratio)
     return failures
 
 
@@ -277,6 +370,9 @@ def main() -> int:
                          "occupancy + batched-vs-sequential QPS)")
     ap.add_argument("--min-serve-speedup", type=float, default=1.0)
     ap.add_argument("--min-serve-occupancy", type=float, default=0.8)
+    ap.add_argument("--min-goodput-ratio", type=float, default=0.8,
+                    help="overload gate: goodput at 2x saturation must be "
+                         "at least this fraction of goodput at the knee")
     args = ap.parse_args()
     try:
         with open(args.path) as f:
@@ -303,7 +399,8 @@ def main() -> int:
     failures += _check_stage_breakdown(results.get("stage_breakdown"))
     if args.serve_json is not None:
         failures += _check_serve(args.serve_json, args.min_serve_speedup,
-                                 args.min_serve_occupancy)
+                                 args.min_serve_occupancy,
+                                 args.min_goodput_ratio)
     return 1 if failures else 0
 
 

@@ -26,6 +26,10 @@ python scripts/check_docs.py
 # tracing never changes results
 python scripts/check_trace_overhead.py
 
+# overload gate (fast): closed-loop offered-load sweep on a tiny corpus —
+# zero lost requests at every point, the 2x point actually sheds
+python -m benchmarks.serve_bench --overload-smoke
+
 if [[ "${SMOKE_BENCH:-0}" == "1" ]]; then
   python -m benchmarks.run --only rlwe
   python -m benchmarks.serve_bench

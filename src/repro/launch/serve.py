@@ -11,6 +11,14 @@ wire-size stats per request plus the per-tenant engine metrics.
 `... --trace-out trace.json` enables stage-level span tracing (repro.obs)
 and writes a Chrome-trace timeline loadable at https://ui.perfetto.dev;
 the summary then carries per-stage latency histograms.
+
+Admission control (off unless one of these is set): `--tenant-rate R`
+installs per-tenant token buckets, `--max-queue N` bounds the global
+queue with priority displacement, `--deadline-ms MS` applies a default
+SLO budget with deadline-aware shedding, `--priority CLASS` picks the
+default class.  Typed rejections (`RateLimited`, `QueueFull`, ...) and
+shed results are printed per request — the submit loop never dies on
+backpressure.
 """
 
 from __future__ import annotations
@@ -25,7 +33,9 @@ import jax
 
 from repro.data import synth
 from repro.retrieval.index import FlatIndex
-from repro.serve import EngineConfig, ServeEngine
+from repro.serve import (AdmissionConfig, AdmissionError, EngineConfig,
+                         RateLimited, ServeEngine)
+from repro.serve.admission import PRIORITIES
 
 
 def main() -> None:
@@ -46,6 +56,21 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="enable stage tracing and write a Perfetto-"
                          "loadable Chrome-trace JSON timeline to PATH")
+    ap.add_argument("--tenant-rate", type=float, default=None, metavar="R",
+                    help="per-tenant token-bucket rate limit in "
+                         "requests/s (enables the admission tier; "
+                         "rejections surface as rate_limited drops)")
+    ap.add_argument("--max-queue", type=int, default=None, metavar="N",
+                    help="bound the global request queue at N; a full "
+                         "queue displaces lower-priority work or rejects "
+                         "the submit (queue_full drops, counted)")
+    ap.add_argument("--deadline-ms", type=float, default=None, metavar="MS",
+                    help="default per-request SLO budget; requests whose "
+                         "remaining budget cannot cover the observed "
+                         "dispatch latency are shed before any crypto")
+    ap.add_argument("--priority", choices=PRIORITIES, default=None,
+                    help="default admission priority class (interactive "
+                         "degrades last under overload)")
     args = ap.parse_args()
     if args.tenants < 1 or args.requests < 1:
         ap.error("--tenants and --requests must be >= 1")
@@ -57,6 +82,16 @@ def main() -> None:
     docs = synth.passages(rng, args.n_docs, avg_bytes=256)
     index = FlatIndex.build(emb, documents=docs)
 
+    admission = None
+    if (args.tenant_rate is not None or args.max_queue is not None
+            or args.deadline_ms is not None or args.priority is not None):
+        admission = AdmissionConfig(
+            tenant_rate=args.tenant_rate,
+            max_queue=args.max_queue,
+            default_deadline_s=(None if args.deadline_ms is None
+                                else args.deadline_ms / 1e3),
+            default_priority=args.priority or "interactive")
+
     # context manager: close() drains leftovers and stops the sharded
     # cache's background admitter thread on exit (no thread leak across
     # engine lifetimes)
@@ -64,7 +99,8 @@ def main() -> None:
             max_batch=1 if args.no_batch else args.max_batch,
             max_wait_s=args.max_wait_ms / 1e3,
             sequential=args.no_batch,
-            trace=args.trace_out is not None)) as engine:
+            trace=args.trace_out is not None,
+            admission=admission)) as engine:
         for t in range(args.tenants):
             sess = engine.open_session(f"tenant-{t}", n=args.dim,
                                        N=args.n_docs, k=args.k,
@@ -79,13 +115,33 @@ def main() -> None:
 
         queries = synth.queries_near_corpus(rng, emb, args.requests)
         t0 = time.monotonic()
+        rejected = 0
+        rid_to_query = {}
         for i, q in enumerate(queries):
-            engine.submit(f"tenant-{i % args.tenants}", q,
-                          key=jax.random.PRNGKey(i))
+            tenant = f"tenant-{i % args.tenants}"
+            # typed backpressure: a rejected submit is reported and the
+            # loop continues — the client never dies on overload
+            try:
+                rid = engine.submit(tenant, q, key=jax.random.PRNGKey(i))
+            except AdmissionError as e:
+                rejected += 1
+                rec = {"request": None, "tenant": tenant,
+                       "rejected": type(e).__name__}
+                if isinstance(e, RateLimited):
+                    rec["retry_after_s"] = round(e.retry_after_s, 3)
+                print(json.dumps(rec))
+                continue
+            rid_to_query[rid] = q
         results = engine.drain()
         wall = time.monotonic() - t0
 
         for res in results:
+            if res.shed_reason is not None:  # admission-tier shed, no crypto
+                print(json.dumps({
+                    "request": res.request_id, "tenant": res.tenant,
+                    "latency_s": round(res.latency_s, 3),
+                    "shed": res.shed_reason}))
+                continue
             if not res.ok:  # lane failed after its quarantine retry
                 print(json.dumps({
                     "request": res.request_id, "tenant": res.tenant,
@@ -93,7 +149,7 @@ def main() -> None:
                     "quarantined": res.quarantined,
                     "error": res.error}))
                 continue
-            q = queries[res.request_id]
+            q = rid_to_query[res.request_id]
             plain = np.argsort(-(emb @ q), kind="stable")[: args.k]
             recall = (len(set(res.ids.tolist()) & set(plain.tolist()))
                       / args.k)
@@ -112,6 +168,9 @@ def main() -> None:
                else round(occupancy, 3)}
         if "failures" in summary:
             out["failures"] = summary["failures"]
+        if "admission" in summary:
+            out["admission"] = dict(summary["admission"],
+                                    rejected_submits=rejected)
         if "trace" in summary:
             out["stages"] = summary["trace"]["stages"]
         print(json.dumps(out))

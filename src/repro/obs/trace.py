@@ -57,8 +57,9 @@ ALLOWED_ATTR_KEYS = frozenset({
     "num_cands",      # candidate rows touched (count)
     "num_shards",     # shards in the cache pool
     "ok",             # success flag
+    "priority",       # admission priority class name (public knob)
     "queue",          # queue depth (count)
-    "reason",         # short machine-chosen label (e.g. trigger name)
+    "reason",         # short machine-chosen label (e.g. shed reason)
     "requests",       # request count
     "resident",       # device-resident shard count
     "shard",          # shard id (public partition index, not a doc id)
@@ -143,6 +144,10 @@ class Tracer:
         self.dropped = 0             # spans evicted by the ring bound
         self._spans: deque = deque(maxlen=capacity)
         self._hist: Dict[str, StageHistogram] = {}
+        # exact per-name marker counts (shed, rate_limited, refill,
+        # quarantine, ...): events carry operational signal — a shed
+        # count must survive the ring wrapping just like the histograms
+        self._events: Dict[str, int] = {}
         self._lock = threading.Lock()
 
     # -- recording ----------------------------------------------------------
@@ -199,6 +204,7 @@ class Tracer:
             if len(self._spans) == self.capacity:
                 self.dropped += 1
             self._spans.append(span)
+            self._events[name] = self._events.get(name, 0) + 1
         return span
 
     # -- reading ------------------------------------------------------------
@@ -223,12 +229,14 @@ class Tracer:
                 "dropped": self.dropped,
                 "capacity": self.capacity,
                 "stages": summarize(self._hist),
+                "events": dict(sorted(self._events.items())),
             }
 
     def clear(self) -> None:
         with self._lock:
             self._spans.clear()
             self._hist.clear()
+            self._events.clear()
             self.dropped = 0
 
 
@@ -270,7 +278,8 @@ class NullTracer:
         return {}
 
     def snapshot(self):
-        return {"spans": 0, "dropped": 0, "capacity": 0, "stages": {}}
+        return {"spans": 0, "dropped": 0, "capacity": 0, "stages": {},
+                "events": {}}
 
     def clear(self):
         pass

@@ -8,6 +8,10 @@ Layers (bottom up):
                 the whole batch, per-tenant secret keys).
   session.py    per-tenant state: keys, protocol plan (via a PlanCache keyed
                 on the planning knobs so repeat tenants skip Theorem-1 work).
+  admission.py  SLO-aware admission tier: typed submit rejections
+                (AdmissionError hierarchy), per-tenant token buckets,
+                priority-classed queues, deadline-aware shedding fed by the
+                observed per-group dispatch latency.
   engine.py     micro-batching request engine: size/deadline triggers form
                 per-step batches grouped by (backend, n, k'); each step runs
                 the full protocol for the batch.
@@ -18,6 +22,16 @@ The batched path is bit-compatible with the one-query `run_remoterag` driver:
 identical docs, ids and wire bytes at any batch size (tests/test_serve.py).
 """
 
+from repro.serve.admission import (
+    PRIORITIES,
+    AdmissionConfig,
+    AdmissionController,
+    AdmissionError,
+    InvalidEmbedding,
+    QueueFull,
+    RateLimited,
+    UnknownTenant,
+)
 from repro.serve.batching import CandidateCacheConfig, ShardedCandidateCache
 from repro.serve.engine import EngineConfig, ServeEngine, ServeResult
 from repro.serve.metrics import ServeMetrics
@@ -27,4 +41,7 @@ __all__ = [
     "EngineConfig", "ServeEngine", "ServeResult", "ServeMetrics",
     "PlanCache", "Session", "SessionManager",
     "CandidateCacheConfig", "ShardedCandidateCache",
+    "PRIORITIES", "AdmissionConfig", "AdmissionController",
+    "AdmissionError", "UnknownTenant", "InvalidEmbedding", "QueueFull",
+    "RateLimited",
 ]

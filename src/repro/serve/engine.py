@@ -37,12 +37,11 @@ and never double-counted in the metrics.
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import itertools
 import secrets
 import time
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -53,6 +52,7 @@ from repro.core import protocol
 from repro.crypto import paillier as pai
 from repro.crypto import rlwe
 from repro.retrieval.index import FlatIndex
+from repro.serve import admission as adm
 from repro.serve import batching
 from repro.serve.metrics import ServeMetrics
 from repro.serve.session import Session, SessionManager
@@ -89,6 +89,12 @@ class EngineConfig:
     trace: bool = False
     # span ring-buffer capacity; stage histograms stay complete past it
     trace_capacity: int = 65536
+    # SLO-aware admission tier (repro.serve.admission): per-tenant token
+    # buckets, a bounded global queue with priority displacement, and
+    # deadline-aware shedding before any crypto runs.  None (the default)
+    # installs no admission machinery at all — submit/step behave
+    # bit-identically to the uncontrolled engine.
+    admission: Optional["adm.AdmissionConfig"] = None
 
 
 @dataclasses.dataclass
@@ -101,6 +107,9 @@ class ServeRequest:
     group: tuple = ()           # the (backend, n, k') queue key
     retries: int = 0            # solo quarantine retries already spent
     encryptions: int = 0        # query-encryption attempts (waste audit)
+    priority: str = "interactive"   # admission.PRIORITIES class
+    rank: int = 0                   # cached priority_rank(priority)
+    deadline_s: Optional[float] = None  # SLO budget from t_enqueue
 
 
 @dataclasses.dataclass
@@ -118,6 +127,10 @@ class ServeResult:
     # True when this lane was quarantined out of a batched dispatch (the
     # result then came from a solo retry, or is an error result).
     quarantined: bool = False
+    # set when the request was shed by the admission tier before any
+    # crypto ran (one of admission.SHED_REASONS); `error` is then
+    # "shed(<reason>)" so unaware callers still see a non-ok result
+    shed_reason: Optional[str] = None
 
     @property
     def ok(self) -> bool:
@@ -212,11 +225,21 @@ class ServeEngine:
         self._clock = clock
         self._ids = itertools.count()
         self._batch_ids = itertools.count()
-        # per-group FIFO queues keyed once at submit: dispatch pops from a
-        # group head instead of rescanning/rewriting one global list
-        self._queues: Dict[tuple, Deque[ServeRequest]] = {}
+        # per-group priority-classed FIFO queues keyed once at submit:
+        # dispatch pops from a group head instead of rescanning/rewriting
+        # one global list.  With every request in the default priority
+        # class a GroupQueue is exactly the plain FIFO it replaced.
+        self._queues: Dict[tuple, adm.GroupQueue] = {}
         # refill credits: group -> grant time of its last partial dispatch
         self._refill: Dict[tuple, float] = {}
+        # admission tier (None = uncontrolled engine, zero new machinery)
+        self.admission = (
+            None if self.config.admission is None
+            else adm.AdmissionController(self.config.admission, clock=clock))
+        # shed results produced outside step() (queue-bound displacement
+        # at submit time) wait here until the next step()/drain() returns
+        # them — a displaced request is resolved, never dropped
+        self._shed_results: List[ServeResult] = []
         self._closed = False
 
     # -- session + queue ----------------------------------------------------
@@ -225,7 +248,9 @@ class ServeEngine:
         return self.sessions.open(tenant, **session_kwargs)
 
     def submit(self, tenant: str, embedding: np.ndarray,
-               key: Optional[jax.Array] = None) -> int:
+               key: Optional[jax.Array] = None, *,
+               priority: Optional[str] = None,
+               deadline_s: Optional[float] = None) -> int:
         """Enqueue one query for `tenant` (session must be open).  Returns a
         request id; results come back from step()/drain().
 
@@ -233,6 +258,15 @@ class ServeEngine:
         a predictable key (e.g. the request counter) would let the cloud
         replay the noise and strip the perturbation; pass an explicit key
         only for replay/parity setups.
+
+        ``priority`` (one of `admission.PRIORITIES`, default from
+        ``AdmissionConfig.default_priority``) and ``deadline_s`` (SLO
+        budget from enqueue, default ``AdmissionConfig.default_deadline_s``)
+        feed the admission tier.  Rejections are typed
+        `admission.AdmissionError` subclasses — `UnknownTenant` (also a
+        ``KeyError``), `InvalidEmbedding` (also a ``ValueError``),
+        `RateLimited`, `QueueFull` — and a rejected request was never
+        enqueued: no crypto ran and no request id was consumed.
         """
         if self._closed:
             raise RuntimeError("engine is closed; no further submissions")
@@ -240,24 +274,101 @@ class ServeEngine:
             # a real error, not an assert: `python -O` strips asserts and a
             # missing session would then surface as an opaque KeyError deep
             # inside dispatch (or worse, silently mis-batch)
-            raise KeyError(f"no open session for tenant {tenant!r}; call "
-                           f"open_session first")
+            raise adm.UnknownTenant(tenant)
         emb = np.asarray(embedding, np.float32)
         if emb.ndim != 1:
             # the group key below uses the last axis only, so a (1, n)
             # embedding would batch with (n,) requests and break the
             # batch-stack shapes mid-dispatch; reject it at the door
-            raise ValueError(f"embedding must be 1-D, got shape {emb.shape}")
+            raise adm.InvalidEmbedding(
+                f"embedding must be 1-D, got shape {emb.shape}")
+        ac = self.config.admission
+        if priority is None:
+            priority = (ac.default_priority if ac is not None
+                        else "interactive")
+        rank = adm.priority_rank(priority)
+        if deadline_s is None and ac is not None:
+            deadline_s = ac.default_deadline_s
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
+        now = self._clock()
+        if self.admission is not None:
+            retry = self.admission.check_rate(tenant, now)
+            if retry is not None:
+                self.metrics.record_shed(tenant, adm.SHED_RATE_LIMITED)
+                self.tracer.event("rate_limited", tenant=tenant,
+                                  priority=priority)
+                raise adm.RateLimited(tenant, retry)
+            bound = ac.max_queue
+            if bound is not None and self.pending >= bound:
+                # displace the youngest request of the worst strictly
+                # lower-priority class (it becomes a queue_full shed
+                # result, returned by the next step/drain), else reject
+                # the newcomer — counted drops either way, never silent
+                if not self._displace(rank, now):
+                    self.metrics.record_shed(tenant, adm.SHED_QUEUE_FULL)
+                    self.tracer.event("shed", reason=adm.SHED_QUEUE_FULL,
+                                      tenant=tenant, priority=priority)
+                    raise adm.QueueFull(tenant, self.pending, bound)
+            self.metrics.record_admitted(tenant)
         rid = next(self._ids)
         if key is None:
             key = jax.random.PRNGKey(secrets.randbits(63))
         sess = self.sessions.get(tenant)
         group = (sess.backend, emb.shape[-1], sess.plan.kprime)
-        self._queues.setdefault(group, collections.deque()).append(
+        self._queues.setdefault(group, adm.GroupQueue()).append(
             ServeRequest(
                 request_id=rid, tenant=tenant, embedding=emb, key=key,
-                t_enqueue=self._clock(), group=group))
+                t_enqueue=now, group=group,
+                priority=priority, rank=rank, deadline_s=deadline_s))
         return rid
+
+    def _displace(self, rank: int, now: float) -> bool:
+        """Evict one queued request of a class strictly worse than `rank`
+        to make room: the youngest request of the worst class present,
+        resolved as a ``queue_full`` shed result.  False if every queued
+        request is at least as good as the newcomer."""
+        victim = None
+        victim_key = None
+        victim_rank = -1
+        for key, q in self._queues.items():
+            w = q.worst()
+            if w is None:
+                continue
+            r, req = w
+            if r <= rank:
+                continue
+            if (victim is None or r > victim_rank
+                    or (r == victim_rank
+                        and req.t_enqueue > victim.t_enqueue)):
+                victim, victim_key, victim_rank = req, key, r
+        if victim is None:
+            return False
+        q = self._queues[victim_key]
+        q.remove(victim)
+        if not q:
+            del self._queues[victim_key]
+            # an emptied group's refill credit dies with it — a credit
+            # with no continuity to real queued work must never dispatch
+            self._refill.pop(victim_key, None)
+        self._shed_results.append(
+            self._resolve_shed(victim, adm.SHED_QUEUE_FULL, now))
+        return True
+
+    def _resolve_shed(self, req: ServeRequest, reason: str,
+                      now: float) -> ServeResult:
+        """Turn a queued request into a typed shed result: counted in the
+        metrics, surfaced as a trace event, never run through any crypto
+        stage, and never recorded as dispatch/latency traffic."""
+        self.metrics.record_shed(req.tenant, reason)
+        self.tracer.event("shed", track=f"request-{req.request_id}",
+                          request_id=req.request_id, tenant=req.tenant,
+                          priority=req.priority, reason=reason)
+        return ServeResult(
+            request_id=req.request_id, tenant=req.tenant, docs=[],
+            ids=np.empty(0, np.int64), transcript=None,
+            latency_s=now - req.t_enqueue, batch_size=0,
+            error=f"shed({reason})", shed_reason=reason)
 
     @property
     def pending(self) -> int:
@@ -294,16 +405,21 @@ class ServeEngine:
 
     # -- lifecycle ----------------------------------------------------------
 
-    def close(self) -> List[ServeResult]:
+    def close(self, *, shed_pending: bool = False) -> List[ServeResult]:
         """Drain the queues, then release engine-held background resources:
         the sharded candidate cache's admitter thread is stopped (pending
         admissions still complete; the index-memoized cache itself stays
         valid and restarts its worker lazily if another engine touches it).
         Idempotent; returns the final drain's results.  `submit` raises
-        after close."""
+        after close.
+
+        ``shed_pending=True`` resolves still-queued requests as
+        ``shutdown`` shed results instead of dispatching them (see
+        `drain`) — the load-shedding shutdown for an engine going away
+        under pressure."""
         if self._closed:
             return []
-        out = self.drain()
+        out = self.drain(shed=shed_pending)
         self._closed = True
         cache = self.cloud.index.peek_candidate_cache(
             self.cloud.rlwe_params, self.cloud.cache_config)
@@ -323,40 +439,65 @@ class ServeEngine:
     def step(self, *, force: bool = False) -> List[ServeResult]:
         """Dispatch at most one batch if a trigger fired (or `force`).
 
-        Among triggered groups the one with the oldest head request wins —
-        a group that keeps hitting the size trigger must not starve another
-        group whose deadline expired.  A group holding a *refill credit*
-        (its previous batch dispatched under `max_batch` within the last
-        `max_wait_s`) triggers immediately: continuous batching keeps
-        occupancy up without making late arrivals age out a fresh deadline."""
+        Among triggered groups the best-priority head wins, oldest first
+        within a class — a group that keeps hitting the size trigger must
+        not starve another group whose deadline expired, and under
+        overload interactive heads pre-empt best-effort ones.  A group
+        holding a *refill credit* (its previous batch dispatched under
+        `max_batch` within the last `max_wait_s`) triggers immediately:
+        continuous batching keeps occupancy up without making late
+        arrivals age out a fresh deadline.
+
+        With the admission tier enabled the step starts by resolving any
+        pending shed work: queue-bound displacements buffered at submit
+        time, then a deadline pass that sheds every queued request whose
+        remaining budget is spent or below the group's observed p50
+        dispatch latency — all *before* a batch is popped, so shed
+        requests never reach any crypto stage."""
         now = self._clock()
         cfg = self.config
+        shed: List[ServeResult] = []
+        if self._shed_results:
+            shed, self._shed_results = self._shed_results, []
+        if self.admission is not None and cfg.admission.shed_deadlines:
+            shed.extend(self._shed_expired(now))
         if self._refill:               # credits live one batching window
             self._refill = {g: t for g, t in self._refill.items()
                             if now - t < cfg.max_wait_s}
         chosen = None
+        chosen_key = None
         chosen_refill = False
         for key, group in self._queues.items():
             size_hit = len(group) >= cfg.max_batch
-            deadline_hit = (now - group[0].t_enqueue) >= cfg.max_wait_s
+            head_t = group.oldest_enqueue()
+            deadline_hit = (now - head_t) >= cfg.max_wait_s
             refill_hit = cfg.refill and key in self._refill
-            if (size_hit or deadline_hit or refill_hit or force) and (
-                    chosen is None
-                    or group[0].t_enqueue
-                    < self._queues[chosen][0].t_enqueue):
+            if not (size_hit or deadline_hit or refill_hit or force):
+                continue
+            # (head class rank, oldest enqueue): with every request in the
+            # default class this is exactly the oldest-head-wins order of
+            # the uncontrolled engine
+            cand_key = (group.head_rank(), head_t)
+            if chosen is None or cand_key < chosen_key:
                 chosen = key
+                chosen_key = cand_key
                 chosen_refill = refill_hit and not (
                     size_hit or deadline_hit or force)
         if chosen is None:
-            return []
+            return shed
         group = self._queues[chosen]
-        batch = [group.popleft()
-                 for _ in range(min(cfg.max_batch, len(group)))]
+        batch = group.pop_batch(cfg.max_batch)
         if not group:
             del self._queues[chosen]
         self._refill.pop(chosen, None)           # credit consumed
         leftovers = chosen in self._queues       # burst tail still queued
+        t_dispatch = self._clock()
         out = self._dispatch(batch)
+        if self.admission is not None:
+            # feed the per-group dispatch-latency histogram the deadline
+            # shedding reads (p50, biased high by at most one log2 bucket)
+            self.admission.observe_dispatch(
+                chosen, self._clock() - t_dispatch)
         if chosen_refill and any(r.ok for r in out):
             # recorded post-dispatch like record_batch: an all-lanes
             # failure must not read as refill-served traffic
@@ -375,12 +516,48 @@ class ServeEngine:
         if (cfg.refill and not chosen_refill and not force
                 and (len(batch) < cfg.max_batch or leftovers)):
             self._refill[chosen] = self._clock()
+        return shed + out
+
+    def _shed_expired(self, now: float) -> List[ServeResult]:
+        """Deadline pass over every queue: resolve each request the
+        controller deems unservable (budget expired, or remaining budget
+        below the group's observed p50 dispatch wall) as a ``deadline``
+        shed result.  A group emptied by shedding is removed *with its
+        refill credit* — a leftover credit would otherwise let the next
+        stray submit dispatch instantly as a phantom refill batch."""
+        ctl = self.admission
+        out: List[ServeResult] = []
+        for key, q in list(self._queues.items()):
+            expired = q.shed(lambda req: ctl.should_shed(req, now))
+            for req in expired:
+                out.append(self._resolve_shed(req, adm.SHED_DEADLINE, now))
+            if not q:
+                del self._queues[key]
+                self._refill.pop(key, None)
         return out
 
-    def drain(self) -> List[ServeResult]:
-        """Flush the queue completely (batch by batch); results in request
-        order."""
+    def drain(self, *, shed: bool = False) -> List[ServeResult]:
+        """Flush the queue completely; results in request order.
+
+        ``shed=False`` (default) dispatches everything batch by batch —
+        the historical behavior.  ``shed=True`` resolves still-queued
+        requests as ``shutdown`` shed results instead: an engine shutting
+        down under load answers every queued request immediately and
+        spends no further crypto on work nobody is waiting for.  Either
+        way every submitted request gets exactly one result — buffered
+        displacement sheds are flushed here too, even when the queues are
+        already empty."""
         out: List[ServeResult] = []
+        if self._shed_results:
+            out, self._shed_results = self._shed_results, []
+        if shed:
+            now = self._clock()
+            for key, q in list(self._queues.items()):
+                for req in q:
+                    out.append(
+                        self._resolve_shed(req, adm.SHED_SHUTDOWN, now))
+            self._queues.clear()
+            self._refill.clear()
         while self._queues:
             out.extend(self.step(force=True))
         return sorted(out, key=lambda r: r.request_id)
@@ -394,6 +571,8 @@ class ServeEngine:
         completed in the dispatch — an all-lanes failure is a failed
         dispatch, and solo quarantine retries are never recorded as
         batches of their own (no phantom or duplicate batches)."""
+        if not batch:           # defensive: shedding never pops, but an
+            return []           # empty dispatch must stay a no-op
         poisoned: List[tuple] = []          # (request, its exception)
         bid = next(self._batch_ids)
         tr = self.tracer
@@ -430,7 +609,8 @@ class ServeEngine:
         for res in results:
             self.metrics.record(res.tenant, latency_s=res.latency_s,
                                 batch_size=res.batch_size,
-                                transcript=res.transcript)
+                                transcript=res.transcript,
+                                deadline_s=by_id[res.request_id].deadline_s)
             extra = by_id[res.request_id].encryptions - 1
             if extra > 0:       # contract: healthy lanes encrypt once
                 self.metrics.record_healthy_reencryptions(extra)
@@ -472,7 +652,8 @@ class ServeEngine:
                 # recorded nothing for this lane)
                 self.metrics.record(req.tenant, latency_s=res.latency_s,
                                     batch_size=res.batch_size,
-                                    transcript=res.transcript)
+                                    transcript=res.transcript,
+                                    deadline_s=req.deadline_s)
                 break
             if res is None:
                 self.metrics.record_error(req.tenant)

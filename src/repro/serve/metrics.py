@@ -49,6 +49,9 @@ class TenantStats:
     count: int = 0                 # exact: every recorded result
     errors: int = 0                # exact: terminal failures (retries spent)
     quarantined_retry_ok: int = 0  # exact: quarantined, healed on solo retry
+    admitted: int = 0              # exact: submits past the admission tier
+    shed: int = 0                  # exact: requests shed/rejected untried
+    deadline_misses: int = 0       # exact: completions after their deadline
     request_bytes: int = 0
     reply_bytes: int = 0
     fetch_bytes: int = 0
@@ -88,6 +91,7 @@ class TenantStats:
                 out["errors"] = self.errors
             if self.quarantined_retry_ok:
                 out["quarantined_retry_ok"] = self.quarantined_retry_ok
+            self._admission_summary(out)
             return out
         out = {
             "count": self.count,
@@ -103,7 +107,19 @@ class TenantStats:
             out["errors"] = self.errors
         if self.quarantined_retry_ok:
             out["quarantined_retry_ok"] = self.quarantined_retry_ok
+        self._admission_summary(out)
         return out
+
+    def _admission_summary(self, out: dict) -> None:
+        """Admission-tier counters, surfaced only when the tier touched
+        this tenant — a run without admission control keeps the exact
+        historical summary shape."""
+        if self.admitted:
+            out["admitted"] = self.admitted
+        if self.shed:
+            out["shed"] = self.shed
+        if self.deadline_misses:
+            out["deadline_misses"] = self.deadline_misses
 
 
 class ServeMetrics:
@@ -142,6 +158,13 @@ class ServeMetrics:
         self.healthy_reencryptions = 0  # exact: must stay 0 (CI-gated)
         self.refill_dispatches = 0     # exact: dispatches on the refill path
         self.refilled_requests = 0     # exact: requests they carried
+        # admission-tier accounting (all exact; zero and invisible in the
+        # summary unless an admission tier / per-request deadline is used)
+        self.admitted_requests = 0     # exact: submits past the tier
+        self.shed_requests = 0         # exact: shed + rejected, all reasons
+        self.shed_by_reason: Dict[str, int] = {}
+        self.deadline_misses = 0       # exact: completions past deadline
+        self.goodput_requests = 0      # exact: ok completions within SLO
 
     def _tenant(self, tenant: str) -> TenantStats:
         stats = self.tenants.get(tenant)
@@ -196,10 +219,37 @@ class ServeMetrics:
         for stats in (self._tenant(tenant), self.aggregate):
             stats.errors += 1
 
+    def record_admitted(self, tenant: str) -> None:
+        """One submit passed the admission tier and was enqueued."""
+        self.admitted_requests += 1
+        for stats in (self._tenant(tenant), self.aggregate):
+            stats.admitted += 1
+
+    def record_shed(self, tenant: str, reason: str) -> None:
+        """One request was shed (queued then displaced/expired) or
+        rejected at submit (rate limit, full queue) — counted drops,
+        keyed by the typed reason, so offered == completed + shed always
+        reconciles."""
+        self.shed_requests += 1
+        self.shed_by_reason[reason] = self.shed_by_reason.get(reason, 0) + 1
+        for stats in (self._tenant(tenant), self.aggregate):
+            stats.shed += 1
+
     def record(self, tenant: str, *, latency_s: float, batch_size: int,
-               transcript: ProtocolTranscript) -> None:
+               transcript: ProtocolTranscript,
+               deadline_s: Optional[float] = None) -> None:
+        # goodput = completions within their SLO; a request without a
+        # deadline always counts (no SLO to miss), one past its deadline
+        # is a deadline miss — completed, billed, but not goodput
+        missed = deadline_s is not None and latency_s > deadline_s
+        if missed:
+            self.deadline_misses += 1
+        else:
+            self.goodput_requests += 1
         for stats in (self._tenant(tenant), self.aggregate):
             stats.count += 1
+            if missed:
+                stats.deadline_misses += 1
             stats.latencies_s.append(latency_s)
             stats.batch_sizes.append(batch_size)
             stats.request_bytes += transcript.request_bytes
@@ -226,6 +276,18 @@ class ServeMetrics:
                "num_batches": self.num_batches,
                "dispatch_lanes": self.dispatch_lanes,
                "tenants": {t: s.summary() for t, s in self.tenants.items()}}
+        # surfaced only when the admission tier (or a per-request
+        # deadline) actually touched traffic: a default-config run keeps
+        # the exact historical summary shape
+        if (self.admitted_requests or self.shed_requests
+                or self.deadline_misses):
+            out["admission"] = {
+                "admitted": self.admitted_requests,
+                "shed": self.shed_requests,
+                "shed_by_reason": dict(sorted(self.shed_by_reason.items())),
+                "deadline_misses": self.deadline_misses,
+                "goodput_requests": self.goodput_requests,
+            }
         if self.refill_dispatches:
             out["refills"] = {
                 "refill_dispatches": self.refill_dispatches,

@@ -1,0 +1,379 @@
+"""repro.serve.admission: typed submit rejections, token buckets, bounded
+queue with priority displacement, deadline-aware shedding before any
+crypto, refill-credit interaction, shutdown shedding, metrics + trace
+accounting.  The default config (admission=None) stays on the historical
+path — tests/test_serve.py covers that side."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.crypto import rlwe
+from repro.data import synth
+from repro.retrieval.index import FlatIndex
+from repro.serve import (
+    AdmissionConfig,
+    AdmissionError,
+    EngineConfig,
+    InvalidEmbedding,
+    QueueFull,
+    RateLimited,
+    ServeEngine,
+    UnknownTenant,
+)
+from repro.serve import admission as adm
+from repro.serve.session import SessionManager
+
+N_DOCS, DIM, K = 1500, 64, 4
+TENANTS = ("alice", "bob", "carol")
+PARAMS = rlwe.RlweParams(n_poly=1024, chunk=512)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(0)
+    emb = synth.uniform_corpus(rng, N_DOCS, DIM)
+    docs = [f"passage-{i}".encode() for i in range(N_DOCS)]
+    index = FlatIndex.build(emb, documents=docs)
+    queries = synth.queries_near_corpus(rng, emb, 8)
+    return index, emb, queries
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _build(index, *, admission, max_batch=4, clock=None, **config_kw):
+    kw = {"clock": clock} if clock is not None else {}
+    eng = ServeEngine(
+        index,
+        config=EngineConfig(max_batch=max_batch, max_wait_s=30.0,
+                            admission=admission, **config_kw),
+        sessions=SessionManager(rlwe_params=PARAMS,
+                                deterministic_seeds=True), **kw)
+    for t in TENANTS:
+        eng.open_session(t, n=DIM, N=N_DOCS, k=K, radius=0.05,
+                         backend="rlwe")
+    return eng
+
+
+# -- typed rejection hierarchy ----------------------------------------------
+
+def test_typed_errors_subclass_legacy_types(corpus):
+    """UnknownTenant/InvalidEmbedding stay catchable as KeyError/ValueError
+    (the pre-admission contract) *and* as one AdmissionError base."""
+    index, _, queries = corpus
+    eng = _build(index, admission=None)
+    assert issubclass(UnknownTenant, (AdmissionError, KeyError))
+    assert issubclass(InvalidEmbedding, (AdmissionError, ValueError))
+    assert issubclass(QueueFull, AdmissionError)
+    assert issubclass(RateLimited, AdmissionError)
+    with pytest.raises(AdmissionError, match="nobody"):
+        eng.submit("nobody", queries[0])
+    with pytest.raises(AdmissionError, match="1-D"):
+        eng.submit("alice", queries[0].reshape(1, -1))
+    # never enqueued: no request id consumed, nothing queued
+    assert eng.pending == 0
+    assert eng.submit("alice", queries[0]) == 0
+    with pytest.raises(ValueError, match="deadline_s"):
+        eng.submit("alice", queries[1], deadline_s=0.0)
+    with pytest.raises(ValueError, match="priority"):
+        eng.submit("alice", queries[1], priority="vip")
+    eng.close(shed_pending=True)
+
+
+def test_admission_config_validation():
+    with pytest.raises(ValueError, match="tenant_rate"):
+        AdmissionConfig(tenant_rate=-1.0)
+    with pytest.raises(ValueError, match="max_queue"):
+        AdmissionConfig(max_queue=0)
+    with pytest.raises(ValueError, match="priority"):
+        AdmissionConfig(default_priority="urgent")
+
+
+# -- token buckets -----------------------------------------------------------
+
+def test_rate_limited_token_bucket(corpus):
+    index, _, queries = corpus
+    clock = FakeClock()
+    eng = _build(index, clock=clock,
+                 admission=AdmissionConfig(tenant_rate=1.0, tenant_burst=2.0,
+                                           tenant_rates={"carol": 0.0}))
+    eng.submit("alice", queries[0])
+    eng.submit("alice", queries[1])          # burst of 2 spent
+    with pytest.raises(RateLimited) as exc:
+        eng.submit("alice", queries[2])
+    assert exc.value.retry_after_s == pytest.approx(1.0)
+    # buckets are per tenant: bob still has his burst
+    eng.submit("bob", queries[3])
+    # per-tenant override: carol's rate 0 blocks her outright
+    with pytest.raises(RateLimited) as exc:
+        eng.submit("carol", queries[4])
+    assert exc.value.retry_after_s == float("inf")
+    # refill is continuous on the engine clock
+    clock.t = 1.0
+    eng.submit("alice", queries[2])
+    m = eng.metrics
+    assert m.admitted_requests == 4
+    assert m.shed_by_reason == {"rate_limited": 2}
+    assert m.tenants["alice"].admitted == 3
+    assert m.tenants["alice"].shed == 1
+    assert m.tenants["carol"].shed == 1
+    # rejected submissions were never queued
+    assert eng.pending == 4
+    eng.close(shed_pending=True)
+
+
+# -- bounded queue + priority displacement ----------------------------------
+
+def test_queue_full_displaces_lower_priority(corpus):
+    index, _, queries = corpus
+    clock = FakeClock()
+    eng = _build(index, clock=clock,
+                 admission=AdmissionConfig(max_queue=2))
+    r0 = eng.submit("alice", queries[0], priority="best_effort")
+    r1 = eng.submit("bob", queries[1], priority="best_effort")
+    # same class at the bound: rejected, nothing displaced
+    with pytest.raises(QueueFull, match="max_queue=2"):
+        eng.submit("carol", queries[2], priority="best_effort")
+    assert eng.pending == 2
+    # better class displaces the *youngest* worst-class request (r1)
+    r2 = eng.submit("carol", queries[2], priority="interactive")
+    assert eng.pending == 2
+    # interactive at the bound with only interactive/best_effort queued:
+    # still displaces the remaining best_effort (r0)
+    r3 = eng.submit("carol", queries[3], priority="interactive")
+    assert eng.pending == 2
+    # all-interactive queue: a batch submit cannot displace anything
+    with pytest.raises(QueueFull):
+        eng.submit("alice", queries[4], priority="batch")
+    shed = eng.close(shed_pending=True)
+    by_id = {r.request_id: r for r in shed}
+    assert by_id[r1].shed_reason == "queue_full"
+    assert by_id[r0].shed_reason == "queue_full"
+    assert by_id[r2].shed_reason == "shutdown"
+    assert by_id[r3].shed_reason == "shutdown"
+    assert all(not r.ok and r.error == f"shed({r.shed_reason})"
+               for r in shed)
+    m = eng.metrics
+    # 2 displacements + 2 QueueFull rejections, all counted drops
+    assert m.shed_by_reason == {"queue_full": 4, "shutdown": 2}
+    # no crypto was ever spent on any of them
+    assert m.lane_encryptions == 0
+    assert m.num_batches == 0
+
+
+# -- deadline-aware shedding -------------------------------------------------
+
+def test_deadline_shed_before_crypto(corpus):
+    """An expired request — or one whose remaining budget is below the
+    group's observed p50 dispatch wall — is resolved as a deadline shed
+    without touching any crypto stage."""
+    index, _, queries = corpus
+    clock = FakeClock()
+    eng = _build(index, clock=clock, admission=AdmissionConfig())
+    r0 = eng.submit("alice", queries[0], deadline_s=5.0)
+    group = next(iter(eng._queues))
+    # outright expiry
+    clock.t = 6.0
+    out = eng.step(force=True)
+    assert [r.request_id for r in out] == [r0]
+    assert out[0].shed_reason == "deadline"
+    assert out[0].batch_size == 0 and out[0].transcript is None
+    assert eng.metrics.lane_encryptions == 0
+    assert eng.metrics.num_batches == 0
+    assert eng.metrics.dispatch_lanes == 0
+    # seed the dispatch estimate: observed p50 >> remaining budget
+    eng.admission.observe_dispatch(group, 10.0)
+    est = eng.admission.dispatch_estimate(group)
+    assert est >= 10.0        # upper-edge bucket estimate, biased high
+    r1 = eng.submit("bob", queries[1], deadline_s=5.0)  # remaining 5 < est
+    out = eng.step(force=True)
+    assert [r.request_id for r in out] == [r1]
+    assert out[0].shed_reason == "deadline"
+    assert eng.metrics.lane_encryptions == 0
+    # no deadline -> never shed for deadline reasons
+    r2 = eng.submit("carol", queries[2])
+    out = eng.drain()
+    assert [r.request_id for r in out] == [r2]
+    assert out[0].ok and out[0].shed_reason is None
+    assert eng.metrics.goodput_requests == 1
+    eng.close()
+
+
+def test_deadline_miss_accounting_without_admission(corpus):
+    """deadline_s works with admission=None too: a completion past its
+    budget is a counted deadline miss, not goodput (and nothing is shed —
+    there is no shedding tier)."""
+    index, _, queries = corpus
+    eng = _build(index, admission=None)
+    eng.submit("alice", queries[0], deadline_s=1e-6)
+    eng.submit("bob", queries[1], deadline_s=60.0)
+    out = eng.drain()
+    assert all(r.ok for r in out)
+    m = eng.metrics
+    assert m.deadline_misses == 1
+    assert m.goodput_requests == 1
+    assert m.shed_requests == 0
+    assert m.tenants["alice"].deadline_misses == 1
+    summary = m.summary()
+    assert summary["admission"]["deadline_misses"] == 1
+    assert summary["admission"]["goodput_requests"] == 1
+    assert summary["tenants"]["alice"]["deadline_misses"] == 1
+    eng.close()
+
+
+# -- refill-credit interaction (satellite: no phantom refill batches) --------
+
+def test_shed_tail_drops_refill_credit(corpus):
+    """A group emptied by deadline shedding must not keep the refill
+    credit its earlier partial dispatch granted: a later submit inside
+    the credit window must wait for a real trigger, not dispatch
+    instantly as a phantom refill batch.  Shed requests never count as
+    dispatch lanes or occupancy."""
+    index, _, queries = corpus
+    clock = FakeClock()
+    eng = _build(index, clock=clock, max_batch=3,
+                 admission=AdmissionConfig())
+    eng.submit("alice", queries[0], key=jax.random.PRNGKey(0))
+    eng.submit("bob", queries[1], key=jax.random.PRNGKey(1))
+    clock.t = 31.0                     # age past max_wait_s=30
+    out = eng.step()
+    assert len(out) == 2 and all(r.ok for r in out)
+    # partial batch (2 < max_batch=3) granted a refill credit
+    assert eng._refill
+    # a queued tail arrives, then expires before it can dispatch
+    rid = eng.submit("carol", queries[2], deadline_s=0.5)
+    clock.t = 32.0
+    out = eng.step()
+    assert [r.shed_reason for r in out] == ["deadline"]
+    assert [r.request_id for r in out] == [rid]
+    # the emptied group's credit died with it ...
+    assert not eng._refill
+    # ... so a fresh submit inside the old credit window does NOT ride a
+    # phantom credit: no trigger fires (deadline is 30s away)
+    eng.submit("alice", queries[3], deadline_s=60.0)
+    assert eng.step() == []
+    assert eng.metrics.refill_dispatches == 0
+    # shed requests never appeared as dispatched lanes / occupancy
+    assert eng.metrics.num_batches == 1
+    assert eng.metrics.dispatch_lanes == 2
+    assert eng.metrics.occupancy(3) == pytest.approx(2 / 3)
+    out = eng.drain()
+    assert len(out) == 1 and out[0].ok
+    eng.close()
+
+
+# -- shutdown shedding -------------------------------------------------------
+
+def test_close_shed_pending_resolves_queue(corpus):
+    index, _, queries = corpus
+    eng = _build(index, admission=AdmissionConfig())
+    rids = [eng.submit(TENANTS[i % 3], q) for i, q in enumerate(queries[:5])]
+    shed = eng.close(shed_pending=True)
+    assert [r.request_id for r in shed] == rids
+    assert all(r.shed_reason == "shutdown" and not r.ok for r in shed)
+    assert eng.pending == 0
+    assert eng.metrics.lane_encryptions == 0
+    assert eng.metrics.shed_by_reason == {"shutdown": 5}
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit("alice", queries[0])
+    assert eng.close() == []          # idempotent
+
+
+# -- priority-ordered dispatch ----------------------------------------------
+
+def test_interactive_dispatches_before_best_effort(corpus):
+    """Within a group, dispatch pops interactive lanes first even when
+    best-effort requests are older — interactive degrades last."""
+    index, _, queries = corpus
+    clock = FakeClock()
+    eng = _build(index, clock=clock, max_batch=2,
+                 admission=AdmissionConfig())
+    be = [eng.submit("alice", queries[0], priority="best_effort",
+                     key=jax.random.PRNGKey(0)),
+          eng.submit("bob", queries[1], priority="best_effort",
+                     key=jax.random.PRNGKey(1))]
+    ia = [eng.submit("carol", queries[2], priority="interactive",
+                     key=jax.random.PRNGKey(2)),
+          eng.submit("alice", queries[3], priority="interactive",
+                     key=jax.random.PRNGKey(3))]
+    first = eng.step(force=True)
+    assert sorted(r.request_id for r in first) == ia
+    second = eng.step(force=True)
+    assert sorted(r.request_id for r in second) == be
+    assert all(r.ok for r in first + second)
+    eng.close()
+
+
+# -- metrics + trace surfacing ----------------------------------------------
+
+def test_shed_events_traced_and_redacted(corpus):
+    """shed / rate_limited events land in trace_summary() with counted
+    totals, and every span (shed events included) passes the whitelist
+    scan — no query-derived payloads on the overload path."""
+    from repro import obs
+
+    index, _, queries = corpus
+    clock = FakeClock()
+    eng = _build(index, clock=clock, trace=True,
+                 admission=AdmissionConfig(tenant_rate=1.0,
+                                           tenant_burst=1.0))
+    eng.submit("alice", queries[0], deadline_s=5.0,
+               key=jax.random.PRNGKey(0))
+    with pytest.raises(RateLimited):
+        eng.submit("alice", queries[1])
+    clock.t = 6.0
+    out = eng.step(force=True)
+    assert out[0].shed_reason == "deadline"
+    snap = eng.trace_summary()
+    assert snap["events"]["shed"] == 1
+    assert snap["events"]["rate_limited"] == 1
+    # summary rides the same snapshot
+    assert eng.metrics.summary()["trace"]["events"]["shed"] == 1
+    shed_spans = [s for s in eng.tracer.spans() if s.name == "shed"]
+    assert shed_spans and shed_spans[0].attrs["reason"] == "deadline"
+    assert shed_spans[0].attrs["priority"] == "interactive"
+    for span in eng.tracer.spans():
+        obs.validate_attrs(span.attrs)   # whitelist scan: must not raise
+    eng.close()
+
+
+def test_admission_summary_block(corpus):
+    index, _, queries = corpus
+    clock = FakeClock()
+    eng = _build(index, clock=clock,
+                 admission=AdmissionConfig(tenant_rate=100.0))
+    eng.submit("alice", queries[0], key=jax.random.PRNGKey(0))
+    clock.t = 31.0
+    out = eng.step()
+    assert len(out) == 1 and out[0].ok
+    s = eng.metrics.summary()
+    assert s["admission"] == {
+        "admitted": 1, "shed": 0, "shed_by_reason": {},
+        "deadline_misses": 0, "goodput_requests": 1}
+    assert s["tenants"]["alice"]["admitted"] == 1
+    # the dispatch fed the controller's per-group estimate
+    assert eng.admission.summary()["dispatch_p50_s"]
+    eng.close()
+
+
+def test_default_config_summary_shape_unchanged(corpus):
+    """admission=None + no deadlines: no admission block, no admission
+    keys in tenant summaries — the historical summary shape, exactly."""
+    index, _, queries = corpus
+    eng = _build(index, admission=None)
+    eng.submit("alice", queries[0], key=jax.random.PRNGKey(0))
+    out = eng.drain()
+    assert len(out) == 1 and out[0].ok and out[0].shed_reason is None
+    s = eng.metrics.summary()
+    assert "admission" not in s
+    assert "admitted" not in s["tenants"]["alice"]
+    assert "shed" not in s["tenants"]["alice"]
+    assert eng.admission is None
+    eng.close()
