@@ -27,6 +27,15 @@ zero lost requests — while the unlimited config collapses.
 
 ``--overload-smoke`` runs a seconds-scale version of just that sweep on a
 tiny corpus (no JSON written) — wired into scripts/smoke.sh.
+
+It then runs the scale-out **replica sweep** (the ``replica_sweep``
+section): the same stream through a `repro.serve.ReplicaRouter` at 1/2/4
+replicas — QPS, p99, merge overhead, per-query parity with the 1-replica
+run — plus a fault point (one replica's slice scan poisoned mid-drain at
+2 replicas) whose accounting must balance exactly: offered == returned,
+zero lost.  ``host_cpus`` is recorded so the regression gate can apply
+the physical scaling bound (2 replicas >= 1.3x on multi-core hosts,
+bounded router overhead on 1-CPU hosts) — see docs/scale_out.md.
 """
 
 from __future__ import annotations
@@ -45,7 +54,7 @@ from repro.crypto import rlwe
 from repro.data import synth
 from repro.retrieval.index import FlatIndex
 from repro.serve import (AdmissionConfig, AdmissionError, EngineConfig,
-                         ServeEngine)
+                         ReplicaRouter, RouterConfig, ServeEngine)
 
 N_DOCS = 200_000 if FULL else 20_000
 DIM = 384 if FULL else 128
@@ -269,6 +278,139 @@ def overload_smoke() -> None:
     print("# overload smoke ok")
 
 
+# -- replica-router scale-out sweep ------------------------------------------
+
+def build_router(index, num_replicas: int, *, max_batch: int,
+                 n_docs: int = None, dim: int = None) -> ReplicaRouter:
+    from repro.serve.session import SessionManager
+
+    n_docs = N_DOCS if n_docs is None else n_docs
+    dim = DIM if dim is None else dim
+    router = ReplicaRouter(
+        index,
+        config=RouterConfig(num_replicas=num_replicas,
+                            engine=EngineConfig(max_batch=max_batch)),
+        sessions=SessionManager(rlwe_params=RLWE_PARAMS,
+                                deterministic_seeds=True))
+    for t in range(N_TENANTS):
+        router.open_session(f"tenant-{t}", n=dim, N=n_docs, k=K,
+                            radius=RADIUS, backend="rlwe")
+    return router
+
+
+def replica_sweep(index, queries, *, max_batch: int,
+                  n_docs: int = None, dim: int = None) -> dict:
+    """Scale-out sweep (the ``replica_sweep`` section): the same request
+    stream through a ReplicaRouter at 1/2/4 replicas — QPS, p99 and the
+    merge overhead per point, per-query parity against the 1-replica run
+    (the router's bit-identity contract, here checked end to end on the
+    bench corpus) — then a fault point: one replica poisoned mid-drain at
+    2 replicas, every request accounted for (zero lost).
+
+    ``host_cpus`` is recorded because the scaling gate is physical: on a
+    multi-core host 2 replicas must reach >= 1.3x the 1-replica QPS
+    (replica drains and slice scans run on separate workers); a 1-CPU
+    host cannot parallelize threads, so the gate there bounds router
+    overhead instead (`scripts/check_bench_regression.py`)."""
+    stream = list(queries) * 2       # smooth short-stream QPS noise
+    points = {}
+    baseline = None
+    for n_rep in (1, 2, 4):
+        router = build_router(index, n_rep, max_batch=max_batch,
+                              n_docs=n_docs, dim=dim)
+        for i, q in enumerate(stream):           # jit warmup pass
+            router.submit(f"tenant-{i % N_TENANTS}", q,
+                          key=jax.random.PRNGKey(i))
+        router.drain()
+        merge0 = router.metrics.summary()["merge_wall_s"]
+        t0 = time.monotonic()
+        for i, q in enumerate(stream):
+            router.submit(f"tenant-{i % N_TENANTS}", q,
+                          key=jax.random.PRNGKey(i))
+        results = router.drain()
+        wall = time.monotonic() - t0
+        m = router.metrics.summary()
+        router.close()
+        assert all(r.ok for r in results)
+        assert m["quarantines"] == [] and m["late_dropped"] == 0
+        if baseline is None:
+            baseline = results
+        else:    # bit-identity vs the 1-replica run, per query
+            for rb, rn in zip(baseline, results):
+                assert rb.request_id == rn.request_id
+                assert rb.ids.tolist() == rn.ids.tolist(), (
+                    f"id mismatch at {n_rep} replicas: {rb.ids} vs {rn.ids}")
+                assert rb.docs == rn.docs
+                assert (rb.transcript.total_bytes
+                        == rn.transcript.total_bytes)
+        lats = [r.latency_s for r in results]
+        merge_s = m["merge_wall_s"] - merge0
+        qps = len(results) / wall
+        points[str(n_rep)] = {
+            "replicas": n_rep,
+            "qps": qps,
+            "p50_s": float(np.percentile(lats, 50)),
+            "p99_s": float(np.percentile(lats, 99)),
+            "merge_wall_s": merge_s,
+            "merge_frac": merge_s / wall,
+            "scatter_calls": m["scatter_calls"],
+        }
+        emit(f"serve_replicas_{n_rep}", wall / len(results) * 1e6,
+             f"qps={qps:.3f} p99={points[str(n_rep)]['p99_s']:.3f}s "
+             f"merge={100.0 * merge_s / wall:.2f}%")
+
+    # fault point: poison one replica's slice scan mid-run at 2 replicas;
+    # the router must quarantine it, fall back for its slice, and resolve
+    # every ledgered request — offered == returned, zero lost
+    router = build_router(index, 2, max_batch=max_batch,
+                          n_docs=n_docs, dim=dim)
+    for i, q in enumerate(stream):               # warmup before the fault
+        router.submit(f"tenant-{i % N_TENANTS}", q,
+                      key=jax.random.PRNGKey(i))
+    router.drain()
+    victim = 1
+
+    def poison(replica_id: int) -> None:
+        if replica_id == victim:
+            raise RuntimeError("injected scan fault")
+
+    router._scan_hook = poison
+    rids = [router.submit(f"tenant-{i % N_TENANTS}", q,
+                          key=jax.random.PRNGKey(i))
+            for i, q in enumerate(stream)]
+    results = router.drain()
+    m = router.metrics.summary()
+    router.close()
+    got_rids = [r.request_id for r in results]
+    assert sorted(got_rids) == sorted(rids), "fault point lost a request"
+    fault = {
+        "victim": victim,
+        "offered": len(rids),
+        "returned": len(results),
+        "ok": sum(r.ok for r in results),
+        "quarantine_errors": sum(bool(r.quarantined and not r.ok)
+                                 for r in results),
+        "lost": len(rids) - len(results),
+        "submitted": m["submitted"],
+        "completed": m["completed"],
+        "quarantine_resolved": m["quarantine_resolved"],
+        "late_dropped": m["late_dropped"],
+        "fallback_scans": m["fallback_scans"],
+        "quarantines": m["quarantines"],
+    }
+    emit("serve_replicas_fault", 0.0,
+         f"offered={fault['offered']} returned={fault['returned']} "
+         f"quarantined={fault['quarantine_errors']} lost={fault['lost']}")
+    return {
+        "host_cpus": os.cpu_count(),
+        "max_batch": max_batch,
+        "requests": len(stream),
+        "parity_checked": True,
+        "points": points,
+        "fault": fault,
+    }
+
+
 def main() -> None:
     rng = np.random.default_rng(0)
     emb = synth.uniform_corpus(rng, N_DOCS, DIM)
@@ -340,6 +482,10 @@ def main() -> None:
     results_json["overload"] = overload_sweep(
         index, queries, capacity_qps=qps_by_bs[big], max_batch=big,
         n_per_point=192 if FULL else 96)
+
+    # scale-out replica sweep + fault point (docs/scale_out.md)
+    results_json["replica_sweep"] = replica_sweep(index, queries,
+                                                  max_batch=4)
 
     payload = {
         "bench": "serve",

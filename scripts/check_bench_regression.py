@@ -38,6 +38,15 @@ the knee, interactive p99 under 2x overload within the recorded
 p99_bound, the 2x point actually shedding, and the unlimited config
 measurably collapsing where the admission config holds.
 
+The serve JSON must also carry the scale-out ``replica_sweep`` section
+(missing section = FAIL): per-query parity vs the 1-replica run
+re-checked, merge overhead bounded, 2-replica QPS >= 1.3x the 1-replica
+run on hosts with >= 2 CPUs (on a 1-CPU host thread parallelism is
+physically unavailable, so the gate bounds router overhead at >= 0.8x
+instead), and the replica-failure fault point losing zero requests
+(offered == returned; ledger submitted == completed +
+quarantine-resolved).
+
     scripts/check_bench_regression.py [BENCH_rlwe.json] [min_speedup=1.0]
         [max_sharded_ratio=1.3] [min_mem_reduction=4.0]
         [max_skewed_ratio=1.2] [max_uniform_ratio=1.3]
@@ -314,6 +323,113 @@ def _check_overload(results: dict, min_goodput_ratio: float = 0.8) -> int:
     return failures
 
 
+def _check_replica_sweep(results: dict, min_scaling: float = 1.3,
+                         max_overhead_ratio: float = 0.8,
+                         max_merge_frac: float = 0.25) -> int:
+    """Scale-out gate on the replica sweep: the section must exist (a
+    results-key rename must not silently drop the scale-out contract),
+    the sweep must have re-checked per-query parity against the
+    1-replica run, the merge must stay cheap, and the fault point must
+    account for every request — zero lost.
+
+    The QPS bound is physical: replica drains and slice scans run on
+    separate worker threads, so on a host with >= 2 CPUs the 2-replica
+    run must reach ``min_scaling``x the 1-replica QPS.  A 1-CPU host
+    cannot parallelize threads at all — there the gate instead bounds
+    the router's overhead (scatter + merge + ledger must not cost more
+    than ``1 - max_overhead_ratio`` of single-engine throughput)."""
+    section = results.get("replica_sweep")
+    if section is None:
+        print("FAIL replica_sweep: serve results lack the replica-sweep "
+              "section — the scale-out gate did not run", file=sys.stderr)
+        return 1
+    failures = 0
+    if not section.get("parity_checked"):
+        print("FAIL replica_sweep: per-query parity vs the 1-replica run "
+              "was not checked", file=sys.stderr)
+        failures += 1
+    points = section.get("points", {})
+    for label in ("1", "2", "4"):
+        if label not in points:
+            print(f"FAIL replica_sweep: missing point at {label} replicas",
+                  file=sys.stderr)
+            failures += 1
+    if failures:
+        return failures
+    q1 = points["1"].get("qps")
+    q2 = points["2"].get("qps")
+    cpus = section.get("host_cpus")
+    if q1 is None or q2 is None:
+        print("FAIL replica_sweep: points lack qps", file=sys.stderr)
+        failures += 1
+    elif cpus is not None and cpus >= 2:
+        if q2 < min_scaling * q1:
+            print(f"FAIL replica_sweep: 2-replica qps {q2:.3f} < "
+                  f"{min_scaling}x the 1-replica {q1:.3f} on a "
+                  f"{cpus}-CPU host — scale-out is not scaling",
+                  file=sys.stderr)
+            failures += 1
+        else:
+            print(f"ok   replica_sweep: 2 replicas {q2 / q1:.2f}x the "
+                  f"1-replica qps (>= {min_scaling}x, {cpus} CPUs)")
+    else:
+        # single-CPU host: thread parallelism is physically unavailable,
+        # so gate the router's overhead instead of the scaling win
+        if q2 < max_overhead_ratio * q1:
+            print(f"FAIL replica_sweep: 2-replica qps {q2:.3f} < "
+                  f"{max_overhead_ratio}x the 1-replica {q1:.3f} on a "
+                  f"1-CPU host — router overhead regressed",
+                  file=sys.stderr)
+            failures += 1
+        else:
+            print(f"note replica_sweep: 1-CPU host ({cpus}) — the "
+                  f"{min_scaling}x scaling gate needs >= 2 CPUs; gating "
+                  f"overhead instead")
+            print(f"ok   replica_sweep: 2 replicas {q2 / q1:.2f}x the "
+                  f"1-replica qps (>= {max_overhead_ratio}x overhead "
+                  f"bound)")
+    merge_ok = True
+    for label, point in sorted(points.items()):
+        frac = point.get("merge_frac")
+        if frac is None or frac > max_merge_frac:
+            print(f"FAIL replica_sweep/{label}: merge overhead {frac} of "
+                  f"wall > {max_merge_frac}", file=sys.stderr)
+            failures += 1
+            merge_ok = False
+    if merge_ok:
+        print(f"ok   replica_sweep: merge overhead <= {max_merge_frac} "
+              f"of wall at every point")
+    fault = section.get("fault")
+    if fault is None:
+        print("FAIL replica_sweep: no fault point — the zero-lost "
+              "contract under replica failure is untested",
+              file=sys.stderr)
+        return failures + 1
+    lost = fault.get("lost")
+    returned = fault.get("returned")
+    offered = fault.get("offered")
+    resolved = fault.get("quarantine_resolved", 0)
+    submitted = sum(fault.get("submitted", []))
+    completed = sum(fault.get("completed", []))
+    if (lost != 0 or returned != offered
+            or submitted != completed + resolved):
+        print(f"FAIL replica_sweep/fault: {lost} lost, returned "
+              f"{returned} of {offered} offered, ledger "
+              f"{submitted} != {completed} + {resolved} — requests are "
+              f"being dropped silently under replica failure",
+              file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   replica_sweep/fault: offered {offered} == returned "
+              f"{returned}, ledger {submitted} == {completed} completed "
+              f"+ {resolved} quarantine-resolved (0 lost)")
+    if not fault.get("quarantines"):
+        print("FAIL replica_sweep/fault: no quarantine recorded — the "
+              "injected fault did not fire", file=sys.stderr)
+        failures += 1
+    return failures
+
+
 def _check_serve(path: str, min_speedup: float,
                  min_occupancy: float, min_goodput_ratio: float) -> int:
     """Serving-engine gate on BENCH_serve.json: batch-8 fill and the
@@ -349,6 +465,7 @@ def _check_serve(path: str, min_speedup: float,
         print(f"ok   serve/batch{big}: occupancy {occ:.2f} "
               f"(>= {min_occupancy})")
     failures += _check_overload(results, min_goodput_ratio)
+    failures += _check_replica_sweep(results)
     return failures
 
 

@@ -8,6 +8,10 @@ wire-size stats per request plus the per-tenant engine metrics.
 
 `python -m repro.launch.serve --n-docs 20000 --requests 8 --backend rlwe`
 `... --no-batch` runs the sequential one-query-at-a-time comparison path.
+`... --replicas N` serves through the scale-out `ReplicaRouter` (N engine
+replicas over contiguous corpus slices, scatter-gather top-k'; results
+stay bit-identical to a single engine — docs/scale_out.md) and prints the
+router summary instead of the single-engine one.
 `... --trace-out trace.json` enables stage-level span tracing (repro.obs)
 and writes a Chrome-trace timeline loadable at https://ui.perfetto.dev;
 the summary then carries per-stage latency histograms.
@@ -34,7 +38,8 @@ import jax
 from repro.data import synth
 from repro.retrieval.index import FlatIndex
 from repro.serve import (AdmissionConfig, AdmissionError, EngineConfig,
-                         RateLimited, ServeEngine)
+                         RateLimited, ReplicaRouter, RouterConfig,
+                         ServeEngine)
 from repro.serve.admission import PRIORITIES
 
 
@@ -53,6 +58,11 @@ def main() -> None:
     ap.add_argument("--max-wait-ms", type=float, default=20.0)
     ap.add_argument("--no-batch", action="store_true",
                     help="sequential comparison path (one query per step)")
+    ap.add_argument("--replicas", type=int, default=1, metavar="N",
+                    help="N > 1 serves through a ReplicaRouter: N engine "
+                         "replicas over contiguous corpus slices with "
+                         "scatter-gather top-k' (bit-identical to N=1); "
+                         "prints the router summary (docs/scale_out.md)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="enable stage tracing and write a Perfetto-"
                          "loadable Chrome-trace JSON timeline to PATH")
@@ -92,15 +102,25 @@ def main() -> None:
                                 else args.deadline_ms / 1e3),
             default_priority=args.priority or "interactive")
 
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.replicas > 1 and args.no_batch:
+        ap.error("--replicas > 1 is the batched path; drop --no-batch")
+    ecfg = EngineConfig(
+        max_batch=1 if args.no_batch else args.max_batch,
+        max_wait_s=args.max_wait_ms / 1e3,
+        sequential=args.no_batch,
+        trace=args.trace_out is not None,
+        admission=admission)
     # context manager: close() drains leftovers and stops the sharded
     # cache's background admitter thread on exit (no thread leak across
-    # engine lifetimes)
-    with ServeEngine(index, config=EngineConfig(
-            max_batch=1 if args.no_batch else args.max_batch,
-            max_wait_s=args.max_wait_ms / 1e3,
-            sequential=args.no_batch,
-            trace=args.trace_out is not None,
-            admission=admission)) as engine:
+    # engine lifetimes); the router additionally stops its per-replica
+    # worker pools
+    service = (ReplicaRouter(index, config=RouterConfig(
+                   num_replicas=args.replicas, engine=ecfg))
+               if args.replicas > 1 else
+               ServeEngine(index, config=ecfg))
+    with service as engine:
         for t in range(args.tenants):
             sess = engine.open_session(f"tenant-{t}", n=args.dim,
                                        N=args.n_docs, k=args.k,
@@ -159,21 +179,26 @@ def main() -> None:
                 "batch_size": res.batch_size, "recall": recall,
                 "wire_bytes": res.transcript.total_bytes,
                 "path": res.transcript.path}))
-        summary = engine.metrics.summary()
-        summary["aggregate"]["qps"] = round(len(results) / wall, 3)
-        occupancy = engine.metrics.occupancy(engine.config.max_batch)
-        out = {"summary": summary["aggregate"],
-               "num_batches": summary["num_batches"],
-               "occupancy": None if occupancy is None
-               else round(occupancy, 3)}
-        if "failures" in summary:
-            out["failures"] = summary["failures"]
-        if "admission" in summary:
-            out["admission"] = dict(summary["admission"],
-                                    rejected_submits=rejected)
-        if "trace" in summary:
-            out["stages"] = summary["trace"]["stages"]
-        print(json.dumps(out))
+        if args.replicas > 1:
+            fleet = engine.summary()
+            fleet["router"]["qps"] = round(len(results) / wall, 3)
+            print(json.dumps(fleet))
+        else:
+            summary = engine.metrics.summary()
+            summary["aggregate"]["qps"] = round(len(results) / wall, 3)
+            occupancy = engine.metrics.occupancy(engine.config.max_batch)
+            out = {"summary": summary["aggregate"],
+                   "num_batches": summary["num_batches"],
+                   "occupancy": None if occupancy is None
+                   else round(occupancy, 3)}
+            if "failures" in summary:
+                out["failures"] = summary["failures"]
+            if "admission" in summary:
+                out["admission"] = dict(summary["admission"],
+                                        rejected_submits=rejected)
+            if "trace" in summary:
+                out["stages"] = summary["trace"]["stages"]
+            print(json.dumps(out))
         if args.trace_out is not None:
             n_events = engine.write_trace(args.trace_out)
             print(json.dumps({"trace_out": args.trace_out,

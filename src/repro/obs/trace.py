@@ -60,6 +60,8 @@ ALLOWED_ATTR_KEYS = frozenset({
     "priority",       # admission priority class name (public knob)
     "queue",          # queue depth (count)
     "reason",         # short machine-chosen label (e.g. shed reason)
+    "replica",        # replica id (public placement index, router tier)
+    "replicas",       # replicas touched (count, scatter fan-out)
     "requests",       # request count
     "resident",       # device-resident shard count
     "shard",          # shard id (public partition index, not a doc id)
@@ -135,12 +137,16 @@ class Tracer:
 
     enabled = True
 
-    def __init__(self, *, capacity: int = 65536,
-                 clock=time.monotonic) -> None:
+    def __init__(self, *, capacity: int = 65536, clock=time.monotonic,
+                 common: Optional[dict] = None) -> None:
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self.clock = clock
+        # attrs stamped onto every span/event from this tracer (e.g. the
+        # router gives each replica's tracer common={"replica": r}) — same
+        # redaction contract as per-call attrs; per-call keys win
+        self.common = validate_attrs(common or {})
         self.dropped = 0             # spans evicted by the ring bound
         self._spans: deque = deque(maxlen=capacity)
         self._hist: Dict[str, StageHistogram] = {}
@@ -161,7 +167,7 @@ class Tracer:
         span = Span(name=name, track=track, t_start=float(t_start),
                     duration_s=max(float(t_end) - float(t_start), 0.0),
                     request_id=request_id, batch_id=batch_id,
-                    attrs=validate_attrs(attrs))
+                    attrs={**self.common, **validate_attrs(attrs)})
         with self._lock:
             if len(self._spans) == self.capacity:
                 self.dropped += 1
@@ -199,7 +205,8 @@ class Tracer:
         now = self.clock()
         span = Span(name=name, track=track, t_start=float(now),
                     duration_s=0.0, request_id=request_id,
-                    batch_id=batch_id, attrs=validate_attrs(attrs))
+                    batch_id=batch_id,
+                    attrs={**self.common, **validate_attrs(attrs)})
         with self._lock:
             if len(self._spans) == self.capacity:
                 self.dropped += 1
@@ -260,6 +267,7 @@ class NullTracer:
     enabled = False
     capacity = 0
     dropped = 0
+    common: dict = {}
     clock = staticmethod(time.monotonic)
 
     def record(self, name, t_start, t_end, **kwargs):

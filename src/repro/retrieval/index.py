@@ -18,6 +18,60 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+@dataclasses.dataclass(frozen=True)
+class IndexSlice:
+    """A contiguous row-range view of a `FlatIndex` — the unit of replica
+    placement in the scale-out serving tier (`repro.serve.router`).
+
+    ``embeddings`` holds rows ``[start, stop)`` of the parent index;
+    global ids are ``start + local id``, so a slice's search results drop
+    straight into the parent's id space.  Slices are views for placement
+    and search only — documents and candidate caches stay with the parent
+    index (the re-rank and fetch stages address them by global id)."""
+
+    embeddings: jax.Array          # (stop - start, n) parent rows
+    start: int
+    stop: int
+
+    @property
+    def num_rows(self) -> int:
+        return self.stop - self.start
+
+    @property
+    def dim(self) -> int:
+        return self.embeddings.shape[1]
+
+
+def plan_row_slices(num_rows: int, num_slices: int, *,
+                    align: int = 1) -> list:
+    """Contiguous near-equal ``(start, stop)`` row ranges covering
+    ``[0, num_rows)``.
+
+    ``align`` snaps interior boundaries to multiples of itself (pass the
+    candidate cache's shard size so replica slices and cache shards share
+    boundaries — one doc range is then exactly one placement unit for
+    both).  Raises if ``num_rows`` cannot be cut into ``num_slices``
+    nonempty aligned ranges."""
+    if num_slices < 1:
+        raise ValueError(f"num_slices must be >= 1, got {num_slices}")
+    if align < 1:
+        raise ValueError(f"align must be >= 1, got {align}")
+    if num_slices > num_rows:
+        raise ValueError(f"cannot cut {num_rows} rows into {num_slices} "
+                         f"nonempty slices")
+    bounds = [0]
+    for r in range(1, num_slices):
+        cut = round(num_rows * r / num_slices / align) * align
+        cut = max(cut, bounds[-1] + align)      # keep every slice nonempty
+        bounds.append(cut)
+    bounds.append(num_rows)
+    if any(b >= e for b, e in zip(bounds[:-1], bounds[1:])):
+        raise ValueError(
+            f"align={align} cannot cut {num_rows} rows into {num_slices} "
+            f"nonempty aligned slices")
+    return list(zip(bounds[:-1], bounds[1:]))
+
+
 @dataclasses.dataclass
 class FlatIndex:
     """A flat (exact-search) embedding index, optionally mesh-sharded."""
@@ -123,6 +177,17 @@ class FlatIndex:
 
         return self._cand_caches.get((rlwe.params_key(rlwe_params), config))
 
+    def slice_view(self, start: int, stop: int) -> IndexSlice:
+        """A contiguous row-range view ``[start, stop)`` of this index (the
+        replica placement unit — see `IndexSlice`).  The slice materializes
+        its rows once here; repeated searches over it never re-gather."""
+        if not (0 <= start < stop <= self.num_rows):
+            raise ValueError(
+                f"slice [{start}, {stop}) out of range for "
+                f"{self.num_rows}-row index")
+        return IndexSlice(embeddings=self.embeddings[start:stop],
+                          start=start, stop=stop)
+
     def _shard_sharding(self, rlwe_params, config):
         """NamedSharding for a pinned cache shard (doc axis over the mesh
         row axes), or None when the index is unsharded / indivisible."""
@@ -135,4 +200,4 @@ class FlatIndex:
         return NamedSharding(self.mesh, P(self.row_axes, None, None, None))
 
 
-__all__ = ["FlatIndex"]
+__all__ = ["FlatIndex", "IndexSlice", "plan_row_slices"]

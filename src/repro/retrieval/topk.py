@@ -17,7 +17,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels.scoretopk import ops as sops
-from repro.retrieval.index import FlatIndex
+from repro.retrieval.index import FlatIndex, IndexSlice
 
 
 class SearchResult(NamedTuple):
@@ -82,10 +82,28 @@ def distributed_topk(index: FlatIndex, queries, k: int, *,
     return search(queries, index.embeddings)
 
 
+def slice_topk(sl: IndexSlice, queries, k: int, *, tile: int = 2048,
+               per_tile_k: Optional[int] = None,
+               use_pallas=None) -> SearchResult:
+    """Exact top-k over one replica's row slice, in *global* ids.
+
+    Runs the same fused score+select as the full-index path (same tile
+    schedule, same stable tie-break toward lower row id), then offsets
+    local ids by ``sl.start``.  Per-slice results merged by (score desc,
+    global id asc) therefore reproduce the full-index top-k bit-for-bit —
+    the invariant the scale-out router's differential harness pins.
+    """
+    k_local = min(k, sl.num_rows)
+    out = sops.topk_scores(queries, sl.embeddings, k_local,
+                           tile=min(tile, sl.num_rows),
+                           per_tile_k=per_tile_k, use_pallas=use_pallas)
+    return SearchResult(out.values, out.indices + sl.start, out.exact)
+
+
 def distances_from_scores(values):
     """Cosine distance (paper Definition 2) from inner-product scores."""
     return 1.0 - values
 
 
 __all__ = ["SearchResult", "make_sharded_topk", "distributed_topk",
-           "distances_from_scores"]
+           "slice_topk", "distances_from_scores"]

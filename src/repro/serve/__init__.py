@@ -17,9 +17,15 @@ Layers (bottom up):
                 the full protocol for the batch.
   metrics.py    per-tenant latency percentiles + wire-byte accounting built
                 on Request.nbytes / Reply.nbytes.
+  router.py     scale-out tier: `ReplicaRouter` over N slice-owning engine
+                replicas — tenant-hash placement, scatter-gather top-k'
+                with a deterministic merge, per-replica admitters, and
+                replica quarantine with ledger-backed zero-lost results.
 
 The batched path is bit-compatible with the one-query `run_remoterag` driver:
-identical docs, ids and wire bytes at any batch size (tests/test_serve.py).
+identical docs, ids and wire bytes at any batch size (tests/test_serve.py);
+the router is bit-compatible with a single whole-corpus engine at any
+replica count (tests/test_router.py).
 """
 
 from repro.serve.admission import (
@@ -35,6 +41,13 @@ from repro.serve.admission import (
 from repro.serve.batching import CandidateCacheConfig, ShardedCandidateCache
 from repro.serve.engine import EngineConfig, ServeEngine, ServeResult
 from repro.serve.metrics import ServeMetrics
+from repro.serve.router import (
+    ReplicaRouter,
+    ReplicaUnavailable,
+    RouterConfig,
+    RouterMetrics,
+    merge_topk,
+)
 from repro.serve.session import PlanCache, Session, SessionManager
 
 __all__ = [
@@ -44,4 +57,6 @@ __all__ = [
     "PRIORITIES", "AdmissionConfig", "AdmissionController",
     "AdmissionError", "UnknownTenant", "InvalidEmbedding", "QueueFull",
     "RateLimited",
+    "ReplicaRouter", "RouterConfig", "RouterMetrics", "ReplicaUnavailable",
+    "merge_topk",
 ]

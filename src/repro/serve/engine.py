@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import secrets
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -199,7 +200,9 @@ class ServeEngine:
                  config: Optional[EngineConfig] = None,
                  sessions: Optional[SessionManager] = None,
                  clock=time.monotonic,
-                 tracer: Optional[obs.Tracer] = None):
+                 tracer: Optional[obs.Tracer] = None,
+                 searcher=None,
+                 request_ids: Optional[itertools.count] = None):
         self.config = EngineConfig() if config is None else config
         # `is None` (not truthiness): an empty SessionManager has len 0
         self.sessions = SessionManager() if sessions is None else sessions
@@ -223,8 +226,18 @@ class ServeEngine:
             window=self.config.metrics_window,
             tracer=self.tracer if self.tracer.enabled else None)
         self._clock = clock
-        self._ids = itertools.count()
+        # ``request_ids`` lets a fleet share one id counter (the replica
+        # router passes its own, so request ids are globally unique and
+        # equal to single-engine ids in submit order — the differential
+        # harness compares on them); ``searcher`` overrides the top-k'
+        # candidate search (the router injects scatter-gather here, see
+        # `_search_topk`).  Both default to the standalone behavior.
+        self._ids = itertools.count() if request_ids is None else request_ids
+        self._searcher = searcher
         self._batch_ids = itertools.count()
+        # guards _queues/_refill/_shed_results: a router submits from the
+        # client thread while each replica's step runs on its own worker
+        self._qlock = threading.Lock()
         # per-group priority-classed FIFO queues keyed once at submit:
         # dispatch pops from a group head instead of rescanning/rewriting
         # one global list.  With every request in the default priority
@@ -292,35 +305,38 @@ class ServeEngine:
         if deadline_s is not None and deadline_s <= 0:
             raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
         now = self._clock()
-        if self.admission is not None:
-            retry = self.admission.check_rate(tenant, now)
-            if retry is not None:
-                self.metrics.record_shed(tenant, adm.SHED_RATE_LIMITED)
-                self.tracer.event("rate_limited", tenant=tenant,
-                                  priority=priority)
-                raise adm.RateLimited(tenant, retry)
-            bound = ac.max_queue
-            if bound is not None and self.pending >= bound:
+        with self._qlock:
+            if self.admission is not None:
+                retry = self.admission.check_rate(tenant, now)
+                if retry is not None:
+                    self.metrics.record_shed(tenant, adm.SHED_RATE_LIMITED)
+                    self.tracer.event("rate_limited", tenant=tenant,
+                                      priority=priority)
+                    raise adm.RateLimited(tenant, retry)
+            bound = ac.max_queue if ac is not None else None
+            if bound is not None:
+                depth = sum(len(q) for q in self._queues.values())
                 # displace the youngest request of the worst strictly
                 # lower-priority class (it becomes a queue_full shed
                 # result, returned by the next step/drain), else reject
                 # the newcomer — counted drops either way, never silent
-                if not self._displace(rank, now):
+                if depth >= bound and not self._displace(rank, now):
                     self.metrics.record_shed(tenant, adm.SHED_QUEUE_FULL)
                     self.tracer.event("shed", reason=adm.SHED_QUEUE_FULL,
                                       tenant=tenant, priority=priority)
-                    raise adm.QueueFull(tenant, self.pending, bound)
-            self.metrics.record_admitted(tenant)
-        rid = next(self._ids)
-        if key is None:
-            key = jax.random.PRNGKey(secrets.randbits(63))
-        sess = self.sessions.get(tenant)
-        group = (sess.backend, emb.shape[-1], sess.plan.kprime)
-        self._queues.setdefault(group, adm.GroupQueue()).append(
-            ServeRequest(
-                request_id=rid, tenant=tenant, embedding=emb, key=key,
-                t_enqueue=now, group=group,
-                priority=priority, rank=rank, deadline_s=deadline_s))
+                    raise adm.QueueFull(tenant, depth, bound)
+            if self.admission is not None:
+                self.metrics.record_admitted(tenant)
+            rid = next(self._ids)
+            if key is None:
+                key = jax.random.PRNGKey(secrets.randbits(63))
+            sess = self.sessions.get(tenant)
+            group = (sess.backend, emb.shape[-1], sess.plan.kprime)
+            self._queues.setdefault(group, adm.GroupQueue()).append(
+                ServeRequest(
+                    request_id=rid, tenant=tenant, embedding=emb, key=key,
+                    t_enqueue=now, group=group,
+                    priority=priority, rank=rank, deadline_s=deadline_s))
         return rid
 
     def _displace(self, rank: int, now: float) -> bool:
@@ -372,7 +388,8 @@ class ServeEngine:
 
     @property
     def pending(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        with self._qlock:
+            return sum(len(q) for q in self._queues.values())
 
     def cache_stats(self) -> Optional[dict]:
         """LRU / gather counters of the sharded candidate cache (None for
@@ -456,41 +473,45 @@ class ServeEngine:
         requests never reach any crypto stage."""
         now = self._clock()
         cfg = self.config
-        shed: List[ServeResult] = []
-        if self._shed_results:
-            shed, self._shed_results = self._shed_results, []
-        if self.admission is not None and cfg.admission.shed_deadlines:
-            shed.extend(self._shed_expired(now))
-        if self._refill:               # credits live one batching window
-            self._refill = {g: t for g, t in self._refill.items()
-                            if now - t < cfg.max_wait_s}
-        chosen = None
-        chosen_key = None
-        chosen_refill = False
-        for key, group in self._queues.items():
-            size_hit = len(group) >= cfg.max_batch
-            head_t = group.oldest_enqueue()
-            deadline_hit = (now - head_t) >= cfg.max_wait_s
-            refill_hit = cfg.refill and key in self._refill
-            if not (size_hit or deadline_hit or refill_hit or force):
-                continue
-            # (head class rank, oldest enqueue): with every request in the
-            # default class this is exactly the oldest-head-wins order of
-            # the uncontrolled engine
-            cand_key = (group.head_rank(), head_t)
-            if chosen is None or cand_key < chosen_key:
-                chosen = key
-                chosen_key = cand_key
-                chosen_refill = refill_hit and not (
-                    size_hit or deadline_hit or force)
-        if chosen is None:
-            return shed
-        group = self._queues[chosen]
-        batch = group.pop_batch(cfg.max_batch)
-        if not group:
-            del self._queues[chosen]
-        self._refill.pop(chosen, None)           # credit consumed
-        leftovers = chosen in self._queues       # burst tail still queued
+        # trigger selection and the batch pop happen under the queue lock
+        # (a router submits concurrently from its client thread); the
+        # dispatch itself — all the crypto — runs outside it
+        with self._qlock:
+            shed: List[ServeResult] = []
+            if self._shed_results:
+                shed, self._shed_results = self._shed_results, []
+            if self.admission is not None and cfg.admission.shed_deadlines:
+                shed.extend(self._shed_expired(now))
+            if self._refill:           # credits live one batching window
+                self._refill = {g: t for g, t in self._refill.items()
+                                if now - t < cfg.max_wait_s}
+            chosen = None
+            chosen_key = None
+            chosen_refill = False
+            for key, group in self._queues.items():
+                size_hit = len(group) >= cfg.max_batch
+                head_t = group.oldest_enqueue()
+                deadline_hit = (now - head_t) >= cfg.max_wait_s
+                refill_hit = cfg.refill and key in self._refill
+                if not (size_hit or deadline_hit or refill_hit or force):
+                    continue
+                # (head class rank, oldest enqueue): with every request in
+                # the default class this is exactly the oldest-head-wins
+                # order of the uncontrolled engine
+                cand_key = (group.head_rank(), head_t)
+                if chosen is None or cand_key < chosen_key:
+                    chosen = key
+                    chosen_key = cand_key
+                    chosen_refill = refill_hit and not (
+                        size_hit or deadline_hit or force)
+            if chosen is None:
+                return shed
+            group = self._queues[chosen]
+            batch = group.pop_batch(cfg.max_batch)
+            if not group:
+                del self._queues[chosen]
+            self._refill.pop(chosen, None)       # credit consumed
+            leftovers = chosen in self._queues   # burst tail still queued
         t_dispatch = self._clock()
         out = self._dispatch(batch)
         if self.admission is not None:
@@ -515,7 +536,8 @@ class ServeEngine:
         # always be expired by the time the caller can step() again.
         if (cfg.refill and not chosen_refill and not force
                 and (len(batch) < cfg.max_batch or leftovers)):
-            self._refill[chosen] = self._clock()
+            with self._qlock:
+                self._refill[chosen] = self._clock()
         return shed + out
 
     def _shed_expired(self, now: float) -> List[ServeResult]:
@@ -548,17 +570,18 @@ class ServeEngine:
         displacement sheds are flushed here too, even when the queues are
         already empty."""
         out: List[ServeResult] = []
-        if self._shed_results:
-            out, self._shed_results = self._shed_results, []
-        if shed:
-            now = self._clock()
-            for key, q in list(self._queues.items()):
-                for req in q:
-                    out.append(
-                        self._resolve_shed(req, adm.SHED_SHUTDOWN, now))
-            self._queues.clear()
-            self._refill.clear()
-        while self._queues:
+        with self._qlock:
+            if self._shed_results:
+                out, self._shed_results = self._shed_results, []
+            if shed:
+                now = self._clock()
+                for key, q in list(self._queues.items()):
+                    for req in q:
+                        out.append(
+                            self._resolve_shed(req, adm.SHED_SHUTDOWN, now))
+                self._queues.clear()
+                self._refill.clear()
+        while self.pending:
             out.extend(self.step(force=True))
         return sorted(out, key=lambda r: r.request_id)
 
@@ -665,6 +688,21 @@ class ServeEngine:
             out.append(res)
         return out
 
+    def _search_topk(self, perturbed: np.ndarray, kprime: int) -> np.ndarray:
+        """Module 2a, cloud half: the (B, k') candidate-id block for a
+        (B, n) block of perturbed embeddings.  The default scans this
+        engine's whole index; a router injects a scatter-gather searcher
+        (`searcher=` ctor arg) that fans the block out to every replica's
+        corpus slice and merges — by contract bit-identical to the full
+        scan, which the differential harness in tests/test_router.py pins.
+        Must stay a pure function of (perturbed, kprime): `_bisect_lanes`
+        re-runs arbitrary row subsets through it for fault attribution."""
+        if self._searcher is not None:
+            return np.asarray(self._searcher(perturbed, kprime))
+        return np.asarray(batching.topk_batch(
+            self.cloud.index, perturbed, kprime,
+            use_pallas=self.config.use_pallas).indices)
+
     # -- sequential comparison path ----------------------------------------
 
     def _run_one(self, req: ServeRequest) -> ServeResult:
@@ -752,9 +790,8 @@ class ServeEngine:
         with tr.span("topk", batch_id=bid, lanes=len(alive),
                      kprime=kprime):
             cand, bad = _bisect_lanes(
-                lambda ls: list(np.asarray(batching.topk_batch(
-                    self.cloud.index, np.stack([pert[lane] for lane in ls]),
-                    kprime, use_pallas=use_pallas).indices)),
+                lambda ls: list(self._search_topk(
+                    np.stack([pert[lane] for lane in ls]), kprime)),
                 alive, tracer=tr, batch_id=bid, stage="topk")
         drop(bad)
         if not alive:

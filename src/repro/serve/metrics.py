@@ -32,7 +32,9 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import math
+import threading
 from typing import Deque, Dict, Optional
 
 import numpy as np
@@ -40,6 +42,18 @@ import numpy as np
 from repro.core.protocol import ProtocolTranscript
 
 DEFAULT_WINDOW = 8192
+
+
+def _locked(method):
+    """Serialize a ServeMetrics method on the instance lock: replica
+    engines record from their own step workers while the router thread
+    reads summaries, and compound updates (tenant + aggregate + reason
+    maps) must stay atomic across threads."""
+    @functools.wraps(method)
+    def wrapper(self, *args, **kwargs):
+        with self._lock:
+            return method(self, *args, **kwargs)
+    return wrapper
 
 
 @dataclasses.dataclass
@@ -138,6 +152,7 @@ class ServeMetrics:
 
     def __init__(self, window: int = DEFAULT_WINDOW, *,
                  tracer=None) -> None:
+        self._lock = threading.Lock()
         self.window = window
         # optional repro.obs.Tracer: when attached (the engine does this
         # under EngineConfig(trace=True)), summary() carries the stage-
@@ -172,6 +187,7 @@ class ServeMetrics:
             stats = self.tenants[tenant] = TenantStats(window=self.window)
         return stats
 
+    @_locked
     def record_batch(self, size: int, completed: Optional[int] = None) -> None:
         """One batched dispatch went out: ``size`` lanes in the slot, of
         which ``completed`` (default: all) actually finished there.
@@ -182,17 +198,21 @@ class ServeMetrics:
         self.dispatch_lanes += size if completed is None else completed
         self.dispatch_sizes.append(size)
 
+    @_locked
     def record_dispatch_failure(self, size: int) -> None:
         self.failed_dispatches += 1
         self.failed_requests += size
 
+    @_locked
     def record_quarantined(self, n: int = 1) -> None:
         """n lanes were attributed a fault and pulled out of their batch."""
         self.quarantined_lanes += n
 
+    @_locked
     def record_retries(self, n: int = 1) -> None:
         self.retried_requests += n
 
+    @_locked
     def record_quarantined_retry_ok(self, tenant: str) -> None:
         """A quarantined lane healed on its solo retry (counted per tenant
         so error accounting distinguishes healed from terminal)."""
@@ -200,31 +220,37 @@ class ServeMetrics:
         for stats in (self._tenant(tenant), self.aggregate):
             stats.quarantined_retry_ok += 1
 
+    @_locked
     def record_encryptions(self, n: int = 1) -> None:
         self.lane_encryptions += n
 
+    @_locked
     def record_healthy_reencryptions(self, n: int) -> None:
         """Encryptions beyond the first for a never-quarantined lane —
         wasted crypto the lane-isolation contract promises never happens."""
         self.healthy_reencryptions += n
 
+    @_locked
     def record_refill(self, size: int) -> None:
         """One dispatch went out on the refill trigger (group credit)."""
         self.refill_dispatches += 1
         self.refilled_requests += size
 
+    @_locked
     def record_error(self, tenant: str) -> None:
         """One request came back as an error result (retries exhausted)."""
         self.error_results += 1
         for stats in (self._tenant(tenant), self.aggregate):
             stats.errors += 1
 
+    @_locked
     def record_admitted(self, tenant: str) -> None:
         """One submit passed the admission tier and was enqueued."""
         self.admitted_requests += 1
         for stats in (self._tenant(tenant), self.aggregate):
             stats.admitted += 1
 
+    @_locked
     def record_shed(self, tenant: str, reason: str) -> None:
         """One request was shed (queued then displaced/expired) or
         rejected at submit (rate limit, full queue) — counted drops,
@@ -235,6 +261,7 @@ class ServeMetrics:
         for stats in (self._tenant(tenant), self.aggregate):
             stats.shed += 1
 
+    @_locked
     def record(self, tenant: str, *, latency_s: float, batch_size: int,
                transcript: ProtocolTranscript,
                deadline_s: Optional[float] = None) -> None:
@@ -262,6 +289,7 @@ class ServeMetrics:
             else:
                 stats.direct_count += 1
 
+    @_locked
     def occupancy(self, max_batch: int) -> Optional[float]:
         """Mean *completed-lane* fill of batched dispatches relative to
         ``max_batch`` (1.0 = every batch went out full and every lane
@@ -271,6 +299,7 @@ class ServeMetrics:
             return None
         return self.dispatch_lanes / (self.num_batches * max_batch)
 
+    @_locked
     def summary(self) -> dict:
         out = {"aggregate": self.aggregate.summary(),
                "num_batches": self.num_batches,

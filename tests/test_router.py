@@ -1,0 +1,438 @@
+"""repro.serve.router: differential bit-identity vs a single engine,
+scatter-gather merge determinism, replica fault injection with zero lost
+requests, and typed admission-error propagation through the router."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.crypto import rlwe
+from repro.data import synth
+from repro.kernels.scoretopk import ops as sops
+from repro.retrieval.index import FlatIndex, plan_row_slices
+from repro.retrieval.topk import slice_topk
+from repro.serve import (
+    AdmissionConfig,
+    EngineConfig,
+    RateLimited,
+    ReplicaRouter,
+    ReplicaUnavailable,
+    RouterConfig,
+    ServeEngine,
+    SessionManager,
+)
+from repro.serve.router import merge_topk
+
+N_DOCS, DIM, K = 1500, 64, 4
+N_REQ = 8
+TENANTS = ("alice", "bob", "carol", "dave")
+PARAMS = rlwe.RlweParams(n_poly=1024, chunk=512)
+SEED = 0        # every stochastic choice in this file derives from it
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    """Corpus with planted duplicate-score ties: three exact row copies
+    spread across every replica boundary used in the sweep (750 for N=2;
+    375/1125 for N=4), so a query near the original produces identical
+    scores on *different* replicas and the merge tie-break is exercised
+    for real, not just in theory."""
+    rng = np.random.default_rng(SEED)
+    emb = synth.uniform_corpus(rng, N_DOCS, DIM)
+    emb[800] = emb[100]       # duplicates straddle the 750 boundary (N=2)
+    emb[1200] = emb[100]      # ... and the 1125 boundary (N=4)
+    emb[400] = emb[100]       # ... and the 375 boundary (N=4)
+    docs = [f"passage-{i}".encode() for i in range(N_DOCS)]
+    index = FlatIndex.build(emb, documents=docs, normalize=False)
+    queries = synth.queries_near_corpus(rng, emb, N_REQ)
+    # aim one query straight at the duplicated row so its ties surface in
+    # the top-k' candidates (and in the final top-K)
+    queries[3] = emb[100]
+    return index, emb, queries
+
+
+def _sessions():
+    return SessionManager(rlwe_params=PARAMS, deterministic_seeds=True)
+
+
+def _open_all(srv, *, backend="rlwe", kprime=None, **kw):
+    plan_kw = {"plan_kwargs": {"kprime": kprime}} if kprime else \
+        {"radius": 0.05}
+    if backend == "paillier":
+        kw.setdefault("paillier_bits", 256)
+    for t in TENANTS:
+        srv.open_session(t, n=DIM, N=N_DOCS, k=K, backend=backend,
+                         **plan_kw, **kw)
+
+
+def _submit_all(srv, queries):
+    return [srv.submit(TENANTS[i % len(TENANTS)], q,
+                       key=jax.random.PRNGKey(i))
+            for i, q in enumerate(queries)]
+
+
+def _by_rid(results):
+    return {r.request_id: r for r in results}
+
+
+def _single_run(index, queries, *, backend="rlwe", kprime=None,
+                max_batch=8):
+    eng = ServeEngine(
+        index, config=EngineConfig(max_batch=max_batch, max_wait_s=30.0),
+        sessions=_sessions())
+    _open_all(eng, backend=backend, kprime=kprime)
+    _submit_all(eng, queries)
+    out = eng.drain()
+    eng.close()
+    return out
+
+
+def _router(index, *, num_replicas, max_batch=8, backend="rlwe",
+            kprime=None, engine_kw=None, router_kw=None):
+    rt = ReplicaRouter(
+        index,
+        config=RouterConfig(
+            num_replicas=num_replicas,
+            engine=EngineConfig(max_batch=max_batch, max_wait_s=30.0,
+                                **(engine_kw or {})),
+            **(router_kw or {})),
+        sessions=_sessions())
+    _open_all(rt, backend=backend, kprime=kprime)
+    return rt
+
+
+def _assert_results_identical(want, got):
+    """Bit-identity down to the wire accounting, request id by request id."""
+    assert sorted(r.request_id for r in got) == \
+        sorted(r.request_id for r in want)
+    wd = _by_rid(want)
+    for rb in got:
+        rs = wd[rb.request_id]
+        assert rs.tenant == rb.tenant
+        assert rs.ids.tolist() == rb.ids.tolist()
+        assert rs.docs == rb.docs
+        assert rs.transcript.total_bytes == rb.transcript.total_bytes
+        assert rs.transcript.request_bytes == rb.transcript.request_bytes
+        assert rs.transcript.reply_bytes == rb.transcript.reply_bytes
+        assert rs.error == rb.error
+
+
+# -- satellite 1: differential bit-identity sweep ---------------------------
+
+
+@pytest.mark.parametrize("num_replicas,max_batch",
+                         [(1, 8), (2, 1), (2, 3), (2, 8), (4, 3), (4, 8)])
+def test_router_bit_identical_to_single_engine(corpus, num_replicas,
+                                               max_batch):
+    """ReplicaRouter(N) == ServeEngine over the whole corpus: same request
+    ids (shared counter), same docs/ids/wire bytes, for every replica
+    count and batch size — including the planted duplicate-score ties."""
+    index, _, queries = corpus
+    want = _single_run(index, queries, max_batch=max_batch)
+    rt = _router(index, num_replicas=num_replicas, max_batch=max_batch)
+    rids = _submit_all(rt, queries)
+    got = rt.drain()
+    rt.close()
+    assert rids == [r.request_id for r in want]   # ids are submit order
+    assert len(got) == N_REQ and all(r.ok for r in got)
+    _assert_results_identical(want, got)
+    m = rt.metrics.summary()
+    assert sum(m["submitted"]) == N_REQ
+    assert sum(m["completed"]) == N_REQ
+    assert m["quarantines"] == [] and m["late_dropped"] == 0
+    assert m["scatter_calls"] > 0
+    assert m["fallback_scans"] == 0
+
+
+def test_router_bit_identical_paillier_backend(corpus):
+    index, _, queries = corpus
+    want = _single_run(index, queries[:4], backend="paillier", max_batch=4)
+    rt = _router(index, num_replicas=2, max_batch=4, backend="paillier")
+    _submit_all(rt, queries[:4])
+    got = rt.drain()
+    rt.close()
+    assert len(got) == 4 and all(r.ok for r in got)
+    _assert_results_identical(want, got)
+
+
+def test_kprime_straddles_replica_boundaries(corpus):
+    """Forced k' values around the slice boundaries: candidates must come
+    from multiple replicas and still merge to the single-engine list.
+    k'=751 > one replica's 750 docs is the k'>slice regression case at
+    full corpus scale (search only — K=4 keeps the re-rank affordable)."""
+    index, _, queries = corpus
+    slices = plan_row_slices(N_DOCS, 2)
+    assert slices == [(0, 750), (750, 1500)]
+    full = sops.topk_scores(jnp.asarray(queries), index.embeddings, 751)
+    parts = [slice_topk(index.slice_view(s, e), jnp.asarray(queries), 751)
+             for s, e in slices]
+    merged = merge_topk([p.values for p in parts],
+                        [p.indices for p in parts], 751)
+    assert merged.tolist() == np.asarray(full.indices).tolist()
+    # and values are bitwise equal too (the canary for the slice-scan
+    # accumulation matching the full-corpus scan exactly)
+    gathered = np.concatenate([np.asarray(p.values) for p in parts], axis=1)
+    order = np.concatenate([np.asarray(p.indices) for p in parts], axis=1)
+    vals = np.take_along_axis(
+        gathered, np.argsort(order, axis=1, kind="stable"), axis=1)
+    assert np.array_equal(
+        np.take_along_axis(vals, merged, axis=1).view(np.uint32),
+        np.asarray(full.values).view(np.uint32))
+
+
+def test_kprime_larger_than_one_replica_slice():
+    """k' > docs-in-one-replica: a 40-doc corpus over 4 replicas (10 docs
+    each) with k'=25 forces every replica to contribute its entire slice;
+    results must still match the single engine bit-for-bit."""
+    rng = np.random.default_rng(SEED + 1)
+    emb = synth.uniform_corpus(rng, 40, DIM)
+    index = FlatIndex.build(emb, documents=[f"d{i}".encode()
+                                            for i in range(40)],
+                            normalize=False)
+    queries = synth.queries_near_corpus(rng, emb, 4)
+
+    def run(make):
+        srv = make()
+        for t in TENANTS:
+            srv.open_session(t, n=DIM, N=40, k=K,
+                             plan_kwargs={"kprime": 25})
+        _submit_all(srv, queries)
+        out = srv.drain()
+        srv.close()
+        return out
+
+    want = run(lambda: ServeEngine(
+        index, config=EngineConfig(max_batch=4, max_wait_s=30.0),
+        sessions=_sessions()))
+    got = run(lambda: ReplicaRouter(
+        index,
+        config=RouterConfig(num_replicas=4,
+                            engine=EngineConfig(max_batch=4,
+                                                max_wait_s=30.0)),
+        sessions=_sessions()))
+    assert all(r.ok for r in got)
+    _assert_results_identical(want, got)
+
+
+# -- satellite 3: merge-order determinism -----------------------------------
+
+
+def test_merge_topk_fuzz_matches_full_scan():
+    """Random corpora with planted duplicate scores, random slice cuts:
+    per-slice top-k + merge == full-corpus `topk_scores`, ids and bits."""
+    rng = np.random.default_rng(SEED)
+    for trial in range(8):
+        n = int(rng.integers(50, 400))
+        emb = rng.normal(size=(n, 16)).astype(np.float32)
+        # plant duplicates (identical rows -> identical scores everywhere)
+        for _ in range(int(rng.integers(1, 6))):
+            i, j = rng.integers(0, n, size=2)
+            emb[j] = emb[i]
+        q = rng.normal(size=(3, 16)).astype(np.float32)
+        k = int(rng.integers(1, n + 1))
+        n_slices = int(rng.integers(1, min(6, n) + 1))
+        cuts = plan_row_slices(n, n_slices)
+        index = FlatIndex.build(emb, normalize=False)
+        parts = [slice_topk(index.slice_view(s, e), jnp.asarray(q), k)
+                 for s, e in cuts]
+        merged = merge_topk([p.values for p in parts],
+                            [p.indices for p in parts], k)
+        full = sops.topk_scores(jnp.asarray(q), index.embeddings, k)
+        assert merged.tolist() == np.asarray(full.indices).tolist(), \
+            f"trial={trial} n={n} k={k} cuts={cuts}"
+
+
+def test_merge_is_arrival_order_independent(corpus):
+    """Fuzz actual thread completion order with seeded random stalls in
+    the scan hook: the merged candidate block must be identical whatever
+    order the per-replica scans finish in."""
+    index, _, queries = corpus
+    rt = _router(index, num_replicas=4)
+    try:
+        pert = np.asarray(queries[:5], np.float32)
+        want = rt._scatter_topk(pert, 32, home=0)
+        for trial in range(5):
+            delays = np.random.default_rng(SEED + trial).uniform(
+                0.0, 0.02, size=4)
+
+            rt._scan_hook = lambda r, d=delays: time.sleep(d[r])
+            got = rt._scatter_topk(pert, 32, home=trial % 4)
+            assert np.array_equal(want, got), f"trial={trial}"
+    finally:
+        rt._scan_hook = None
+        rt.close()
+    assert rt.metrics.summary()["quarantines"] == []
+
+
+# -- satellite 2: replica fault injection -----------------------------------
+
+
+def test_scan_fault_quarantines_and_falls_back(corpus):
+    """Kill one replica's scan worker mid-dispatch: the router quarantines
+    it, serves its slice from the caller-thread fallback, and every
+    result stays bit-identical to the single engine.  The dead replica's
+    own in-flight requests resolve as typed errors; zero requests lost."""
+    index, _, queries = corpus
+    want = _by_rid(_single_run(index, queries))
+    rt = _router(index, num_replicas=2)
+    victim = 1
+
+    def hook(replica_id):
+        if replica_id == victim:
+            raise RuntimeError("injected scan fault")
+
+    rids = _submit_all(rt, queries)
+    victim_rids = {rid for rid, t in zip(rids, TENANTS * 2)
+                   if rt.home_replica(t) == victim}
+    healthy_rids = set(rids) - victim_rids
+    assert victim_rids and healthy_rids   # both replicas own traffic
+    rt._scan_hook = hook
+    got = _by_rid(rt.drain())
+    rt.close()
+
+    # zero lost: every accepted request resolved exactly once
+    assert set(got) == set(rids)
+    for rid in healthy_rids:
+        rs, rb = want[rid], got[rid]
+        assert rb.ok
+        assert rs.ids.tolist() == rb.ids.tolist()
+        assert rs.docs == rb.docs
+        assert rs.transcript.total_bytes == rb.transcript.total_bytes
+    for rid in victim_rids:
+        rb = got[rid]
+        assert not rb.ok and rb.quarantined
+        assert "replica_quarantined" in rb.error
+        assert rb.docs == [] and rb.ids.size == 0
+    m = rt.metrics.summary()
+    assert [q[0] for q in m["quarantines"]] == [victim]
+    assert m["quarantines"][0][1].startswith("scan:")
+    assert m["quarantine_resolved"] == len(victim_rids)
+    assert m["fallback_scans"] >= 1
+
+
+def test_step_fault_resolves_inflight_as_typed_errors(corpus):
+    """A replica whose engine step raises outright is quarantined at the
+    router tier; its queued requests come back as typed error results
+    (never silently dropped) and the other replica is untouched."""
+    index, _, queries = corpus
+    rt = _router(index, num_replicas=2)
+    victim = 0
+    rids = _submit_all(rt, queries)
+    victim_rids = {rid for rid, t in zip(rids, TENANTS * 2)
+                   if rt.home_replica(t) == victim}
+
+    def boom(*a, **kw):
+        raise RuntimeError("injected step fault")
+
+    rt.replicas[victim].engine.step = boom
+    rt.replicas[victim].engine.drain = boom
+    got = _by_rid(rt.drain())
+    assert set(got) == set(rids)
+    for rid in rids:
+        if rid in victim_rids:
+            assert not got[rid].ok and got[rid].quarantined
+            assert "replica_quarantined(drain:RuntimeError)" in \
+                got[rid].error
+        else:
+            assert got[rid].ok
+    m = rt.metrics.summary()
+    assert m["quarantines"] == [[victim, "drain:RuntimeError"]]
+    assert m["quarantine_resolved"] == len(victim_rids)
+    # quarantined replica is out of the submit path from now on
+    probe = next(t for t in TENANTS if rt.home_replica(t) == victim)
+    rid = rt.submit(probe, queries[0], key=jax.random.PRNGKey(99))
+    out = _by_rid(rt.drain())
+    assert out[rid].ok                    # rehomed to the healthy replica
+    assert rt.metrics.summary()["rehomed"] >= 1
+    rt.close()
+
+
+def test_stalled_replica_times_out_and_quarantines(corpus):
+    """A replica that stalls (never returns) past step_timeout_s is
+    quarantined with its in-flight requests resolved — the router never
+    hangs on a dead peer.  Only the victim holds traffic here, so the
+    timeout bounds the stall, not the healthy crypto."""
+    index, _, queries = corpus
+    rt = _router(index, num_replicas=2,
+                 router_kw={"step_timeout_s": 2.0})
+    victim_tenant = TENANTS[0]
+    victim = rt.home_replica(victim_tenant)
+    rids = [rt.submit(victim_tenant, queries[i],
+                      key=jax.random.PRNGKey(i)) for i in range(3)]
+    stall = threading.Event()
+
+    def hang(*a, **kw):
+        stall.wait(timeout=30.0)
+        return []
+
+    rt.replicas[victim].engine.drain = hang
+    got = _by_rid(rt.drain())
+    stall.set()
+    assert set(got) == set(rids)
+    for rid in rids:
+        assert not got[rid].ok
+        assert "replica_quarantined(drain_stalled)" in got[rid].error
+    m = rt.metrics.summary()
+    assert m["quarantines"] == [[victim, "drain_stalled"]]
+    rt.close()
+
+
+def test_all_replicas_down_is_typed(corpus):
+    index, _, queries = corpus
+    rt = _router(index, num_replicas=2)
+    for r in range(2):
+        rt._quarantine(r, "test")
+    with pytest.raises(ReplicaUnavailable):
+        rt.submit(TENANTS[0], queries[0])
+    rt.close()
+
+
+# -- satellite 4: typed admission errors through the router -----------------
+
+
+def test_rate_limit_propagates_and_consumes_no_request_id(corpus):
+    """The home replica's RateLimited (with retry_after_s) surfaces
+    through router.submit unchanged, and a rejection never consumes a
+    request id on any replica: the shared id counter only advances on
+    accepted submits, so ids stay gapless across the fleet."""
+    index, _, queries = corpus
+    rt = _router(index, num_replicas=2,
+                 engine_kw={"admission": AdmissionConfig(
+                     tenant_rate=0.001, tenant_burst=2.0)})
+    t = TENANTS[0]
+    other = next(x for x in TENANTS
+                 if rt.home_replica(x) != rt.home_replica(t))
+    r0 = rt.submit(t, queries[0], key=jax.random.PRNGKey(0))
+    r1 = rt.submit(t, queries[1], key=jax.random.PRNGKey(1))
+    with pytest.raises(RateLimited) as exc:
+        rt.submit(t, queries[2], key=jax.random.PRNGKey(2))
+    assert exc.value.retry_after_s > 0
+    # the very next accepted submit — on a *different* replica — takes
+    # the very next id: the rejection consumed nothing anywhere
+    r2 = rt.submit(other, queries[3], key=jax.random.PRNGKey(3))
+    assert [r0, r1, r2] == [0, 1, 2]
+    m = rt.metrics.summary()
+    assert sum(m["rejected"]) == 1 and sum(m["submitted"]) == 3
+    out = rt.drain()
+    assert sorted(r.request_id for r in out) == [0, 1, 2]
+    assert all(r.ok for r in out)
+    rt.close()
+
+
+def test_unknown_tenant_and_bad_embedding_are_typed(corpus):
+    index, _, queries = corpus
+    rt = _router(index, num_replicas=2)
+    with pytest.raises(KeyError, match="nobody"):
+        rt.submit("nobody", queries[0])
+    with pytest.raises(ValueError, match="1-D"):
+        rt.submit(TENANTS[0], queries[0][None, :])
+    # neither consumed an id
+    rid = rt.submit(TENANTS[0], queries[0], key=jax.random.PRNGKey(0))
+    assert rid == 0
+    rt.drain()
+    rt.close()
