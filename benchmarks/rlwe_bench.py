@@ -22,7 +22,10 @@ peak cache footprint, and on the single default config staying within 1.2x
 (skewed ids) / 1.3x (uniform ids) of dense at batch 8.  A stage-breakdown
 section (repro.obs tracing over a served stream) records where request
 time goes per pipeline stage; its stage-duration coverage of the dispatch
-wall is gated too.
+wall is gated too.  A ``paillier_batch`` section times the vectorized
+RNS-limb Paillier batch path against the per-lane object path at batch
+1 / 8; the batch-8 speedup (>= 3x), bit-exact decryption, and zero
+silent object fallbacks are gated.
 """
 
 from __future__ import annotations
@@ -201,6 +204,73 @@ def _stage_breakdown_section(params, rng) -> dict:
         "trace_dropped": tracer.dropped,
         "stages": stages,
     }
+
+
+def _paillier_batch_section(rng) -> dict:
+    """Vectorized-Paillier section: the RNS limb-array batch path
+    (`repro.crypto.paillier_vec`, fixed-width residue channels +
+    Montgomery GEMM kernels) vs the per-lane bignum object path
+    (`repro.crypto.paillier`) on the encrypted re-rank, at batch 1 and 8.
+    The batch-8 speedup is CI-gated at >= 3x by
+    ``scripts/check_bench_regression.py`` (missing section = FAIL), along
+    with bit-exact decrypted scores and zero silent object fallbacks at
+    the benchmark key size."""
+    import time
+
+    from repro.crypto import paillier as pai
+    from repro.crypto import paillier_vec as pvec
+
+    key_bits, dim, kprime, big = 256, 384, 64, 8
+    keys = [pai.keygen(key_bits, rng=np.random.default_rng(1000 + i))
+            for i in range(big)]
+    queries = _unit(rng, big, dim).astype(np.float64)
+    cands = [_unit(rng, kprime, dim).astype(np.float64) for _ in range(big)]
+    enc = [pai.encrypt_vector(k.pub, q, rng=np.random.default_rng(2000 + i))
+           for i, (k, q) in enumerate(zip(keys, queries))]
+
+    pvec.reset_counters()
+    t0 = time.perf_counter()          # first call pays the jit compile
+    warm = pvec.encrypted_scores_batch([k.pub for k in keys], enc, cands)
+    compile_ms = (time.perf_counter() - t0) * 1e3
+
+    # bit-exactness: the vectorized ciphertexts must decrypt to exactly
+    # the object path's scores (both are exact integer arithmetic)
+    obj_cts = [pai.encrypted_scores(k.pub, e, c)
+               for k, e, c in zip(keys, enc, cands)]
+    bit_exact = all(
+        np.array_equal(pai.decrypt_scores(k, v), pai.decrypt_scores(k, o))
+        for k, v, o in zip(keys, warm, obj_cts))
+    assert bit_exact, "vectorized scores must decrypt bit-exact vs object"
+
+    section = {"key_bits": key_bits, "dim": dim, "kprime": kprime,
+               "compile_ms": compile_ms, "bit_exact": bit_exact}
+    for bsz in (1, big):
+        ks, es, cs = keys[:bsz], enc[:bsz], cands[:bsz]
+
+        def object_path():
+            for k, e, c in zip(ks, es, cs):
+                pai.encrypted_scores(k.pub, e, c)
+
+        def vectorized():
+            pvec.encrypted_scores_batch([k.pub for k in ks], es, cs)
+
+        object_us = timeit(object_path, repeat=2, warmup=0)
+        vec_us = timeit(vectorized, repeat=3, warmup=1)
+        speedup = object_us / vec_us
+        emit(f"paillier/score_object_b{bsz}", object_us,
+             f"kb={key_bits}_k'={kprime}")
+        emit(f"paillier/score_vectorized_b{bsz}", vec_us,
+             f"{speedup:.2f}x_vs_object")
+        section[f"batch{bsz}"] = {
+            "object_ms": object_us / 1e3,
+            "vectorized_ms": vec_us / 1e3,
+            "speedup_vectorized_vs_object": speedup,
+        }
+    section["object_fallback_lanes"] = pvec.counters["object"]
+    section["vectorized_lanes"] = pvec.counters["vectorized"]
+    emit("paillier/vectorized_fallbacks", section["object_fallback_lanes"],
+         f"{section['vectorized_lanes']}vectorized_lanes")
+    return section
 
 
 def run() -> None:
@@ -442,6 +512,7 @@ def run() -> None:
 
     results["serve_faults"] = _serve_fault_section(params, rng)
     results["stage_breakdown"] = _stage_breakdown_section(params, rng)
+    results["paillier_batch"] = _paillier_batch_section(rng)
 
     payload = {
         "bench": "rlwe_rerank",

@@ -24,7 +24,12 @@ and fails if
   * (stage_breakdown section) the repro.obs stage timeline stopped
     accounting for the dispatch it claims to explain: a core pipeline
     stage went missing from a traced serve stream, or the summed stage
-    durations fall outside [0.5, 1.05] of the dispatch wall.
+    durations fall outside [0.5, 1.05] of the dispatch wall, or
+  * (paillier_batch section — missing section = FAIL) the vectorized
+    RNS-limb Paillier batch path is less than ``min_paillier_speedup``
+    (default 3.0x) faster than the per-lane object path at batch 8, its
+    scores were not bit-exact against the object path, or lanes silently
+    fell back to objects at the benchmark key size.
 
 With ``--serve-json BENCH_serve.json`` (written by
 ``python -m benchmarks.serve_bench``) it additionally gates the serving
@@ -43,7 +48,8 @@ The serve JSON must also carry the scale-out ``replica_sweep`` section
 re-checked, merge overhead bounded, 2-replica QPS >= 1.3x the 1-replica
 run on hosts with >= 2 CPUs (on a 1-CPU host thread parallelism is
 physically unavailable, so the gate bounds router overhead at >= 0.8x
-instead), and the replica-failure fault point losing zero requests
+instead), 4-replica QPS >= 2.0x on hosts with >= 4 CPUs, and the
+replica-failure fault point losing zero requests
 (offered == returned; ledger submitted == completed +
 quarantine-resolved).
 
@@ -237,6 +243,61 @@ def _check_stage_breakdown(section: dict, min_coverage: float = 0.5,
     return failures
 
 
+def _check_paillier_batch(section: dict, min_speedup_b8: float = 3.0) -> int:
+    """Vectorized-Paillier gate: the RNS limb-array batch path must beat
+    the per-lane object path by ``min_speedup_b8``x at batch 8, the
+    recorded scores must have decrypted bit-exact against the object
+    path, and no lane may have silently fallen back to objects at the
+    benchmark's key size.  A JSON without the section fails — the gate
+    must not silently pass after a results-key rename."""
+    if section is None:
+        print("FAIL paillier_batch: results lack the vectorized-Paillier "
+              "section — the batch-crypto gate did not run",
+              file=sys.stderr)
+        return 1
+    failures = 0
+    speedup = section.get("batch8", {}).get("speedup_vectorized_vs_object")
+    if speedup is None or speedup < min_speedup_b8:
+        print(f"FAIL paillier_batch: batch-8 vectorized scoring "
+              f"{speedup}x the object path < {min_speedup_b8}x "
+              f"(object {section.get('batch8', {}).get('object_ms')}ms, "
+              f"vectorized "
+              f"{section.get('batch8', {}).get('vectorized_ms')}ms)",
+              file=sys.stderr)
+        failures += 1
+    else:
+        b8 = section["batch8"]
+        print(f"ok   paillier_batch: batch-8 vectorized {speedup:.2f}x "
+              f"the object path ({b8.get('vectorized_ms'):.0f}ms vs "
+              f"{b8.get('object_ms'):.0f}ms at kb="
+              f"{section.get('key_bits')})")
+    b1 = section.get("batch1", {})
+    s1 = b1.get("speedup_vectorized_vs_object")
+    if s1 is None:
+        print("FAIL paillier_batch: no batch-1 row", file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   paillier_batch: batch-1 vectorized {s1:.2f}x the "
+              f"object path (recorded, ungated)")
+    if not section.get("bit_exact"):
+        print("FAIL paillier_batch: vectorized scores did not decrypt "
+              "bit-exact against the object path", file=sys.stderr)
+        failures += 1
+    else:
+        print("ok   paillier_batch: decrypted scores bit-exact vs the "
+              "object path")
+    fell_back = section.get("object_fallback_lanes", 0)
+    if fell_back:
+        print(f"FAIL paillier_batch: {fell_back} lane(s) silently fell "
+              f"back to the object path at the benchmark key size",
+              file=sys.stderr)
+        failures += 1
+    else:
+        print("ok   paillier_batch: 0 object-path fallbacks at the "
+              "benchmark key size")
+    return failures
+
+
 def _check_overload(results: dict, min_goodput_ratio: float = 0.8) -> int:
     """Overload gate on the closed-loop offered-load sweep: admission
     control must keep goodput flat and interactive p99 bounded past the
@@ -325,7 +386,8 @@ def _check_overload(results: dict, min_goodput_ratio: float = 0.8) -> int:
 
 def _check_replica_sweep(results: dict, min_scaling: float = 1.3,
                          max_overhead_ratio: float = 0.8,
-                         max_merge_frac: float = 0.25) -> int:
+                         max_merge_frac: float = 0.25,
+                         min_scaling4: float = 2.0) -> int:
     """Scale-out gate on the replica sweep: the section must exist (a
     results-key rename must not silently drop the scale-out contract),
     the sweep must have re-checked per-query parity against the
@@ -337,7 +399,10 @@ def _check_replica_sweep(results: dict, min_scaling: float = 1.3,
     run must reach ``min_scaling``x the 1-replica QPS.  A 1-CPU host
     cannot parallelize threads at all — there the gate instead bounds
     the router's overhead (scatter + merge + ledger must not cost more
-    than ``1 - max_overhead_ratio`` of single-engine throughput)."""
+    than ``1 - max_overhead_ratio`` of single-engine throughput).  On a
+    host with >= 4 CPUs the 4-replica point is armed too: it must reach
+    ``min_scaling4``x the 1-replica QPS (four drains genuinely in
+    flight, not just two)."""
     section = results.get("replica_sweep")
     if section is None:
         print("FAIL replica_sweep: serve results lack the replica-sweep "
@@ -388,6 +453,20 @@ def _check_replica_sweep(results: dict, min_scaling: float = 1.3,
             print(f"ok   replica_sweep: 2 replicas {q2 / q1:.2f}x the "
                   f"1-replica qps (>= {max_overhead_ratio}x overhead "
                   f"bound)")
+    q4 = points["4"].get("qps")
+    if cpus is not None and cpus >= 4:
+        if q1 is None or q4 is None or q4 < min_scaling4 * q1:
+            print(f"FAIL replica_sweep: 4-replica qps {q4} < "
+                  f"{min_scaling4}x the 1-replica {q1} on a "
+                  f"{cpus}-CPU host — scale-out stops paying past 2 "
+                  f"replicas", file=sys.stderr)
+            failures += 1
+        else:
+            print(f"ok   replica_sweep: 4 replicas {q4 / q1:.2f}x the "
+                  f"1-replica qps (>= {min_scaling4}x, {cpus} CPUs)")
+    else:
+        print(f"note replica_sweep: host has {cpus} CPU(s) — the "
+              f"{min_scaling4}x 4-replica gate arms at >= 4 CPUs")
     merge_ok = True
     for label, point in sorted(points.items()):
         frac = point.get("merge_frac")
@@ -490,6 +569,10 @@ def main() -> int:
     ap.add_argument("--min-goodput-ratio", type=float, default=0.8,
                     help="overload gate: goodput at 2x saturation must be "
                          "at least this fraction of goodput at the knee")
+    ap.add_argument("--min-paillier-speedup", type=float, default=3.0,
+                    help="paillier_batch gate: vectorized RNS scoring at "
+                         "batch 8 must beat the per-lane object path by "
+                         "this factor")
     args = ap.parse_args()
     try:
         with open(args.path) as f:
@@ -514,6 +597,8 @@ def main() -> int:
     failures += _check_serve_faults(results.get("serve_faults"),
                                     args.min_occupancy_ratio)
     failures += _check_stage_breakdown(results.get("stage_breakdown"))
+    failures += _check_paillier_batch(results.get("paillier_batch"),
+                                      args.min_paillier_speedup)
     if args.serve_json is not None:
         failures += _check_serve(args.serve_json, args.min_serve_speedup,
                                  args.min_serve_occupancy,

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.core import distancedp, planner
 from repro.core.planner import ProtocolPlan
+from repro.crypto import backend as backends
 from repro.crypto import ot as ot_mod
 from repro.crypto import paillier as pai
 from repro.crypto import rlwe
@@ -52,11 +53,8 @@ class Request:
     def nbytes(self, params: Optional[rlwe.RlweParams] = None,
                key_bits: int = 2048) -> int:
         base = self.perturbed.size * 4 + 4
-        if self.backend == "rlwe":
-            assert params is not None
-            chunks = self.enc_query.c0.shape[0]
-            return base + chunks * params.ciphertext_bytes()
-        return base + len(self.enc_query) * 2 * key_bits // 8
+        return base + backends.get_backend(self.backend).request_nbytes(
+            self.enc_query, params=params, key_bits=key_bits)
 
 
 @dataclasses.dataclass
@@ -67,11 +65,8 @@ class Reply:
     def nbytes(self, params: Optional[rlwe.RlweParams] = None,
                key_bits: int = 2048) -> int:
         base = self.candidate_ids.size * 4
-        if isinstance(self.enc_scores, rlwe.ScoreCiphertexts):
-            assert params is not None
-            num_ct = self.enc_scores.c0.shape[0]
-            return base + num_ct * params.ciphertext_bytes()
-        return base + len(self.enc_scores) * 2 * key_bits // 8
+        return base + backends.scores_backend(self.enc_scores).reply_nbytes(
+            self.enc_scores, params=params, key_bits=key_bits)
 
 
 @dataclasses.dataclass
@@ -130,26 +125,22 @@ class RemoteRagCloud:
         return self.index.candidate_cache(self.rlwe_params,
                                           self.cache_config)
 
-    def handle_request(self, req: Request) -> Reply:
-        q = jnp.asarray(req.perturbed, jnp.float32)[None, :]
-        res = distributed_topk(self.index, q, req.kprime,
-                               use_pallas=self.use_pallas)
-        cand_ids = np.asarray(res.indices)[0]
-        if req.backend == "rlwe":
-            cache = self.candidate_cache
-            if cache is not None:
-                enc = rlwe.encrypted_scores_cached(
-                    self.rlwe_params, req.enc_query, cache, cand_ids,
-                    use_pallas=self.use_pallas)
-            else:
-                cand_rows = np.asarray(self.index.rows(cand_ids))
-                packed = rlwe.pack_candidates(self.rlwe_params, cand_rows)
-                enc = rlwe.encrypted_scores(self.rlwe_params, req.enc_query,
-                                            packed, use_pallas=self.use_pallas)
+    def handle_request(self, req: Request, *, topk_fn=None) -> Reply:
+        """Modules 1 + 2a, cloud half.  ``topk_fn(perturbed_batch, kprime)``
+        optionally replaces the whole-index top-k' scan — the serve layer
+        passes its searcher here so a solo (quarantine-retry) request goes
+        through the *same* per-slice scan + merge as the scatter-gather
+        path, keeping retried results bit-identical by construction."""
+        if topk_fn is None:
+            q = jnp.asarray(req.perturbed, jnp.float32)[None, :]
+            res = distributed_topk(self.index, q, req.kprime,
+                                   use_pallas=self.use_pallas)
+            cand_ids = np.asarray(res.indices)[0]
         else:
-            cand_rows = np.asarray(self.index.rows(cand_ids))
-            enc = pai.encrypted_scores(self._paillier_pub, req.enc_query,
-                                       cand_rows)
+            cand_ids = np.asarray(
+                topk_fn(np.asarray(req.perturbed)[None, :], req.kprime))[0]
+        enc = backends.get_backend(req.backend).score_request(
+            self, req, cand_ids)
         return Reply(candidate_ids=cand_ids, enc_scores=enc)
 
     def register_paillier(self, pub: pai.PaillierPublicKey) -> None:
@@ -194,7 +185,7 @@ class RemoteRagUser:
                  rng: Optional[np.random.Generator] = None,
                  plan_kwargs: Optional[dict] = None,
                  plan: Optional[ProtocolPlan] = None):
-        assert backend in ("rlwe", "paillier")
+        self.impl = backends.get_backend(backend)   # raises UnknownBackend
         self.backend = backend
         self.rng = rng or np.random.default_rng(0)
         # Paillier randomness: a caller-provided rng makes key/nonce streams
@@ -206,11 +197,9 @@ class RemoteRagUser:
         # repeat tenants with identical (n, N, k, eps) knobs.
         self.plan = plan if plan is not None else planner.plan(
             n=n, N=N, k=k, eps=eps, radius=radius, **(plan_kwargs or {}))
-        if backend == "rlwe":
-            self.rlwe_params = rlwe_params or rlwe.RlweParams()
-            self.sk = rlwe.keygen(self.rlwe_params, self.rng)
-        else:
-            self.sk = pai.keygen(paillier_bits, rng=self._pai_rng)
+        self.rlwe_params = rlwe_params or rlwe.RlweParams()
+        self.paillier_bits = paillier_bits
+        self.sk = self.impl.keygen(self)
 
     # -- module 1 + 2a ------------------------------------------------------
     def encrypt_query(self, e: np.ndarray):
@@ -218,9 +207,7 @@ class RemoteRagUser:
         user half).  Shared by make_request and the serve layer's batched
         path, which perturbs whole batches separately."""
         self._e = np.asarray(e, np.float64)
-        if self.backend == "rlwe":
-            return rlwe.encrypt_query(self.sk, self._e, self.rng)
-        return pai.encrypt_vector(self.sk.pub, self._e, self._pai_rng)
+        return self.impl.encrypt_query(self, self._e)
 
     def make_request(self, e: np.ndarray, key: jax.Array) -> Request:
         pert = distancedp.perturb(key, jnp.asarray(e, jnp.float32),
@@ -240,10 +227,7 @@ class RemoteRagUser:
         return order[: self.plan.k]
 
     def top_positions(self, reply: Reply) -> np.ndarray:
-        if self.backend == "rlwe":
-            scores = rlwe.decrypt_scores(self.sk, reply.enc_scores)
-        else:
-            scores = pai.decrypt_scores(self.sk, reply.enc_scores)
+        scores = self.impl.decrypt_reply(self, reply.enc_scores)
         return self.positions_from_scores(scores, len(reply.candidate_ids))
 
     # -- module 2b / 2c ------------------------------------------------------
@@ -272,8 +256,7 @@ def finish_request(user: RemoteRagUser, cloud: RemoteRagCloud, req: Request,
     sequential driver and the serve layer's batched path — the wire-byte
     accounting must stay identical between them."""
     docs, extras = user.retrieve(cloud, reply, positions)
-    params = user.rlwe_params if user.backend == "rlwe" else None
-    kb = user.sk.pub.key_bits if user.backend == "paillier" else 2048
+    params, kb = user.impl.wire_context(user)
     transcript = ProtocolTranscript(
         plan=user.plan, path=user.plan.path,
         request_bytes=req.nbytes(params, kb),
@@ -283,12 +266,15 @@ def finish_request(user: RemoteRagUser, cloud: RemoteRagCloud, req: Request,
 
 
 def run_remoterag(user: RemoteRagUser, cloud: RemoteRagCloud, e: np.ndarray,
-                  key: jax.Array) -> tuple:
-    """Full protocol round; returns (docs, top-k global ids, transcript)."""
-    if user.backend == "paillier":
-        cloud.register_paillier(user.sk.pub)
+                  key: jax.Array, *, topk_fn=None) -> tuple:
+    """Full protocol round; returns (docs, top-k global ids, transcript).
+
+    ``topk_fn`` threads through to `RemoteRagCloud.handle_request` so a
+    caller embedded in the serve layer (e.g. a quarantine solo retry) can
+    reuse its own sliced/scatter top-k' search."""
+    user.impl.prepare_cloud(cloud, user)
     req = user.make_request(e, key)
-    reply = cloud.handle_request(req)
+    reply = cloud.handle_request(req, topk_fn=topk_fn)
     positions = user.top_positions(reply)
     return finish_request(user, cloud, req, reply, positions)
 

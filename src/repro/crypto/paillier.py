@@ -170,13 +170,19 @@ def encrypted_dot(pub: PaillierPublicKey, enc_query: Sequence[int],
 
 
 def encrypted_scores(pub: PaillierPublicKey, enc_query: Sequence[int],
-                     cands: np.ndarray) -> list:
+                     cands: np.ndarray,
+                     rng: np.random.Generator | None = None) -> list:
     """Encrypted inner products against each of the k' candidates.
 
     Fixed-base optimization: each query ciphertext is the base for k'
     exponentiations by small signed scalars, so we precompute its (and its
     inverse's) bit powers c^(2^i) once per request; each candidate dim then
     costs only popcount(k) modmuls — no per-candidate squarings.
+
+    ``rng`` seeds the per-candidate blinding (the fresh encryption of zero);
+    the default draws from `secrets`.  A seeded generator exists so the
+    vectorized twin (`paillier_vec`) can be checked for wire-byte parity —
+    blinding cancels at decryption either way.
     """
     n_sq = pub.n_sq
     bits = FRAC_BITS + 2
@@ -192,7 +198,7 @@ def encrypted_scores(pub: PaillierPublicKey, enc_query: Sequence[int],
 
     out = []
     for cand in np.asarray(cands, np.float64):
-        acc = encrypt(pub, 0)
+        acc = encrypt(pub, 0, rng)
         ks = np.rint(cand * (1 << FRAC_BITS)).astype(np.int64)
         for j, k in enumerate(ks):
             if not k:

@@ -35,6 +35,7 @@ import numpy as np
 
 import jax
 
+from repro.crypto import backend as crypto_backend
 from repro.data import synth
 from repro.retrieval.index import FlatIndex
 from repro.serve import (AdmissionConfig, AdmissionError, EngineConfig,
@@ -51,7 +52,8 @@ def main() -> None:
     ap.add_argument("--radius", type=float, default=0.05)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--tenants", type=int, default=4)
-    ap.add_argument("--backend", choices=("rlwe", "paillier"), default="rlwe")
+    ap.add_argument("--backend", choices=crypto_backend.available(),
+                    default="rlwe")
     ap.add_argument("--corpus", choices=("uniform", "clustered"),
                     default="uniform")
     ap.add_argument("--max-batch", type=int, default=8)

@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import distancedp
+from repro.crypto import backend as crypto_backend
+from repro.crypto import paillier_vec
 from repro.crypto import rlwe
 from repro.retrieval.index import FlatIndex
 from repro.retrieval.topk import SearchResult, distributed_topk
@@ -67,10 +69,13 @@ def topk_batch(index: FlatIndex, perturbed: np.ndarray, kprime: int,
     return distributed_topk(index, q, kprime, use_pallas=use_pallas)
 
 
-# The batched RLWE re-rank crypto lives with the scheme (crypto/rlwe.py);
-# the single-query ops there are defined as the B=1 slices of the batch
-# versions, so there is exactly one implementation of each. Re-exported
-# here because this module is the serve layer's batching surface.
+# The batched re-rank crypto lives with the schemes (crypto/rlwe.py,
+# crypto/paillier_vec.py) behind the crypto-backend seam
+# (crypto/backend.py); the single-query ops there are defined as the B=1
+# slices of the batch versions, so there is exactly one implementation of
+# each.  Re-exported here because this module is the serve layer's
+# batching surface — the engine's stage pipeline itself only talks to
+# `get_backend(name)` and never branches on the scheme.
 # `encrypted_scores_cached_batch` accepts the dense CandidateCache or the
 # corpus-scale ShardedCandidateCache (batched lanes then gather only their
 # k' candidates' rows from the shard pool instead of assuming a resident
@@ -82,9 +87,16 @@ encrypted_scores_cached_batch = rlwe.encrypted_scores_cached_batch
 decrypt_scores_batch = rlwe.decrypt_scores_batch
 CandidateCacheConfig = rlwe.CandidateCacheConfig
 ShardedCandidateCache = rlwe.ShardedCandidateCache
+get_backend = crypto_backend.get_backend
+UnknownBackend = crypto_backend.UnknownBackend
+encrypted_scores_paillier_batch = paillier_vec.encrypted_scores_batch
+decrypt_scores_paillier_batch = paillier_vec.decrypt_scores_batch
 
 
 __all__ = ["perturb_batch", "topk_batch", "pack_candidates_batch",
            "encrypted_scores_batch", "encrypted_scores_batch_stacked",
            "encrypted_scores_cached_batch", "decrypt_scores_batch",
-           "CandidateCacheConfig", "ShardedCandidateCache"]
+           "CandidateCacheConfig", "ShardedCandidateCache",
+           "get_backend", "UnknownBackend",
+           "encrypted_scores_paillier_batch",
+           "decrypt_scores_paillier_batch"]

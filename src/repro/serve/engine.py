@@ -13,10 +13,12 @@ full protocol for that batch:
               index (run first, so sharded-cache shard admissions can be
               prefetched from the candidate ids — the background H2D copy
               overlaps the per-tenant host encryption that follows), then
-              per-tenant query encryption (host), batched RLWE re-rank
-              against the index's NTT-domain candidate cache (no per-request
-              packing/forward NTTs) and batched decryption under per-tenant
-              keys
+              per-tenant query encryption (host), one batched encrypted
+              re-rank and one batched decryption through the crypto-backend
+              seam (`repro.crypto.backend`) — RLWE scores against the
+              index's NTT-domain candidate cache, Paillier through the
+              RNS-vectorized kernels; the stage pipeline itself is
+              backend-neutral
   module 2b/c direct fetch or k-of-k' OT per request (host)
 
 Batches group by (backend, n, k'): the stacked crypto needs equal ciphertext
@@ -50,7 +52,7 @@ import jax
 
 from repro import obs
 from repro.core import protocol
-from repro.crypto import paillier as pai
+from repro.crypto import backend as crypto_backends
 from repro.crypto import rlwe
 from repro.retrieval.index import FlatIndex
 from repro.serve import admission as adm
@@ -713,8 +715,13 @@ class ServeEngine:
                               track=f"request-{req.request_id}",
                               request_id=req.request_id,
                               tenant=req.tenant):
-            docs, ids, tr = protocol.run_remoterag(sess.user, self.cloud,
-                                                   req.embedding, req.key)
+            # top-k' goes through this engine's searcher, not a whole-index
+            # scan: under a router that is the per-slice scan + merge, so a
+            # quarantined lane's solo retry stays bit-identical to the
+            # scatter-gather path by construction
+            docs, ids, tr = protocol.run_remoterag(
+                sess.user, self.cloud, req.embedding, req.key,
+                topk_fn=self._search_topk)
         sess.num_requests += 1
         return ServeResult(request_id=req.request_id, tenant=req.tenant,
                            docs=docs, ids=ids, transcript=tr,
@@ -750,6 +757,7 @@ class ServeEngine:
         sessions = [self.sessions.get(r.tenant) for r in batch]
         users = [s.user for s in sessions]
         backend = users[0].backend
+        impl = crypto_backends.get_backend(backend)
         kprime = users[0].plan.kprime
         params = self.sessions.rlwe_params
         use_pallas = self.config.use_pallas
@@ -796,7 +804,7 @@ class ServeEngine:
         drop(bad)
         if not alive:
             return [], poisoned
-        cache = self.cloud.candidate_cache if backend == "rlwe" else None
+        cache = impl.cache_view(self.cloud)
         if isinstance(cache, rlwe.ShardedCandidateCache):
             # stamp the trace context every dispatch: the cache is index-
             # memoized and may be shared across engines, so each dispatch
@@ -834,79 +842,50 @@ class ServeEngine:
                 for lane in alive}
 
         # module 2a, cloud half continued: one batched encrypted re-rank
-        # over the surviving lanes.  The RLWE path hits the index's
-        # NTT-domain candidate cache — dense (one device take) or sharded
-        # (lanes gather only their k' rows from the shard pool; prefetched
-        # admissions may already have swapped the hot shards in) — no
-        # per-request packing or candidate forward NTTs either way.  The
-        # stage is a pure function of the already-encrypted queries, so
-        # bisection re-runs scoring, never encryption.
-        if backend == "rlwe":
-            # the clean path keeps the whole-batch ScoreCiphertextBatch
-            # alive so decryption can take the stacked fast path (no
-            # per-lane restack); per-lane views are still handed out for
-            # the wire Reply objects and for bisected fallbacks
-            full_stack: List[object] = []
+        # over the surviving lanes, through the crypto-backend seam (the
+        # RLWE impl hits the index's NTT-domain candidate cache; Paillier
+        # runs the RNS-vectorized kernels with per-lane object fallback).
+        # The stage is a pure function of the already-encrypted queries,
+        # so bisection re-runs scoring, never encryption.  The clean path
+        # keeps the whole-batch score object alive so decryption can take
+        # the stacked fast path (no per-lane restack); per-lane views are
+        # still handed out for the wire Reply objects and for bisected
+        # fallbacks.
+        full_stack: List[object] = []
 
-            def score(ls):
-                ids = np.stack([cand[lane] for lane in ls])
-                q_cts = [enc[lane] for lane in ls]
-                if cache is not None:
-                    stack = batching.encrypted_scores_cached_batch(
-                        params, q_cts, cache, ids, use_pallas=use_pallas)
-                else:                     # cold reference path
-                    rows = np.asarray(
-                        self.cloud.index.rows(ids.reshape(-1)))
-                    cand_rows = rows.reshape(len(ls), kprime, -1)
-                    packed = batching.pack_candidates_batch(params,
-                                                            cand_rows)
-                    stack = batching.encrypted_scores_batch_stacked(
-                        params, q_cts, packed, num_cands=kprime,
-                        n_dim=cand_rows.shape[-1], use_pallas=use_pallas)
-                if len(ls) == len(alive):     # full-set call succeeded
-                    full_stack.append(stack)
-                return stack.lanes()
+        def score(ls):
+            stack = impl.score_candidates(
+                cloud=self.cloud, users=[users[lane] for lane in ls],
+                enc=[enc[lane] for lane in ls],
+                cand_ids=np.stack([cand[lane] for lane in ls]),
+                kprime=kprime, params=params, cache=cache,
+                use_pallas=use_pallas)
+            if len(ls) == len(alive):     # full-set call succeeded
+                full_stack.append(stack)
+            return stack.lanes()
 
-            with tr.span("score", batch_id=bid, lanes=len(alive),
-                         kprime=kprime, backend=backend):
-                cts, bad = _bisect_lanes(score, alive, tracer=tr,
-                                         batch_id=bid, stage="score")
-            if bad:
-                full_stack.clear()        # stack no longer matches alive
-        else:
-            def score_one(lane: int):
-                rows = np.asarray(
-                    self.cloud.index.rows(cand[lane].reshape(-1)))
-                return pai.encrypted_scores(users[lane].sk.pub, enc[lane],
-                                            rows.reshape(kprime, -1))
-
-            with tr.span("score", batch_id=bid, lanes=len(alive),
-                         kprime=kprime, backend=backend):
-                cts, bad = _lane_stage(score_one, alive)
+        with tr.span("score", batch_id=bid, lanes=len(alive),
+                     kprime=kprime, backend=backend):
+            cts, bad = _bisect_lanes(score, alive, tracer=tr,
+                                     batch_id=bid, stage="score")
+        if bad:
+            full_stack.clear()            # stack no longer matches alive
         drop(bad)
         if not alive:
             return [], poisoned
 
         # back on the users: batched decryption (per-tenant keys) + sort —
         # again pure in the ciphertexts, so bisection is re-decryption only
-        if backend == "rlwe":
-            def decrypt(ls):
-                stacked = (full_stack[0]
-                           if full_stack and len(ls) == len(alive)
-                           else [cts[lane] for lane in ls])
-                return batching.decrypt_scores_batch(
-                    [users[lane].sk for lane in ls], stacked,
-                    use_pallas=use_pallas)
+        def decrypt(ls):
+            stacked = (full_stack[0]
+                       if full_stack and len(ls) == len(alive)
+                       else [cts[lane] for lane in ls])
+            return impl.decrypt_scores([users[lane].sk for lane in ls],
+                                       stacked, use_pallas=use_pallas)
 
-            with tr.span("decrypt", batch_id=bid, lanes=len(alive)):
-                scores, bad = _bisect_lanes(decrypt, alive, tracer=tr,
-                                            batch_id=bid, stage="decrypt")
-        else:
-            with tr.span("decrypt", batch_id=bid, lanes=len(alive)):
-                scores, bad = _lane_stage(
-                    lambda lane: pai.decrypt_scores(users[lane].sk,
-                                                    cts[lane]),
-                    alive)
+        with tr.span("decrypt", batch_id=bid, lanes=len(alive)):
+            scores, bad = _bisect_lanes(decrypt, alive, tracer=tr,
+                                        batch_id=bid, stage="decrypt")
         drop(bad)
 
         # module 2b/2c + accounting, per lane (direct attribution)

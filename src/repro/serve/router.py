@@ -235,9 +235,11 @@ class ReplicaRouter:
     session manager, and one request-id counter; only the top-k' scan is
     sharded, and the merge reproduces the full scan's order exactly.
 
-    Caveat: a lane that gets quarantined *inside* an engine retries solo
-    via the sequential path, which scans the full shared index directly —
-    still bit-identical (that is the invariant), just not slice-routed.
+    A lane that gets quarantined *inside* an engine retries solo via the
+    sequential path, but the engine threads its own searcher into that
+    retry (`run_remoterag(..., topk_fn=...)`), so the retried top-k' goes
+    through the same per-slice scan + merge as the scatter-gather path —
+    slice-routed *and* bit-identical by construction.
     """
 
     def __init__(self, index: FlatIndex, *,

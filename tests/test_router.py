@@ -272,6 +272,57 @@ def test_merge_is_arrival_order_independent(corpus):
 # -- satellite 2: replica fault injection -----------------------------------
 
 
+class _PoisonOnce:
+    """Fail exactly one fetch — the one resolving to ``poison_ids`` — so
+    that lane is quarantined in-batch but heals on its solo retry."""
+
+    def __init__(self, cloud, poison_ids):
+        self.cloud = cloud
+        self.poison_ids = list(poison_ids)
+        self.fired = False
+
+    def __call__(self, cand_ids, msg):
+        ids = [int(cand_ids[p]) for p in msg.positions]
+        if ids == self.poison_ids and not self.fired:
+            self.fired = True
+            raise RuntimeError("transient poisoned lane")
+        return type(self.cloud).handle_fetch(self.cloud, cand_ids, msg)
+
+
+def test_engine_quarantine_retry_stays_slice_routed(corpus, monkeypatch):
+    """A lane quarantined *inside* a replica's engine retries solo through
+    the router's scatter-gather searcher — never a direct full-index
+    scan.  The protocol-level whole-index top-k' is poisoned to prove it
+    is not reached, and the healed result stays bit-identical."""
+    from repro.core import protocol as protocol_mod
+
+    def no_full_scan(*a, **kw):
+        raise AssertionError(
+            "solo retry bypassed the per-slice scatter path")
+
+    monkeypatch.setattr(protocol_mod, "distributed_topk", no_full_scan)
+    index, _, queries = corpus
+    want = _by_rid(_single_run(index, queries))   # also never full-scans
+    rt = _router(index, num_replicas=2)
+    victim = rt.home_replica(TENANTS[0])
+    eng = rt.replicas[victim].engine
+    eng.cloud.handle_fetch = _PoisonOnce(eng.cloud, want[0].ids.tolist())
+    rids = _submit_all(rt, queries)
+    got = _by_rid(rt.drain())
+    rt.close()
+    assert set(got) == set(rids)
+    assert all(r.ok for r in got.values())
+    healed = [rid for rid, r in got.items() if r.quarantined]
+    assert healed == [0]
+    for rid in rids:
+        assert got[rid].ids.tolist() == want[rid].ids.tolist()
+        assert got[rid].docs == want[rid].docs
+        assert (got[rid].transcript.total_bytes
+                == want[rid].transcript.total_bytes)
+    m = rt.metrics.summary()
+    assert m["quarantines"] == [] and m["fallback_scans"] == 0
+
+
 def test_scan_fault_quarantines_and_falls_back(corpus):
     """Kill one replica's scan worker mid-dispatch: the router quarantines
     it, serves its slice from the caller-thread fallback, and every

@@ -34,7 +34,8 @@ def corpus():
     return index, emb, queries
 
 
-def _build(index, *, sequential, max_batch, clock=None, **config_kw):
+def _build(index, *, sequential, max_batch, clock=None, backend="rlwe",
+           **config_kw):
     kw = {"clock": clock} if clock is not None else {}
     eng = ServeEngine(
         index,
@@ -42,9 +43,10 @@ def _build(index, *, sequential, max_batch, clock=None, **config_kw):
                             sequential=sequential, **config_kw),
         sessions=SessionManager(rlwe_params=PARAMS,
                                 deterministic_seeds=True), **kw)
+    session_kw = {"paillier_bits": 256} if backend == "paillier" else {}
     for t in TENANTS:
         eng.open_session(t, n=DIM, N=N_DOCS, k=K, radius=0.05,
-                         backend="rlwe")
+                         backend=backend, **session_kw)
     return eng
 
 
@@ -107,8 +109,10 @@ def test_plan_cache_hits_for_repeat_tenants():
 
 
 def test_paillier_batched_matches_sequential(corpus):
-    """The paillier backend batches the top-k' search (crypto stays
-    per-lane); parity must hold there too, incl. deterministic keygen."""
+    """The paillier backend rides the same staged pipeline through the
+    crypto-backend seam (vectorized RNS crypto on the batched path, the
+    object path sequentially); parity must hold down to the wire bytes,
+    incl. deterministic keygen."""
     index, emb, queries = corpus
 
     def run(sequential):
@@ -257,6 +261,56 @@ def test_single_poisoned_lane_in_full_batch(corpus):
     assert m.dispatch_lanes == N_REQ - 1
     assert m.occupancy(N_REQ) == (N_REQ - 1) / N_REQ
     assert eng.pending == 0
+
+
+def test_paillier_poisoned_lane_isolated_like_rlwe(corpus):
+    """Fault isolation is backend-neutral through the crypto seam: one
+    persistently poisoned lane in a paillier batch of 8 errors alone,
+    its 7 batchmates complete bit-identically to the sequential path, no
+    healthy lane is re-encrypted — exactly the rlwe contract."""
+    index, _, queries = corpus
+    _, want = _run(index, queries, sequential=True, max_batch=1,
+                   backend="paillier")
+    eng = _build(index, sequential=False, max_batch=8, backend="paillier")
+    eng.cloud.handle_fetch = _PoisonIds(eng.cloud, want[0].ids.tolist())
+    for i, q in enumerate(queries):
+        eng.submit(TENANTS[i % len(TENANTS)], q, key=jax.random.PRNGKey(i))
+    got = eng.drain()
+    assert len(got) == N_REQ
+    bad = [r for r in got if not r.ok]
+    assert [r.request_id for r in bad] == [0]
+    assert bad[0].quarantined
+    for rs, rb in zip(want[1:], got[1:]):
+        assert rb.ok and not rb.quarantined
+        assert rs.ids.tolist() == rb.ids.tolist()
+        assert rs.docs == rb.docs
+        assert rs.transcript.total_bytes == rb.transcript.total_bytes
+    m = eng.metrics
+    assert m.quarantined_lanes == 1 and m.error_results == 1
+    assert m.lane_encryptions == N_REQ + 1
+    assert m.healthy_reencryptions == 0
+
+
+def test_paillier_traced_run_covers_same_stages(corpus):
+    """Tracing is backend-neutral through the crypto seam: a traced
+    paillier batch emits the same core stage spans as rlwe, the score
+    spans carry backend="paillier", and tracing changes nothing."""
+    index, _, queries = corpus
+    _, base = _run(index, queries, sequential=False, max_batch=8,
+                   backend="paillier")
+    eng, got = _run(index, queries, sequential=False, max_batch=8,
+                    backend="paillier", trace=True)
+    assert len(got) == N_REQ and all(r.ok for r in got)
+    for rb, rt in zip(base, got):
+        assert rb.ids.tolist() == rt.ids.tolist()
+        assert rb.transcript.total_bytes == rt.transcript.total_bytes
+    spans = eng.tracer.spans()
+    names = {s.name for s in spans}
+    assert {"queue_wait", "dispatch", "perturb", "topk", "encrypt",
+            "score", "decrypt", "finish"} <= names
+    score_spans = [s for s in spans if s.name == "score"]
+    assert score_spans
+    assert all(s.attrs.get("backend") == "paillier" for s in score_spans)
 
 
 def test_poison_that_disappears_on_retry(corpus):
