@@ -26,6 +26,14 @@ wall is gated too.  A ``paillier_batch`` section times the vectorized
 RNS-limb Paillier batch path against the per-lane object path at batch
 1 / 8; the batch-8 speedup (>= 3x), bit-exact decryption, and zero
 silent object fallbacks are gated.
+
+Two corpus-lifecycle sections close the file: ``ivf_routing`` times the
+clustered first-stage scan (`repro.retrieval.topk.cluster_topk`) against
+the flat scan at 10^4 docs — gated on >= 2x speedup, recall@k' == 1.0 at
+the planner-derived ``nprobe``, and ``nprobe=all`` bit-identity with the
+flat scan; ``ingestion`` drains a live serving stream across a tail-shard
+ingest — gated on zero lost and zero bit-drifted requests while the cache
+epoch advances.
 """
 
 from __future__ import annotations
@@ -273,6 +281,204 @@ def _paillier_batch_section(rng) -> dict:
     return section
 
 
+def _ivf_routing_section(rng) -> dict:
+    """IVF first-stage routing vs the flat scan at corpus scale (the
+    ``ivf_routing`` section): a clustered 10^4-doc corpus (10^5 under
+    REPRO_BENCH_FULL=1), top-k' through `cluster_topk` at the
+    planner-derived ``nprobe`` vs `distributed_topk` over every row.
+    CI gates (``scripts/check_bench_regression.py``, missing section =
+    FAIL): routed >= 2x faster than flat, recall@k' == 1.0 at the planned
+    probe bound, and the ``nprobe=all`` run bit-identical to the flat
+    scan — the differential anchor that routing is a pure schedule
+    change, not a scoring change."""
+    from repro.retrieval.index import FlatIndex, IvfConfig
+    from repro.retrieval.topk import (cluster_topk, distributed_topk,
+                                      plan_nprobe)
+
+    num_docs = 100_000 if FULL else 10_000
+    dim, num_clusters, kprime, n_q = 256, 25, 32, 16
+    # clustered corpus: equal-size tight clusters around random unit
+    # centers — the regime IVF exists for (uniform-random rows have no
+    # locality to route on, and no planner bound can fix that).  The
+    # perturbation is a *unit* direction scaled to 0.1, so cluster radius
+    # stays small at any dim (per-component gaussians would grow the
+    # noise norm with sqrt(dim) and smear the clusters).
+    centers = _unit(rng, num_clusters, dim)
+    assign = np.repeat(np.arange(num_clusters), num_docs // num_clusters)
+    emb = centers[assign] + 0.1 * _unit(rng, num_docs, dim)
+    emb = (emb / np.linalg.norm(emb, axis=-1, keepdims=True)).astype(
+        np.float32)
+    index = FlatIndex.build(
+        emb, normalize=False, ivf=IvfConfig(num_clusters=num_clusters))
+    view = index.corpus_view()
+    cm = view.cluster_map
+    # queries concentrate on 4 hot topics (the repeat-tenant regime the
+    # routed scan batches well: few distinct clusters per dispatch wave)
+    hot = centers[np.repeat([0, 6, 12, 18], n_q // 4)]
+    queries = hot + 0.1 * _unit(rng, n_q, dim)
+    queries = (queries / np.linalg.norm(queries, axis=-1,
+                                        keepdims=True)).astype(np.float32)
+
+    nprobe = plan_nprobe(cm, kprime)
+    flat = distributed_topk(index, queries, kprime)
+    routed = cluster_topk(view, queries, kprime, nprobe=nprobe)
+    flat_ids = np.asarray(flat.indices)
+    routed_ids = np.asarray(routed.indices)
+    recall = float(np.mean([
+        len(set(flat_ids[b]) & set(routed_ids[b])) / kprime
+        for b in range(n_q)]))
+    # nprobe=all == flat scan, bit-identical (values and ids)
+    full = cluster_topk(view, queries, kprime, nprobe=num_clusters)
+    anchor = bool(
+        np.array_equal(np.asarray(full.indices), flat_ids)
+        and np.array_equal(np.asarray(full.values),
+                           np.asarray(flat.values))
+        and bool(full.exact))
+    assert anchor, "nprobe=all must be bit-identical to the flat scan"
+
+    def flat_scan():
+        np.asarray(distributed_topk(index, queries, kprime).values)
+
+    def routed_scan():
+        np.asarray(cluster_topk(view, queries, kprime,
+                                nprobe=nprobe).values)
+
+    flat_us = timeit(flat_scan, repeat=9, warmup=2)
+    routed_us = timeit(routed_scan, repeat=9, warmup=2)
+    speedup = flat_us / routed_us
+    rows_routed = int(np.max(cm.sizes[cm.route(queries, nprobe)]
+                             .sum(axis=1)))
+    emit("rlwe/ivf_flat_scan", flat_us, f"{num_docs}docs_k'={kprime}")
+    emit("rlwe/ivf_routed_scan", routed_us,
+         f"{speedup:.1f}x_vs_flat_nprobe={nprobe}")
+    emit("rlwe/ivf_recall_at_kprime", recall * 100.0,
+         f"rows<={rows_routed}/{num_docs}")
+    return {
+        "num_docs": num_docs,
+        "dim": dim,
+        "num_clusters": num_clusters,
+        "kprime": kprime,
+        "queries": n_q,
+        "nprobe": nprobe,
+        "flat_us": flat_us,
+        "routed_us": routed_us,
+        "speedup_routed_vs_flat": speedup,
+        "recall_at_kprime": recall,
+        "nprobe_all_bit_identical": anchor,
+        "max_rows_routed": rows_routed,
+    }
+
+
+def _ingestion_section(params, rng) -> dict:
+    """Streaming ingestion under live traffic (the ``ingestion`` section):
+    a serving engine over the sharded candidate cache, with a tail-shard
+    ingest (`FlatIndex.ingest` -> `ShardedCandidateCache.ingest_tail`)
+    landing *between dispatch steps* of a draining stream.  The engine is
+    pinned to its epoch-0 `CorpusView`, so every in-flight request must
+    return bit-identical results to a no-ingest reference run — zero
+    lost, zero bit-drift — while the cache's epoch advances underneath.
+    After `refresh_corpus` the ingested rows are reachable.  All
+    CI-gated (missing section = FAIL)."""
+    import time
+
+    from repro.retrieval.index import FlatIndex, IvfConfig
+    from repro.serve import EngineConfig, ServeEngine
+    from repro.serve.session import SessionManager
+
+    dim, num_docs, n_new, n_req, max_batch = 64, 2048, 128, 16, 4
+    shard_docs = 256
+    emb = _unit(rng, num_docs, dim)
+    docs = [f"doc-{i}".encode() for i in range(num_docs)]
+    tail = _unit(rng, n_new, dim)
+    queries = _unit(rng, n_req, dim)
+    # shard-aligned IVF build: each 256-row cluster is exactly one cache
+    # shard, so routing and residency speak the same ranges
+    cfg = rlwe.CandidateCacheConfig(shard_docs=shard_docs)
+
+    def build_engine():
+        index = FlatIndex.build(
+            emb, documents=docs, normalize=False,
+            ivf=IvfConfig(num_clusters=num_docs // shard_docs,
+                          align=shard_docs))
+        eng = ServeEngine(
+            index,
+            config=EngineConfig(max_batch=max_batch, max_wait_s=30.0,
+                                cache_config=cfg),
+            sessions=SessionManager(rlwe_params=params,
+                                    deterministic_seeds=True))
+        for t in range(4):
+            eng.open_session(f"bench-{t}", n=dim, N=num_docs, k=4,
+                             radius=0.05, backend="rlwe")
+        return eng
+
+    def submit_all(eng):
+        for i in range(n_req):
+            eng.submit(f"bench-{i % 4}", queries[i],
+                       key=jax.random.PRNGKey(i))
+
+    ref_eng = build_engine()
+    submit_all(ref_eng)
+    want = {r.request_id: r for r in ref_eng.drain()}
+    ref_eng.close()
+
+    eng = build_engine()
+    submit_all(eng)
+    out = eng.step()        # first batch through: the lazy cache is live
+    t0 = time.perf_counter()
+    eng.cloud.index.ingest(tail, documents=[f"new-{i}".encode()
+                                            for i in range(n_new)],
+                           normalize=False)
+    ingest_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    out += eng.drain()      # the rest of the stream rides the swap
+    drain_us = (time.perf_counter() - t0) * 1e6
+    stats = eng.cache_stats()
+
+    lost = n_req - len(out)
+    drift = sum(
+        1 for r in out
+        if not (r.ok and r.ids.tolist() == want[r.request_id].ids.tolist()
+                and r.docs == want[r.request_id].docs
+                and r.transcript.total_bytes
+                == want[r.request_id].transcript.total_bytes))
+    assert lost == 0 and drift == 0, \
+        f"ingest under live traffic: lost={lost} drift={drift}"
+
+    # epoch advance: after refresh the tail rows are reachable
+    view = eng.refresh_corpus()
+    eng.open_session("bench-fresh", n=dim, N=num_docs + n_new, k=4,
+                     radius=0.05, backend="rlwe")
+    probe = eng.submit("bench-fresh", tail[0],
+                       key=jax.random.PRNGKey(10_000))
+    post = eng.drain()
+    reachable = any(r.request_id == probe
+                    and any(int(i) >= num_docs for i in r.ids)
+                    for r in post)
+    assert reachable, "ingested rows must be servable after refresh"
+    eng.close()
+
+    section = {
+        "num_docs": num_docs,
+        "ingested_docs": n_new,
+        "shard_docs": shard_docs,
+        "requests": n_req,
+        "max_batch": max_batch,
+        "ingest_us": ingest_us,
+        "drain_after_ingest_us": drain_us,
+        "lost_requests": lost,
+        "bit_drift_requests": drift,
+        "epoch_before": 0,
+        "epoch_after": int(view.epoch),
+        "cache_ingests": int(stats["ingests"]) if stats else 0,
+        "tail_reachable_after_refresh": reachable,
+    }
+    emit("rlwe/ingest_tail_swap", ingest_us,
+         f"{n_new}docs_epoch{section['epoch_after']}")
+    emit("rlwe/ingest_live_stream", drain_us,
+         f"lost={lost}_drift={drift}")
+    return section
+
+
 def run() -> None:
     if FULL:
         params = rlwe.RlweParams()                    # N=4096, chunk=1024
@@ -513,6 +719,8 @@ def run() -> None:
     results["serve_faults"] = _serve_fault_section(params, rng)
     results["stage_breakdown"] = _stage_breakdown_section(params, rng)
     results["paillier_batch"] = _paillier_batch_section(rng)
+    results["ivf_routing"] = _ivf_routing_section(rng)
+    results["ingestion"] = _ingestion_section(params, rng)
 
     payload = {
         "bench": "rlwe_rerank",

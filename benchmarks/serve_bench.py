@@ -36,6 +36,12 @@ run — plus a fault point (one replica's slice scan poisoned mid-drain at
 zero lost.  ``host_cpus`` is recorded so the regression gate can apply
 the physical scaling bound (2 replicas >= 1.3x on multi-core hosts,
 bounded router overhead on 1-CPU hosts) — see docs/scale_out.md.
+
+Last, the ``retry_lane`` section: a transiently-faulted stream through
+the engine with quarantine solo retries on the background retry lane vs
+inline on the dispatch thread, against a fault-free baseline — the
+healthy requests' p99 with the lane on is gated
+(``--max-retry-p99-ratio``) against the fault-free run.
 """
 
 from __future__ import annotations
@@ -411,6 +417,100 @@ def replica_sweep(index, queries, *, max_batch: int,
     }
 
 
+def retry_lane_section() -> dict:
+    """Quarantine retry-lane impact (the ``retry_lane`` section): the
+    same transiently-faulted stream (4 lanes fail their first fetch, the
+    solo retry succeeds) through the engine with the background retry
+    lane on vs off, plus a fault-free baseline.  With the lane on, solo
+    retries run off the dispatch thread, so the *healthy* requests' p99
+    must stay within the gated ratio of the fault-free run
+    (`scripts/check_bench_regression.py --max-retry-p99-ratio`, default
+    1.5); the lane-off pass records what inline retries cost the same
+    healthy traffic."""
+    from repro.serve.session import SessionManager
+
+    dim, n_docs, n_req, mb, faults = 64, 2048, 24, 4, (0, 6, 12, 18)
+    rng = np.random.default_rng(7)
+    emb = synth.uniform_corpus(rng, n_docs, dim)
+    index = FlatIndex.build(emb,
+                            documents=synth.passages(rng, n_docs,
+                                                     avg_bytes=128))
+    queries = synth.queries_near_corpus(rng, emb, n_req)
+
+    def run_pass(retry_lane: bool, poison_idsets):
+        eng = ServeEngine(
+            index,
+            config=EngineConfig(max_batch=mb, max_wait_s=30.0,
+                                retry_lane=retry_lane),
+            sessions=SessionManager(rlwe_params=RLWE_PARAMS,
+                                    deterministic_seeds=True))
+        for t in range(4):
+            eng.open_session(f"tenant-{t}", n=dim, N=n_docs, k=K,
+                             radius=RADIUS, backend="rlwe")
+
+        def submit_all():
+            for i, q in enumerate(queries):
+                eng.submit(f"tenant-{i % 4}", q, key=jax.random.PRNGKey(i))
+
+        if poison_idsets is not None:
+            # fault every even-numbered fetch of a poisoned lane: the
+            # batch dispatch faults, its solo retry heals — in the warmup
+            # round too, so the solo-retry path jit-compiles *before*
+            # timing starts
+            real = type(eng.cloud).handle_fetch
+            seen = {ids: 0 for ids in poison_idsets}
+
+            def poisoned(cand_ids, msg):
+                ids = tuple(int(cand_ids[p]) for p in msg.positions)
+                if ids in seen:
+                    seen[ids] += 1
+                    if seen[ids] % 2 == 1:   # transient: retry succeeds
+                        raise RuntimeError("bench transient fetch fault")
+                return real(eng.cloud, cand_ids, msg)
+
+            eng.cloud.handle_fetch = poisoned
+        submit_all()                # warmup for every batch + retry shape
+        eng.drain()
+        from repro.serve.metrics import ServeMetrics
+        eng.metrics = ServeMetrics()
+        submit_all()
+        results = sorted(eng.drain(), key=lambda r: r.request_id)
+        m = eng.metrics
+        eng.close()
+        assert len(results) == n_req, "retry-lane pass lost a request"
+        assert all(r.ok for r in results), \
+            "transient faults must resolve via the solo retry"
+        healthy = [r.latency_s for j, r in enumerate(results)
+                   if j not in faults]
+        return results, m, float(np.percentile(healthy, 99))
+
+    clean, _, p99_ff = run_pass(True, None)
+    idsets = [tuple(clean[j].ids.tolist()) for j in faults]
+    _, m_lane, p99_lane = run_pass(True, idsets)
+    _, m_inline, p99_inline = run_pass(False, idsets)
+    assert m_lane.retried_requests >= len(faults)
+    assert m_inline.retried_requests >= len(faults)
+
+    section = {
+        "requests": n_req,
+        "max_batch": mb,
+        "faulted_requests": len(faults),
+        "lost_requests": 0,
+        "p99_fault_free_s": p99_ff,
+        "p99_healthy_retry_lane_s": p99_lane,
+        "p99_healthy_inline_s": p99_inline,
+        "healthy_p99_ratio_vs_fault_free": p99_lane / p99_ff,
+        "healthy_p99_ratio_vs_inline": p99_lane / p99_inline,
+        "retried_requests_lane": m_lane.retried_requests,
+        "retried_requests_inline": m_inline.retried_requests,
+        "quarantined_lanes": m_lane.quarantined_lanes,
+    }
+    emit("serve_retry_lane_p99", p99_lane * 1e6,
+         f"{section['healthy_p99_ratio_vs_fault_free']:.2f}x_fault_free_"
+         f"{section['healthy_p99_ratio_vs_inline']:.2f}x_inline")
+    return section
+
+
 def main() -> None:
     rng = np.random.default_rng(0)
     emb = synth.uniform_corpus(rng, N_DOCS, DIM)
@@ -486,6 +586,9 @@ def main() -> None:
     # scale-out replica sweep + fault point (docs/scale_out.md)
     results_json["replica_sweep"] = replica_sweep(index, queries,
                                                   max_batch=4)
+
+    # quarantine retry-lane impact on healthy-batch p99 (docs/serving.md)
+    results_json["retry_lane"] = retry_lane_section()
 
     payload = {
         "bench": "serve",

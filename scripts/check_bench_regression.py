@@ -29,7 +29,15 @@ and fails if
     RNS-limb Paillier batch path is less than ``min_paillier_speedup``
     (default 3.0x) faster than the per-lane object path at batch 8, its
     scores were not bit-exact against the object path, or lanes silently
-    fell back to objects at the benchmark key size.
+    fell back to objects at the benchmark key size, or
+  * (ivf_routing section — missing section = FAIL) the clustered
+    first-stage scan is less than ``min_ivf_speedup`` (default 2.0x)
+    faster than the flat scan, recall@k' at the planner-derived
+    ``nprobe`` is below 1.0, or the ``nprobe=all`` run was not
+    bit-identical to the flat scan, or
+  * (ingestion section — missing section = FAIL) a live tail-shard
+    ingest lost or bit-drifted any in-flight request, the cache recorded
+    no ingest, or the corpus epoch failed to advance.
 
 With ``--serve-json BENCH_serve.json`` (written by
 ``python -m benchmarks.serve_bench``) it additionally gates the serving
@@ -52,6 +60,12 @@ instead), 4-replica QPS >= 2.0x on hosts with >= 4 CPUs, and the
 replica-failure fault point losing zero requests
 (offered == returned; ledger submitted == completed +
 quarantine-resolved).
+
+The serve JSON must also carry the ``retry_lane`` section (missing
+section = FAIL): with quarantine solo retries running on the background
+retry lane, the healthy requests' p99 under transient faults must stay
+within ``--max-retry-p99-ratio`` (default 1.5) of the fault-free run,
+with zero lost requests and the retries actually exercised.
 
     scripts/check_bench_regression.py [BENCH_rlwe.json] [min_speedup=1.0]
         [max_sharded_ratio=1.3] [min_mem_reduction=4.0]
@@ -298,6 +312,101 @@ def _check_paillier_batch(section: dict, min_speedup_b8: float = 3.0) -> int:
     return failures
 
 
+def _check_ivf_routing(section: dict, min_speedup: float = 2.0) -> int:
+    """IVF first-stage routing gate: the routed scan must beat the flat
+    scan by ``min_speedup``x at the bench corpus size, recall@k' at the
+    planner-derived ``nprobe`` must be exactly 1.0 (the Theorem-1 bound
+    covers the probed clusters), and the ``nprobe=all`` run must have
+    been bit-identical to the flat scan — routing is a schedule change,
+    never a scoring change.  A JSON without the section fails — the gate
+    must not silently pass after a results-key rename."""
+    if section is None:
+        print("FAIL ivf_routing: results lack the IVF routing section — "
+              "the first-stage routing gate did not run", file=sys.stderr)
+        return 1
+    failures = 0
+    speedup = section.get("speedup_routed_vs_flat")
+    if speedup is None or speedup < min_speedup:
+        print(f"FAIL ivf_routing: routed scan {speedup}x the flat scan "
+              f"< {min_speedup}x at {section.get('num_docs')} docs "
+              f"(flat {section.get('flat_us')}us, routed "
+              f"{section.get('routed_us')}us)", file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   ivf_routing: routed scan {speedup:.2f}x the flat "
+              f"scan at {section.get('num_docs')} docs "
+              f"(nprobe={section.get('nprobe')})")
+    recall = section.get("recall_at_kprime")
+    if recall is None or recall < 1.0:
+        print(f"FAIL ivf_routing: recall@k' {recall} < 1.0 at the "
+              f"planner-derived nprobe={section.get('nprobe')} — the "
+              f"probe bound no longer covers the planned search range",
+              file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   ivf_routing: recall@k' == 1.0 at the planned "
+              f"nprobe={section.get('nprobe')} "
+              f"(k'={section.get('kprime')})")
+    if not section.get("nprobe_all_bit_identical"):
+        print("FAIL ivf_routing: nprobe=all was not bit-identical to the "
+              "flat scan — the differential anchor broke",
+              file=sys.stderr)
+        failures += 1
+    else:
+        print("ok   ivf_routing: nprobe=all bit-identical to the flat "
+              "scan")
+    return failures
+
+
+def _check_ingestion(section: dict) -> int:
+    """Streaming-ingestion gate: a tail-shard ingest landing mid-stream
+    must lose zero in-flight requests and bit-drift zero results (the
+    serving engine stays pinned to its epoch-0 view), the sharded cache
+    must have recorded the ingest, the corpus epoch must have advanced,
+    and the ingested rows must have been reachable after
+    ``refresh_corpus``.  A JSON without the section fails — the gate
+    must not silently pass after a results-key rename."""
+    if section is None:
+        print("FAIL ingestion: results lack the streaming-ingestion "
+              "section — the live tail-shard swap gate did not run",
+              file=sys.stderr)
+        return 1
+    failures = 0
+    lost = section.get("lost_requests")
+    drift = section.get("bit_drift_requests")
+    if lost != 0 or drift != 0:
+        print(f"FAIL ingestion: live tail-shard swap lost {lost} and "
+              f"bit-drifted {drift} of {section.get('requests')} "
+              f"in-flight requests (both must be 0)", file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   ingestion: {section.get('requests')} in-flight "
+              f"requests across the swap, 0 lost, 0 bit-drifted")
+    if section.get("cache_ingests", 0) < 1:
+        print("FAIL ingestion: the sharded cache recorded no tail-shard "
+              "ingest — the swap never reached the cache",
+              file=sys.stderr)
+        failures += 1
+    elif section.get("epoch_after", 0) <= section.get("epoch_before", 0):
+        print(f"FAIL ingestion: corpus epoch did not advance "
+              f"({section.get('epoch_before')} -> "
+              f"{section.get('epoch_after')})", file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   ingestion: cache ingests="
+              f"{section.get('cache_ingests')}, epoch "
+              f"{section.get('epoch_before')} -> "
+              f"{section.get('epoch_after')}")
+    if not section.get("tail_reachable_after_refresh"):
+        print("FAIL ingestion: ingested rows were not servable after "
+              "refresh_corpus", file=sys.stderr)
+        failures += 1
+    else:
+        print("ok   ingestion: ingested rows servable after "
+              "refresh_corpus")
+    return failures
+
+
 def _check_overload(results: dict, min_goodput_ratio: float = 0.8) -> int:
     """Overload gate on the closed-loop offered-load sweep: admission
     control must keep goodput flat and interactive p99 bounded past the
@@ -509,8 +618,50 @@ def _check_replica_sweep(results: dict, min_scaling: float = 1.3,
     return failures
 
 
+def _check_retry_lane(section: dict, max_p99_ratio: float = 1.5) -> int:
+    """Retry-lane gate on the serve JSON: with quarantine solo retries on
+    the background lane, the healthy requests' p99 under transient faults
+    must stay within ``max_p99_ratio`` of the fault-free run — retries
+    must not stall the dispatch thread — with zero lost requests and the
+    retries actually exercised.  A JSON without the section fails — the
+    gate must not silently pass after a results-key rename."""
+    if section is None:
+        print("FAIL retry_lane: serve results lack the retry-lane "
+              "section — the healthy-batch p99 gate did not run",
+              file=sys.stderr)
+        return 1
+    failures = 0
+    ratio = section.get("healthy_p99_ratio_vs_fault_free")
+    if ratio is None or ratio > max_p99_ratio:
+        print(f"FAIL retry_lane: healthy p99 under faults {ratio}x the "
+              f"fault-free run > {max_p99_ratio}x "
+              f"(lane {section.get('p99_healthy_retry_lane_s')}s vs "
+              f"fault-free {section.get('p99_fault_free_s')}s) — "
+              f"retries are stalling the dispatch thread",
+              file=sys.stderr)
+        failures += 1
+    else:
+        inline = section.get("healthy_p99_ratio_vs_inline")
+        print(f"ok   retry_lane: healthy p99 {ratio:.2f}x fault-free "
+              f"(<= {max_p99_ratio}x; {inline:.2f}x the inline-retry "
+              f"pass, recorded ungated)")
+    if section.get("lost_requests") != 0:
+        print(f"FAIL retry_lane: {section.get('lost_requests')} requests "
+              f"lost under transient faults", file=sys.stderr)
+        failures += 1
+    if section.get("retried_requests_lane", 0) < 1:
+        print("FAIL retry_lane: no retries recorded — the fault "
+              "injection did not exercise the lane", file=sys.stderr)
+        failures += 1
+    else:
+        print(f"ok   retry_lane: {section.get('retried_requests_lane')} "
+              f"solo retries off the dispatch thread, 0 lost")
+    return failures
+
+
 def _check_serve(path: str, min_speedup: float,
-                 min_occupancy: float, min_goodput_ratio: float) -> int:
+                 min_occupancy: float, min_goodput_ratio: float,
+                 max_retry_p99_ratio: float = 1.5) -> int:
     """Serving-engine gate on BENCH_serve.json: batch-8 fill and the
     batched-vs-sequential throughput win."""
     try:
@@ -545,6 +696,8 @@ def _check_serve(path: str, min_speedup: float,
               f"(>= {min_occupancy})")
     failures += _check_overload(results, min_goodput_ratio)
     failures += _check_replica_sweep(results)
+    failures += _check_retry_lane(results.get("retry_lane"),
+                                  max_retry_p99_ratio)
     return failures
 
 
@@ -573,6 +726,14 @@ def main() -> int:
                     help="paillier_batch gate: vectorized RNS scoring at "
                          "batch 8 must beat the per-lane object path by "
                          "this factor")
+    ap.add_argument("--min-ivf-speedup", type=float, default=2.0,
+                    help="ivf_routing gate: the routed first-stage scan "
+                         "must beat the flat scan by this factor")
+    ap.add_argument("--max-retry-p99-ratio", type=float, default=1.5,
+                    help="retry_lane gate: healthy-request p99 under "
+                         "transient faults (background retry lane on) "
+                         "must stay within this ratio of the fault-free "
+                         "run")
     args = ap.parse_args()
     try:
         with open(args.path) as f:
@@ -599,10 +760,14 @@ def main() -> int:
     failures += _check_stage_breakdown(results.get("stage_breakdown"))
     failures += _check_paillier_batch(results.get("paillier_batch"),
                                       args.min_paillier_speedup)
+    failures += _check_ivf_routing(results.get("ivf_routing"),
+                                   args.min_ivf_speedup)
+    failures += _check_ingestion(results.get("ingestion"))
     if args.serve_json is not None:
         failures += _check_serve(args.serve_json, args.min_serve_speedup,
                                  args.min_serve_occupancy,
-                                 args.min_goodput_ratio)
+                                 args.min_goodput_ratio,
+                                 args.max_retry_p99_ratio)
     return 1 if failures else 0
 
 

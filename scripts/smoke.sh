@@ -31,6 +31,10 @@ python scripts/check_trace_overhead.py
 python -m benchmarks.serve_bench --overload-smoke
 
 if [[ "${SMOKE_BENCH:-0}" == "1" ]]; then
+  # the regression gate fails on any missing section, so this also
+  # covers ivf_routing (routed >= 2x flat, recall@k' == 1.0, nprobe=all
+  # bit-identity), ingestion (zero lost / zero bit-drift across a live
+  # tail-shard swap), and retry_lane (healthy p99 under faults)
   python -m benchmarks.run --only rlwe
   python -m benchmarks.serve_bench
   python scripts/check_bench_regression.py BENCH_rlwe.json \

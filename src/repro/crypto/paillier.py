@@ -136,6 +136,17 @@ def _encode(v: float, n: int, frac_bits: int = FRAC_BITS) -> int:
     return round(float(v) * (1 << frac_bits)) % n
 
 
+def encode_vector(e: np.ndarray, n: int,
+                  frac_bits: int = FRAC_BITS) -> list[int]:
+    """Batched `_encode`: one vectorized scale+round over the whole vector
+    instead of a per-component python loop.  Bit-identical — both paths
+    compute ``v * 2^frac_bits`` in float64 and round half-even (python
+    ``round`` on a float and ``np.rint`` share the IEEE tie rule), and the
+    final ``% n`` runs in exact integer arithmetic either way."""
+    scaled = np.rint(np.asarray(e, np.float64) * (1 << frac_bits))
+    return [int(m) % n for m in scaled.astype(np.int64)]
+
+
 def _decode(m: int, n: int, frac_bits: int) -> float:
     if m > n // 2:
         m -= n
@@ -222,6 +233,6 @@ def decrypt_scores(sk: PaillierSecretKey, enc_scores: Sequence[int]) -> np.ndarr
 
 __all__ = [
     "PaillierPublicKey", "PaillierSecretKey", "keygen", "encrypt", "decrypt",
-    "add", "mul_plain", "encrypt_vector", "encrypted_dot", "encrypted_scores",
-    "decrypt_scores", "FRAC_BITS",
+    "add", "mul_plain", "encrypt_vector", "encode_vector", "encrypted_dot",
+    "encrypted_scores", "decrypt_scores", "FRAC_BITS",
 ]

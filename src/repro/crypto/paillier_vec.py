@@ -163,7 +163,7 @@ def encrypt_vector(pub: pai.PaillierPublicKey, e: np.ndarray,
         counters["object"] += 1
         return pai.encrypt_vector(pub, e, rng)
     counters["vectorized"] += 1
-    ms = [pai._encode(v, pub.n) for v in e]
+    ms = pai.encode_vector(e, pub.n)     # one batched call, not per-lane
     rs = [_draw_r(pub, rng) for _ in ms]
     ctx = _ctx(pub.n_sq)
     with jax.experimental.enable_x64():

@@ -602,6 +602,7 @@ class ShardedCandidateCache:
     shard_docs: int
     pool: np.ndarray               # host (num_docs, chunks, P, N) backing store
     shards: list                   # views into ``pool``, <=shard_docs docs each
+    epoch: int = 0                 # corpus epoch (bumped by `ingest_tail`)
     max_resident_bytes: Optional[int] = None
     pin_on_access: bool = True
     async_admission: bool = True
@@ -637,6 +638,13 @@ class ShardedCandidateCache:
         self._worker: Optional[threading.Thread] = None
         self._closed = False
         self._admit_hook = None           # test seam: called(s) pre-swap
+        self._ingest_hook = None          # test seam: called(self) pre-publish
+        # shard boundary table: shard s owns docs [starts[s], starts[s+1]).
+        # Uniform `d // shard_docs` at build; `ingest_tail` appends
+        # boundaries, so the mapping stays valid for ragged tail shards.
+        self._starts = np.cumsum(
+            [0] + [s.shape[0] for s in self.shards])[:-1]
+        self.ingests = 0                  # tail shards appended since build
         # telemetry sink (repro.obs): the serving engine re-binds these
         # every dispatch via `set_trace_context` — the cache is index-
         # memoized and may outlive any one engine.  Spans record only
@@ -660,6 +668,17 @@ class ShardedCandidateCache:
     def pool_nbytes(self) -> int:
         """Total host pool size — what the dense cache would pin on device."""
         return sum(s.nbytes for s in self.shards)
+
+    def host_pool(self) -> np.ndarray:
+        """The full packed pool including any ingested tail shards — the
+        original backing array when the cache never grew, else one
+        concatenated copy (re-view/densify paths only; the request path
+        always reads per-shard)."""
+        with self._lock:
+            shards = list(self.shards)
+        if self.pool.shape[0] == sum(s.shape[0] for s in shards):
+            return self.pool
+        return np.concatenate(shards, axis=0)
 
     def _resident_bytes_locked(self) -> int:
         return sum(int(v.size) * 4 for v in self._resident.values())
@@ -697,24 +716,31 @@ class ShardedCandidateCache:
                 "admit_enqueued": self.admit_enqueued,
                 "admit_dropped": self.admit_dropped,
                 "policy_deferrals": self.policy_deferrals,
-                "pending_admissions": pending}
+                "pending_admissions": pending,
+                "epoch": self.epoch,
+                "ingests": self.ingests}
 
     def check_compatible(self, params: RlweParams, n_dim=None) -> None:
         _check_cache_compatible(self, params, n_dim)
 
     def shard_of(self, doc_id: int) -> int:
-        return int(doc_id) // self.shard_docs
+        return int(np.searchsorted(self._starts, int(doc_id),
+                                   side="right")) - 1
 
     def _shard_ids(self, flat: np.ndarray) -> np.ndarray:
         """Validated document ids -> shard ids (the single id->shard
-        mapping `gather` and `prefetch` share)."""
+        mapping `gather` and `prefetch` share).  Boundary-table lookup:
+        identical to ``flat // shard_docs`` for the uniform build layout,
+        and still correct for ragged tail shards appended by
+        `ingest_tail` (ids below an earlier epoch's num_docs always map
+        the same way — the table only ever grows)."""
         if flat.size and (flat.min() < 0 or flat.max() >= self.num_docs):
             # negative ids would alias shards[-1] via Python indexing and
             # silently gather the wrong document; fail loudly instead
             raise IndexError(
                 f"candidate ids must be in [0, {self.num_docs}); got "
                 f"[{flat.min()}, {flat.max()}]")
-        return flat // self.shard_docs
+        return np.searchsorted(self._starts, flat, side="right") - 1
 
     def pin(self, shard_id: int) -> None:
         """Explicitly admit a shard to device residency (LRU position =
@@ -919,6 +945,59 @@ class ShardedCandidateCache:
         with self._cv:
             self._closed = False      # allow lazy restart
 
+    def ingest_tail(self, rows: np.ndarray, *, epoch: int) -> None:
+        """Streaming ingestion: append newly packed docs as a *tail shard*
+        and stamp the cache with the new corpus ``epoch``.
+
+        ``rows`` is the `_pack_corpus_ntt` output for the new documents —
+        fully materialized before this call, like the admitter's staged
+        copy, so the publish under the cache lock is a pointer append: a
+        concurrent `gather` observes either the pre-ingest shard table or
+        the complete tail shard, never a half-swapped one.  Ids below the
+        previous ``num_docs`` keep their shard mapping (the boundary table
+        only grows), which is what makes a fixed-epoch replay bit-identical
+        while ingestion runs.  The tail shard then rides the *existing*
+        atomic admission path to device residency — enqueued to the
+        background admitter (staged copy off-lock, `_swap_in_locked`
+        publish); until that swap, gathers stream it from the host like
+        any other non-resident shard."""
+        rows = np.ascontiguousarray(rows)
+        want = (self.num_chunks, self.params.num_primes, self.params.n_poly)
+        if rows.ndim != 4 or rows.shape[1:] != want:
+            raise ValueError(
+                f"tail shard rows must be (m, {want[0]}, {want[1]}, "
+                f"{want[2]}), got {rows.shape}")
+        if rows.shape[0] == 0:
+            return
+        hook = self._ingest_hook    # test seam: interleave pre-publish
+        if hook is not None:
+            hook(self)
+        with self._cv:
+            if epoch <= self.epoch:
+                raise ValueError(
+                    f"stale ingest epoch {epoch} (cache is at "
+                    f"{self.epoch})")
+            s = len(self.shards)
+            self.shards.append(rows)
+            self._starts = np.append(self._starts, self.num_docs)
+            self.num_docs += rows.shape[0]
+            self.epoch = epoch
+            self.ingests += 1
+            # warm the tail through the normal admission machinery
+            if (self.pin_on_access and self.async_admission
+                    and self.max_resident_bytes != 0
+                    and self._fits_budget(s)
+                    and len(self._queue) < self.max_pending_admissions):
+                self._inflight.add(s)
+                self._queue.append((s, self._trace_batch))
+                self.admit_enqueued += 1
+                if self._worker is None or not self._worker.is_alive():
+                    self._worker = threading.Thread(
+                        target=self._admit_worker, name="shard-admitter",
+                        daemon=True)
+                    self._worker.start()
+            self._cv.notify_all()
+
     def gather(self, ids) -> jnp.ndarray:
         """On-demand gather of the selected candidates' cached rows:
         (B, num_cands) document ids -> (B, num_cands, chunks, P, N) device
@@ -938,7 +1017,7 @@ class ShardedCandidateCache:
         h0, m0, g0 = self.hits, self.misses, self.gathered_bytes
         flat = ids.reshape(-1)
         shard_ids = self._shard_ids(flat)
-        local = flat - shard_ids * self.shard_docs
+        local = flat - self._starts[shard_ids]
         order = np.argsort(shard_ids, kind="stable")      # group by shard
         uniq, starts = np.unique(shard_ids[order], return_index=True)
         bounds = np.append(starts, order.size)
@@ -996,7 +1075,8 @@ def _check_cache_compatible(cache, params: RlweParams, n_dim=None) -> None:
 
 def _shard_pool(params: RlweParams, pool: np.ndarray, n_dim: int,
                 config: CandidateCacheConfig,
-                sharding=None, twiddles=None) -> ShardedCandidateCache:
+                sharding=None, twiddles=None,
+                epoch: int = 0) -> ShardedCandidateCache:
     num_docs = pool.shape[0]
     chunks, stride, cpt = _cache_geometry(params, n_dim)
     shard_docs = config.resolve_shard_docs(num_docs)
@@ -1008,6 +1088,7 @@ def _shard_pool(params: RlweParams, pool: np.ndarray, n_dim: int,
         params=params, twiddles=twiddles, n_dim=n_dim,
         num_docs=num_docs, stride=stride, cands_per_ct=cpt,
         num_chunks=chunks, shard_docs=shard_docs, pool=pool, shards=shards,
+        epoch=epoch,
         max_resident_bytes=config.max_resident_bytes,
         pin_on_access=config.pin_on_access,
         async_admission=config.async_admission,
@@ -1039,21 +1120,22 @@ def shard_candidate_cache(cache,
     and the packed pool (the expensive pack + forward-NTT product) is built
     once per params value no matter how many configs consume it."""
     config = config if config is not None else CandidateCacheConfig()
-    pool = (cache.pool if isinstance(cache, ShardedCandidateCache)
-            else cache.host_pool())
+    pool = cache.host_pool()       # includes any ingested tail shards
     return _shard_pool(cache.params, pool, cache.n_dim, config, sharding,
-                       twiddles=cache.twiddles)
+                       twiddles=cache.twiddles,
+                       epoch=getattr(cache, "epoch", 0))
 
 
 def densify_candidate_cache(cache: ShardedCandidateCache) -> CandidateCache:
     """Dense device-resident view of a sharded cache's pool (one
     host->device copy, no re-pack; the host pool stays shared)."""
+    pool = cache.host_pool()       # includes any ingested tail shards
     dense = CandidateCache(
-        params=cache.params, polys=jnp.asarray(cache.pool),
+        params=cache.params, polys=jnp.asarray(pool),
         twiddles=cache.twiddles, n_dim=cache.n_dim,
-        num_docs=cache.num_docs, stride=cache.stride,
+        num_docs=pool.shape[0], stride=cache.stride,
         cands_per_ct=cache.cands_per_ct, num_chunks=cache.num_chunks)
-    dense.__dict__["_host_pool"] = cache.pool   # keep the pool shared
+    dense.__dict__["_host_pool"] = pool         # keep the pool shared
     return dense
 
 

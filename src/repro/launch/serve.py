@@ -37,11 +37,13 @@ import jax
 
 from repro.crypto import backend as crypto_backend
 from repro.data import synth
-from repro.retrieval.index import FlatIndex
+from repro.retrieval.index import FlatIndex, IvfConfig
+from repro.retrieval.topk import plan_nprobe
 from repro.serve import (AdmissionConfig, AdmissionError, EngineConfig,
                          RateLimited, ReplicaRouter, RouterConfig,
                          ServeEngine)
 from repro.serve.admission import PRIORITIES
+from repro.serve.session import PlanCache
 
 
 def main() -> None:
@@ -56,6 +58,21 @@ def main() -> None:
                     default="rlwe")
     ap.add_argument("--corpus", choices=("uniform", "clustered"),
                     default="uniform")
+    ap.add_argument("--ivf-clusters", type=int, default=None, metavar="C",
+                    help="build the index with C-cluster IVF first-stage "
+                         "routing (k-means at build, cluster-aligned row "
+                         "layout; docs/corpus.md); replica slices then "
+                         "land on cluster boundaries")
+    ap.add_argument("--nprobe", default=None, metavar="N|auto",
+                    help="clusters scanned per query (needs "
+                         "--ivf-clusters): an integer, or 'auto' for the "
+                         "planner-derived Theorem-1 bound "
+                         "(plan_nprobe on the session plan's k'); N >= C "
+                         "is bit-identical to the flat scan")
+    ap.add_argument("--ingest", type=int, default=None, metavar="D",
+                    help="after the first wave, ingest D new docs (tail-"
+                         "shard append, epoch advance), refresh/replan, "
+                         "and serve the stream again at the new epoch")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=20.0)
     ap.add_argument("--no-batch", action="store_true",
@@ -92,7 +109,32 @@ def main() -> None:
            else synth.clustered_corpus)
     emb = gen(rng, args.n_docs, args.dim)
     docs = synth.passages(rng, args.n_docs, avg_bytes=256)
-    index = FlatIndex.build(emb, documents=docs)
+    ivf = None
+    if args.ivf_clusters is not None:
+        if args.ivf_clusters < 1:
+            ap.error("--ivf-clusters must be >= 1")
+        ivf = IvfConfig(num_clusters=args.ivf_clusters)
+    elif args.nprobe is not None:
+        ap.error("--nprobe needs --ivf-clusters")
+    index = FlatIndex.build(emb, documents=docs, ivf=ivf)
+    # IVF builds permute rows into cluster-contiguous order, so result
+    # ids live in the index's row space — score recall against that.
+    emb = np.asarray(index.embeddings)
+
+    nprobe = None
+    if args.nprobe is not None:
+        if args.nprobe == "auto":
+            # the Theorem-1 probe bound for this session shape: enough
+            # clusters that the planned k'-row search range is covered
+            plan = PlanCache().get(n=args.dim, N=args.n_docs, k=args.k,
+                                   radius=args.radius)
+            nprobe = plan_nprobe(index.cluster_map, plan.kprime)
+        else:
+            nprobe = int(args.nprobe)
+    if ivf is not None:
+        print(json.dumps({"ivf": {
+            "clusters": index.cluster_map.num_clusters,
+            "nprobe": nprobe if nprobe is not None else "all"}}))
 
     admission = None
     if (args.tenant_rate is not None or args.max_queue is not None
@@ -113,7 +155,8 @@ def main() -> None:
         max_wait_s=args.max_wait_ms / 1e3,
         sequential=args.no_batch,
         trace=args.trace_out is not None,
-        admission=admission)
+        admission=admission,
+        nprobe=nprobe)
     # context manager: close() drains leftovers and stops the sharded
     # cache's background admitter thread on exit (no thread leak across
     # engine lifetimes); the router additionally stops its per-replica
@@ -201,6 +244,50 @@ def main() -> None:
             if "trace" in summary:
                 out["stages"] = summary["trace"]["stages"]
             print(json.dumps(out))
+        if args.ingest is not None and args.ingest >= 1:
+            # streaming ingestion: tail-shard append + epoch advance while
+            # the service stays up, then the same stream at the new epoch
+            rng2 = np.random.default_rng(1)
+            new_emb = gen(rng2, args.ingest, args.dim)
+            new_docs = synth.passages(rng2, args.ingest, avg_bytes=256)
+            t0 = time.monotonic()
+            view = index.ingest(new_emb, documents=new_docs)
+            spans = (engine.replan() if args.replicas > 1
+                     else (engine.refresh_corpus() and None))
+            ingest_ms = (time.monotonic() - t0) * 1e3
+            print(json.dumps({"ingest": {
+                "docs": args.ingest, "epoch": view.epoch,
+                "num_rows": index.num_rows,
+                "ingest_ms": round(ingest_ms, 1),
+                "replanned_slices": spans}}))
+            grown = np.asarray(index.embeddings)
+            for t in range(args.tenants):   # re-plan sessions for the
+                engine.open_session(        # grown corpus + new epoch
+                    f"tenant-{t}@e{view.epoch}", n=args.dim,
+                    N=index.num_rows, k=args.k, radius=args.radius,
+                    backend=args.backend)
+            rid_to_query = {}
+            for i, q in enumerate(queries):
+                rid = engine.submit(
+                    f"tenant-{i % args.tenants}@e{view.epoch}", q,
+                    key=jax.random.PRNGKey(10_000 + i))
+                rid_to_query[rid] = q
+            for res in engine.drain():
+                if not res.ok:
+                    print(json.dumps({
+                        "request": res.request_id, "tenant": res.tenant,
+                        "epoch": view.epoch, "error": res.error}))
+                    continue
+                q = rid_to_query[res.request_id]
+                plain = np.argsort(-(grown @ q), kind="stable")[: args.k]
+                recall = (len(set(res.ids.tolist()) & set(plain.tolist()))
+                          / args.k)
+                print(json.dumps({
+                    "request": res.request_id, "tenant": res.tenant,
+                    "epoch": view.epoch,
+                    "latency_s": round(res.latency_s, 3),
+                    "recall": recall,
+                    "wire_bytes": res.transcript.total_bytes}))
         if args.trace_out is not None:
             n_events = engine.write_trace(args.trace_out)
             print(json.dumps({"trace_out": args.trace_out,

@@ -1,14 +1,29 @@
-"""Device-sharded flat corpus index.
+"""Device-sharded flat corpus index with an epoch-versioned corpus core.
 
 The cloud's N document embeddings are row-sharded across every axis of the
 mesh (the paper's single-host vector DB, scaled out).  Each device owns a
 contiguous row range; global ids are shard_offset + local id.  Documents
 themselves (bytes) stay host-side, keyed by global id.
+
+The corpus is no longer static: `FlatIndex.ingest` appends documents under
+a monotonically increasing *epoch* counter, and every reader pins a
+`CorpusView` — an immutable (epoch, rows) snapshot — so a fixed-epoch
+replay is bit-identical while a background writer appends (appends never
+mutate existing rows; see docs/corpus.md for the full contract).
+
+Optional IVF first stage: `IvfConfig` runs a balanced spherical k-means at
+build time and *permutes* the corpus so each cluster occupies one
+contiguous row range, aligned (via ``align``) to candidate-cache shard
+boundaries — cluster routing then doubles as cache-shard prediction, and
+scanning all clusters reduces bit-identically to the flat scan (the same
+per-slice scan + (score desc, global id asc) merge the replica router
+pins).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Optional, Sequence
 
 import numpy as np
@@ -72,18 +87,142 @@ def plan_row_slices(num_rows: int, num_slices: int, *,
     return list(zip(bounds[:-1], bounds[1:]))
 
 
-@dataclasses.dataclass
-class FlatIndex:
-    """A flat (exact-search) embedding index, optionally mesh-sharded."""
+@dataclasses.dataclass(frozen=True)
+class ClusterMap:
+    """IVF cluster layout over a row-permuted corpus.
 
-    embeddings: jax.Array          # (N, n) unit-norm rows
+    Cluster ``c`` owns the contiguous global-id range
+    ``[starts[c], stops[c])`` — the permutation happens once at index build
+    (`IvfConfig`), so the map is pure metadata: centroids for routing plus
+    the range table.  Ranges are aligned to candidate-cache shard
+    boundaries when the build passed ``align=shard_docs``, making cluster
+    routing a cache-shard predictor.  Tail clusters appended by `ingest`
+    extend the table without touching earlier entries."""
+
+    centroids: np.ndarray          # (C, n) float32 unit rows
+    starts: np.ndarray             # (C,) int64 first global id per cluster
+    stops: np.ndarray              # (C,) int64 one-past-last global id
+
+    @property
+    def num_clusters(self) -> int:
+        return int(self.starts.shape[0])
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return self.stops - self.starts
+
+    def route(self, queries: np.ndarray, nprobe: int) -> np.ndarray:
+        """Top-``nprobe`` clusters per query by centroid score, tie-broken
+        (score desc, cluster id asc) — the same deterministic order every
+        merge in the repo uses."""
+        q = np.asarray(queries, np.float32)
+        scores = q @ self.centroids.T.astype(np.float32)      # (B, C)
+        order = np.lexsort(
+            (np.broadcast_to(np.arange(scores.shape[1]), scores.shape),
+             -scores), axis=1)
+        return order[:, :nprobe]
+
+    def appended(self, centroid: np.ndarray, start: int,
+                 stop: int) -> "ClusterMap":
+        """A new map with one tail cluster ``[start, stop)`` added."""
+        return ClusterMap(
+            centroids=np.concatenate([self.centroids,
+                                      centroid[None].astype(np.float32)]),
+            starts=np.append(self.starts, start),
+            stops=np.append(self.stops, stop))
+
+
+@dataclasses.dataclass(frozen=True)
+class IvfConfig:
+    """Build-time IVF clustering knobs (see `FlatIndex.build`).
+
+    ``align`` snaps cluster boundaries to multiples of itself — pass the
+    candidate cache's ``shard_docs`` so clusters and cache shards share
+    boundaries 1:1 and cluster routing doubles as shard prediction."""
+
+    num_clusters: int
+    iters: int = 8
+    seed: int = 0
+    align: int = 1
+
+
+def _kmeans_cluster_map(emb: np.ndarray, cfg: IvfConfig):
+    """Balanced spherical k-means -> (row permutation, ClusterMap).
+
+    Capacity per cluster comes from `plan_row_slices` (near-equal, aligned
+    ranges), so the permuted layout is exactly the shard/replica placement
+    geometry.  Assignment is deterministic greedy: docs in decreasing
+    best-score order each take their most-preferred cluster with capacity
+    left.  Centroids are recomputed from the final membership."""
+    num_rows, _ = emb.shape
+    c_num = cfg.num_clusters
+    if not (1 <= c_num <= num_rows):
+        raise ValueError(
+            f"num_clusters must be in [1, {num_rows}], got {c_num}")
+    rng = np.random.default_rng(cfg.seed)
+    # k-means++ (D^2) seeding: each next centroid is drawn proportional
+    # to squared cosine distance from the chosen set.  Plain random-row
+    # init routinely drops two seeds into one tight cluster and Lloyd
+    # iterations never recover — the routed scan then splits true
+    # clusters across slices and nprobe=1 recall collapses.
+    centroids = np.empty((c_num, emb.shape[1]), np.float32)
+    centroids[0] = emb[int(rng.integers(num_rows))]
+    best = emb @ centroids[0]
+    for c in range(1, c_num):
+        d2 = np.maximum(1.0 - best, 0.0) ** 2
+        tot = float(d2.sum())
+        pick = (int(rng.choice(num_rows, p=d2 / tot)) if tot > 0
+                else int(rng.integers(num_rows)))
+        centroids[c] = emb[pick]
+        best = np.maximum(best, emb @ centroids[c])
+    for _ in range(max(0, cfg.iters)):
+        assign = (emb @ centroids.T).argmax(axis=1)
+        for c in range(c_num):
+            members = emb[assign == c]
+            if members.shape[0]:
+                m = members.mean(axis=0)
+                centroids[c] = m / max(np.linalg.norm(m), 1e-12)
+    ranges = plan_row_slices(num_rows, c_num, align=cfg.align)
+    caps = [stop - start for start, stop in ranges]
+    scores = emb @ centroids.T
+    pref = np.argsort(-scores, axis=1, kind="stable")
+    groups: list = [[] for _ in range(c_num)]
+    for d in np.argsort(-scores.max(axis=1), kind="stable"):
+        for c in pref[d]:
+            if len(groups[c]) < caps[c]:
+                groups[c].append(int(d))
+                break
+    # original-id order within a cluster keeps the permutation stable
+    groups = [sorted(g) for g in groups]
+    perm = np.concatenate([np.asarray(g, np.int64) for g in groups])
+    for c in range(c_num):
+        m = emb[groups[c]].mean(axis=0)
+        centroids[c] = m / max(np.linalg.norm(m), 1e-12)
+    starts = np.asarray([r[0] for r in ranges], np.int64)
+    stops = np.asarray([r[1] for r in ranges], np.int64)
+    return perm, ClusterMap(centroids=centroids.astype(np.float32),
+                            starts=starts, stops=stops)
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusView:
+    """Immutable snapshot of the corpus at one epoch.
+
+    Holds everything a reader needs to search without touching the live
+    index again: the embedding rows visible at ``epoch``, the cluster map
+    frozen at that epoch, and the mesh placement.  Because `ingest` only
+    ever *appends* rows, a view's arrays are never mutated — replaying a
+    pinned view is bit-identical no matter how far the live corpus has
+    advanced (the serve layer's fixed-epoch replay contract)."""
+
+    epoch: int
+    embeddings: jax.Array          # (num_rows_at_epoch, n)
     mesh: Optional[Mesh] = None
-    row_axes: Optional[tuple] = None   # mesh axes the rows are sharded over
-    documents: Optional[Sequence[bytes]] = None
-    # NTT-domain candidate caches, memoized per RlweParams value so every
-    # RemoteRagCloud over this index shares one build (build-once/serve-many)
-    _cand_caches: dict = dataclasses.field(default_factory=dict, repr=False,
-                                           compare=False)
+    row_axes: Optional[tuple] = None
+    cluster_map: Optional[ClusterMap] = None
+    # per-cluster IndexSlice memo — identity state, not value state
+    _slices: dict = dataclasses.field(default_factory=dict, repr=False,
+                                      compare=False)
 
     @property
     def num_rows(self) -> int:
@@ -93,14 +232,110 @@ class FlatIndex:
     def dim(self) -> int:
         return self.embeddings.shape[1]
 
+    def slice_view(self, start: int, stop: int) -> IndexSlice:
+        """A contiguous row-range view of this snapshot (same contract as
+        `FlatIndex.slice_view`, pinned at this view's epoch)."""
+        if not (0 <= start < stop <= self.num_rows):
+            raise ValueError(
+                f"slice [{start}, {stop}) out of range for "
+                f"{self.num_rows}-row view")
+        return IndexSlice(embeddings=self.embeddings[start:stop],
+                          start=start, stop=stop)
+
+    def cluster_slice(self, c: int) -> IndexSlice:
+        """The `IndexSlice` owned by cluster ``c`` (memoized — repeated
+        routed scans of a hot cluster never re-slice)."""
+        if self.cluster_map is None:
+            raise ValueError("view has no cluster map (built without ivf=)")
+        sl = self._slices.get(int(c))
+        if sl is None:
+            sl = self.slice_view(int(self.cluster_map.starts[c]),
+                                 int(self.cluster_map.stops[c]))
+            self._slices[int(c)] = sl
+        return sl
+
+
+@dataclasses.dataclass
+class FlatIndex:
+    """A flat (exact-search) embedding index, optionally mesh-sharded."""
+
+    embeddings: jax.Array          # (N, n) unit-norm rows
+    mesh: Optional[Mesh] = None
+    row_axes: Optional[tuple] = None   # mesh axes the rows are sharded over
+    documents: Optional[Sequence[bytes]] = None
+    cluster_map: Optional[ClusterMap] = None   # IVF layout (build(ivf=...))
+    # NTT-domain candidate caches, memoized per RlweParams value so every
+    # RemoteRagCloud over this index shares one build (build-once/serve-many)
+    _cand_caches: dict = dataclasses.field(default_factory=dict, repr=False,
+                                           compare=False)
+    # epoch-versioned corpus core: `ingest` appends rows under `_lock` and
+    # bumps `_epoch`; `_epoch_rows[e]` is the row count visible at epoch e,
+    # so `corpus_view(epoch=e)` can snapshot any past epoch (appends never
+    # mutate earlier rows — old views stay bit-identical)
+    _epoch: int = dataclasses.field(default=0, repr=False, compare=False)
+    _epoch_rows: list = dataclasses.field(default=None, repr=False,
+                                          compare=False)
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self._epoch_rows is None:
+            object.__setattr__(self, "_epoch_rows",
+                               [self.embeddings.shape[0]])
+
+    @property
+    def num_rows(self) -> int:
+        return self.embeddings.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.embeddings.shape[1]
+
+    @property
+    def epoch(self) -> int:
+        """Current corpus epoch (0 at build; +1 per `ingest`)."""
+        return self._epoch
+
+    def corpus_view(self, epoch: Optional[int] = None) -> CorpusView:
+        """Pin an immutable `CorpusView` snapshot at ``epoch`` (default:
+        current).  Readers (engines, routers, benches) search the view, not
+        the live index, so a concurrent `ingest` never changes what a
+        pinned reader sees."""
+        with self._lock:
+            e = self._epoch if epoch is None else int(epoch)
+            if not (0 <= e <= self._epoch):
+                raise ValueError(
+                    f"epoch {e} out of range [0, {self._epoch}]")
+            rows = self._epoch_rows[e]
+            cm = self.cluster_map
+            if cm is not None and cm.stops.size and int(cm.stops[-1]) > rows:
+                # drop tail clusters appended after the requested epoch
+                keep = int(np.searchsorted(cm.stops, rows, side="right"))
+                cm = ClusterMap(centroids=cm.centroids[:keep],
+                                starts=cm.starts[:keep],
+                                stops=cm.stops[:keep])
+            return CorpusView(epoch=e, embeddings=self.embeddings[:rows],
+                              mesh=self.mesh, row_axes=self.row_axes,
+                              cluster_map=cm)
+
     @classmethod
     def build(cls, embeddings: np.ndarray, *, mesh: Optional[Mesh] = None,
               row_axes: Optional[tuple] = None,
               documents: Optional[Sequence[bytes]] = None,
-              normalize: bool = True) -> "FlatIndex":
+              normalize: bool = True,
+              ivf: Optional[IvfConfig] = None) -> "FlatIndex":
         emb = np.asarray(embeddings, np.float32)
         if normalize:
             emb = emb / np.linalg.norm(emb, axis=-1, keepdims=True)
+        cluster_map = None
+        if ivf is not None:
+            if mesh is not None:
+                raise ValueError("ivf clustering over a mesh-sharded index "
+                                 "is not supported")
+            perm, cluster_map = _kmeans_cluster_map(emb, ivf)
+            emb = np.ascontiguousarray(emb[perm])
+            if documents is not None:
+                documents = [documents[int(i)] for i in perm]
         if mesh is not None:
             row_axes = row_axes or tuple(mesh.axis_names)
             n_shards = int(np.prod([mesh.shape[a] for a in row_axes]))
@@ -112,8 +347,70 @@ class FlatIndex:
             arr = jax.device_put(jnp.asarray(emb), sharding)
         else:
             arr = jnp.asarray(emb)
+        if documents is not None:
+            documents = list(documents)
         return cls(embeddings=arr, mesh=mesh, row_axes=row_axes,
-                   documents=documents)
+                   documents=documents, cluster_map=cluster_map)
+
+    def ingest(self, embeddings: np.ndarray,
+               documents: Optional[Sequence[bytes]] = None, *,
+               normalize: bool = True) -> CorpusView:
+        """Append documents to the live corpus and advance the epoch.
+
+        The new rows become a contiguous tail range of the id space; every
+        memoized sharded candidate cache gets the new docs' NTT plaintexts
+        packed into a *tail shard* published through its atomic admission
+        path (`ShardedCandidateCache.ingest_tail`), dense caches are
+        dropped for lazy rebuild, and — when the index was built with
+        IVF — the tail range becomes a new cluster whose centroid is the
+        mean of the ingested rows.  Pinned `CorpusView`s from earlier
+        epochs are untouched: appends never mutate existing rows, shards,
+        or cluster ranges.  Returns the post-ingest view."""
+        from repro.crypto import rlwe
+
+        if self.mesh is not None:
+            raise ValueError("streaming ingestion requires an unsharded "
+                             "index (mesh=None)")
+        emb = np.asarray(embeddings, np.float32)
+        if emb.ndim != 2 or emb.shape[1] != self.dim:
+            raise ValueError(
+                f"ingest embeddings must be (m, {self.dim}), got "
+                f"{emb.shape}")
+        if emb.shape[0] == 0:
+            return self.corpus_view()
+        if normalize:
+            emb = emb / np.linalg.norm(emb, axis=-1, keepdims=True)
+        # pack the tail shard for every live params value OUTSIDE the lock
+        # (the expensive pack + forward NTT), like the cache admitter
+        # stages its copy off-lock before the atomic swap
+        packed: dict = {}
+        for (pk, cfg), cache in list(self._cand_caches.items()):
+            if cfg is not None and pk not in packed:
+                packed[pk] = rlwe._pack_corpus_ntt(cache.params, emb)
+        with self._lock:
+            old_rows = self.num_rows
+            new_rows = old_rows + emb.shape[0]
+            epoch = self._epoch + 1
+            for key, cache in list(self._cand_caches.items()):
+                pk, cfg = key
+                if cfg is None:
+                    # dense caches rebuild lazily from the grown corpus
+                    del self._cand_caches[key]
+                else:
+                    cache.ingest_tail(packed[pk], epoch=epoch)
+            self.embeddings = jnp.concatenate(
+                [self.embeddings, jnp.asarray(emb)])
+            if documents is not None:
+                if self.documents is None:
+                    raise ValueError("index was built without documents")
+                self.documents.extend(documents)
+            if self.cluster_map is not None:
+                m = emb.mean(axis=0)
+                self.cluster_map = self.cluster_map.appended(
+                    m / max(np.linalg.norm(m), 1e-12), old_rows, new_rows)
+            self._epoch = epoch
+            self._epoch_rows.append(new_rows)
+        return self.corpus_view()
 
     def fetch_documents(self, ids: Sequence[int]):
         assert self.documents is not None, "index built without documents"
@@ -200,4 +497,5 @@ class FlatIndex:
         return NamedSharding(self.mesh, P(self.row_axes, None, None, None))
 
 
-__all__ = ["FlatIndex", "IndexSlice", "plan_row_slices"]
+__all__ = ["ClusterMap", "CorpusView", "FlatIndex", "IndexSlice",
+           "IvfConfig", "plan_row_slices"]

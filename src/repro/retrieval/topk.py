@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+import numpy as np
+
 from repro.kernels.scoretopk import ops as sops
 from repro.retrieval.index import FlatIndex, IndexSlice
 
@@ -100,10 +102,85 @@ def slice_topk(sl: IndexSlice, queries, k: int, *, tile: int = 2048,
     return SearchResult(out.values, out.indices + sl.start, out.exact)
 
 
+def plan_nprobe(cluster_map, kprime: int, *, slack: float = 4.0) -> int:
+    """Theorem-1 search range -> IVF probe bound.
+
+    The planner guarantees the true top-k lie inside the k' nearest rows
+    of the perturbed query; routing must therefore scan at least enough
+    clusters to contain those k' rows.  Conservatively: the smallest n
+    such that even the n *smallest* clusters hold ``slack * kprime``
+    docs — so whichever clusters the router actually picks, the scanned
+    candidate pool covers the planned search range with ``slack``x
+    headroom.  Clamped to [1, num_clusters]."""
+    if kprime < 1:
+        raise ValueError(f"kprime must be >= 1, got {kprime}")
+    sizes = np.sort(np.asarray(cluster_map.sizes, np.int64))
+    need = min(int(sizes.sum()), int(np.ceil(slack * kprime)))
+    cum = np.cumsum(sizes)
+    n = int(np.searchsorted(cum, need)) + 1
+    return max(1, min(n, int(sizes.size)))
+
+
+def cluster_topk(view, queries, k: int, *, nprobe: Optional[int] = None,
+                 tile: int = 2048, per_tile_k: Optional[int] = None,
+                 use_pallas=None) -> SearchResult:
+    """IVF first-stage routed top-k over a `CorpusView` (or any object
+    with ``cluster_map`` + ``cluster_slice``).
+
+    Each query routes to its ``nprobe`` nearest clusters (centroid score
+    desc, cluster id asc); each routed cluster's contiguous slice runs the
+    same fused per-slice scan as the replica router (`slice_topk`), and
+    per-query results merge by (score desc, global id asc).  With
+    ``nprobe=None`` (or >= the cluster count) every cluster is scanned and
+    the result is bit-identical to the flat `distributed_topk` scan — the
+    differential anchor; smaller ``nprobe`` trades recall outside the
+    routed clusters for skipping their rows entirely (``exact`` is then
+    False).  Use `plan_nprobe` to derive the probe count from the
+    Theorem-1 plan's k'."""
+    cm = view.cluster_map
+    if cm is None:
+        raise ValueError("cluster_topk needs an IVF-built corpus "
+                         "(FlatIndex.build(ivf=...))")
+    num_clusters = cm.num_clusters
+    probe = num_clusters if nprobe is None else max(1, min(int(nprobe),
+                                                           num_clusters))
+    queries = jnp.asarray(queries, jnp.float32)
+    bsz = queries.shape[0]
+    routed = cm.route(np.asarray(queries), probe)            # (B, probe)
+    if np.min(cm.sizes[routed].sum(axis=1)) < k:
+        raise ValueError(
+            f"nprobe={probe} routes fewer than k={k} rows; raise nprobe")
+    vals = [[] for _ in range(bsz)]
+    gids = [[] for _ in range(bsz)]
+    exact = True
+    for c in np.unique(routed):
+        qsel = np.nonzero((routed == int(c)).any(axis=1))[0]
+        out = slice_topk(view.cluster_slice(int(c)), queries[qsel], k,
+                         tile=tile, per_tile_k=per_tile_k,
+                         use_pallas=use_pallas)
+        exact = exact and bool(out.exact)
+        ov = np.asarray(out.values)
+        oi = np.asarray(out.indices)
+        for j, q in enumerate(qsel):
+            vals[int(q)].append(ov[j])
+            gids[int(q)].append(oi[j])
+    mv = np.empty((bsz, k), np.float32)
+    mi = np.empty((bsz, k), np.int32)
+    for b in range(bsz):
+        v = np.concatenate(vals[b])
+        g = np.concatenate(gids[b])
+        order = np.lexsort((g, -v))[:k]     # score desc, global id asc
+        mv[b] = v[order]
+        mi[b] = g[order]
+    return SearchResult(jnp.asarray(mv), jnp.asarray(mi),
+                        jnp.asarray(exact and probe == num_clusters))
+
+
 def distances_from_scores(values):
     """Cosine distance (paper Definition 2) from inner-product scores."""
     return 1.0 - values
 
 
 __all__ = ["SearchResult", "make_sharded_topk", "distributed_topk",
-           "slice_topk", "distances_from_scores"]
+           "slice_topk", "cluster_topk", "plan_nprobe",
+           "distances_from_scores"]

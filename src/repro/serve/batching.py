@@ -35,7 +35,7 @@ from repro.crypto import backend as crypto_backend
 from repro.crypto import paillier_vec
 from repro.crypto import rlwe
 from repro.retrieval.index import FlatIndex
-from repro.retrieval.topk import SearchResult, distributed_topk
+from repro.retrieval.topk import SearchResult, cluster_topk, distributed_topk
 
 
 # ---------------------------------------------------------------------------
@@ -63,9 +63,19 @@ def perturb_batch(keys: Sequence[jax.Array], E: np.ndarray,
 # ---------------------------------------------------------------------------
 
 def topk_batch(index: FlatIndex, perturbed: np.ndarray, kprime: int,
-               *, use_pallas=None) -> SearchResult:
-    """All B perturbed queries through the score-top-k kernel in one call."""
+               *, use_pallas=None, nprobe=None) -> SearchResult:
+    """All B perturbed queries through the score-top-k kernel in one call.
+
+    ``index`` may be a FlatIndex or an epoch-pinned `CorpusView` —
+    `distributed_topk` only reads rows/mesh, so both duck-type.  With
+    ``nprobe`` set (and an IVF-built corpus carrying a ``cluster_map``),
+    the scan routes through `cluster_topk` instead: only the ``nprobe``
+    nearest cluster slices per query are scanned.  ``nprobe=None`` keeps
+    the exact flat scan."""
     q = jnp.asarray(perturbed, jnp.float32)
+    if nprobe is not None and getattr(index, "cluster_map", None) is not None:
+        return cluster_topk(index, q, kprime, nprobe=nprobe,
+                            use_pallas=use_pallas)
     return distributed_topk(index, q, kprime, use_pallas=use_pallas)
 
 

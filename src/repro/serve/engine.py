@@ -44,6 +44,7 @@ import itertools
 import secrets
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -98,6 +99,20 @@ class EngineConfig:
     # installs no admission machinery at all — submit/step behave
     # bit-identically to the uncontrolled engine.
     admission: Optional["adm.AdmissionConfig"] = None
+    # IVF first-stage routing: number of cluster slices each query's
+    # top-k' scan probes.  Needs an index built with
+    # ``FlatIndex.build(ivf=...)`` (otherwise the flat scan runs and this
+    # is ignored).  None = exact flat scan; nprobe >= the cluster count
+    # is bit-identical to the flat scan (the differential anchor).  Use
+    # `repro.retrieval.topk.plan_nprobe` to derive a bound from the
+    # Theorem-1 plan's k'.
+    nprobe: Optional[int] = None
+    # True (default): quarantine solo retries run on a background retry
+    # lane (a single worker thread) so a faulty lane's retry wall never
+    # costs a healthy batch's p99 — retry results surface from a later
+    # step()/drain(), which barriers on retry completion.  False restores
+    # the inline retry on the dispatch thread.
+    retry_lane: bool = True
 
 
 @dataclasses.dataclass
@@ -213,6 +228,11 @@ class ServeEngine:
             use_pallas=self.config.use_pallas,
             use_candidate_cache=self.config.use_candidate_cache,
             cache_config=self.config.cache_config)
+        # pin the corpus at construction: every default-path search (and
+        # the epoch stamp new sessions plan against) reads this frozen
+        # snapshot, so a concurrent ingest advancing the index's epoch
+        # never changes what this engine serves until `refresh_corpus`
+        self.view = index.corpus_view()
         # an explicit tracer wins (tests inject one built on a fake
         # clock); otherwise EngineConfig.trace selects a real tracer on
         # *the engine's own clock* — queue-wait spans are computed from
@@ -255,12 +275,37 @@ class ServeEngine:
         # at submit time) wait here until the next step()/drain() returns
         # them — a displaced request is resolved, never dropped
         self._shed_results: List[ServeResult] = []
+        # background quarantine retry lane (EngineConfig.retry_lane): one
+        # worker thread, spawned lazily on the first poisoned lane.
+        # Finished retries buffer in _retry_results (like _shed_results)
+        # until the next step()/drain(); _retry_inflight counts submitted-
+        # but-unfinished retries and _retry_cv (on _qlock) lets drain()
+        # barrier on them — every request still gets exactly one result.
+        self._retry_pool: Optional[ThreadPoolExecutor] = None
+        self._retry_results: List[ServeResult] = []
+        self._retry_inflight = 0
+        self._retry_cv = threading.Condition(self._qlock)
         self._closed = False
 
     # -- session + queue ----------------------------------------------------
 
     def open_session(self, tenant: str, **session_kwargs) -> Session:
+        # plans are stamped with the epoch of the corpus they were planned
+        # against (see serve.session.PlanCache); callers may still pin an
+        # explicit epoch for replay setups
+        session_kwargs.setdefault("epoch", self.view.epoch)
         return self.sessions.open(tenant, **session_kwargs)
+
+    def refresh_corpus(self, epoch: Optional[int] = None):
+        """Advance (or pin) this engine's corpus view to ``epoch`` (default:
+        the index's current epoch) after an ingest.  Sessions opened
+        afterwards plan against — and are stamped with — the refreshed
+        corpus; already-open sessions keep their plans (the corpus only
+        grows, so an old plan's Theorem-1 bound stays valid for the rows
+        it was planned over).  Call between batches: an engine mid-dispatch
+        keeps scanning the view it started with."""
+        self.view = self.cloud.index.corpus_view(epoch)
+        return self.view
 
     def submit(self, tenant: str, embedding: np.ndarray,
                key: Optional[jax.Array] = None, *,
@@ -440,6 +485,9 @@ class ServeEngine:
             return []
         out = self.drain(shed=shed_pending)
         self._closed = True
+        if self._retry_pool is not None:   # idle after the drain barrier
+            self._retry_pool.shutdown(wait=True)
+            self._retry_pool = None
         cache = self.cloud.index.peek_candidate_cache(
             self.cloud.rlwe_params, self.cloud.cache_config)
         if isinstance(cache, rlwe.ShardedCandidateCache):
@@ -482,6 +530,9 @@ class ServeEngine:
             shed: List[ServeResult] = []
             if self._shed_results:
                 shed, self._shed_results = self._shed_results, []
+            if self._retry_results:     # finished background retries
+                shed.extend(self._retry_results)
+                self._retry_results = []
             if self.admission is not None and cfg.admission.shed_deadlines:
                 shed.extend(self._shed_expired(now))
             if self._refill:           # credits live one batching window
@@ -585,6 +636,15 @@ class ServeEngine:
                 self._refill.clear()
         while self.pending:
             out.extend(self.step(force=True))
+        # retry-lane barrier: poisoned lanes handed to the background
+        # retry lane during the flush above (or by earlier steps) must
+        # resolve before drain returns — every submit gets one result
+        with self._retry_cv:
+            while self._retry_inflight:
+                self._retry_cv.wait()
+            if self._retry_results:
+                out.extend(self._retry_results)
+                self._retry_results = []
         return sorted(out, key=lambda r: r.request_id)
 
     def _dispatch(self, batch: Sequence[ServeRequest]) -> List[ServeResult]:
@@ -651,7 +711,14 @@ class ServeEngine:
         solo on the sequential path (`EngineConfig.max_retries` attempts,
         latency still measured from the original submit), then returned as
         an error result.  Healthy lanes are untouched — no re-encryption,
-        no re-dispatch, no double-counted metrics."""
+        no re-dispatch, no double-counted metrics.
+
+        With `EngineConfig.retry_lane` (the default) the solo retries are
+        handed to the background retry lane instead of running here on the
+        dispatch thread — this call then returns nothing and the lane's
+        result surfaces from a later step()/drain() (which barriers on
+        retry completion), so a faulty lane's retry wall stops costing its
+        next healthy batch's p99."""
         out: List[ServeResult] = []
         self.metrics.record_quarantined(len(poisoned))
         tr = self.tracer
@@ -659,36 +726,81 @@ class ServeEngine:
             tr.event("quarantine", track=f"request-{req.request_id}",
                      request_id=req.request_id, tenant=req.tenant,
                      error_type=type(err).__name__)
-            res = None
-            while req.retries < self.config.max_retries:
-                req.retries += 1
-                self.metrics.record_retries(1)
-                try:
-                    with tr.span("retry", track=f"request-{req.request_id}",
-                                 request_id=req.request_id,
-                                 tenant=req.tenant, attempt=req.retries):
-                        res = self._run_one(req)
-                except Exception as e:  # noqa: BLE001 — retry keeps its err
-                    err = e
-                    continue
-                res.quarantined = True
-                self.metrics.record_quarantined_retry_ok(req.tenant)
-                # recorded exactly once, here (the failed batched attempt
-                # recorded nothing for this lane)
-                self.metrics.record(req.tenant, latency_s=res.latency_s,
-                                    batch_size=res.batch_size,
-                                    transcript=res.transcript,
-                                    deadline_s=req.deadline_s)
-                break
-            if res is None:
-                self.metrics.record_error(req.tenant)
-                res = ServeResult(
-                    request_id=req.request_id, tenant=req.tenant, docs=[],
-                    ids=np.empty(0, np.int64), transcript=None,
-                    latency_s=self._clock() - req.t_enqueue,
-                    batch_size=batch_size, error=repr(err), quarantined=True)
-            out.append(res)
+            if self.config.retry_lane:
+                self._retry_submit(req, err, batch_size)
+            else:
+                out.append(self._retry_solo(req, err, batch_size))
         return out
+
+    def _retry_solo(self, req: ServeRequest, err: Exception,
+                    batch_size: int) -> ServeResult:
+        """One quarantined lane's solo retries: sequential-path attempts
+        until one completes or `max_retries` is spent, then an error
+        result.  Runs on the dispatch thread (retry_lane=False) or the
+        retry-lane worker — the metrics are internally locked and the
+        sequential path takes the tenant's session lock, so both homes are
+        safe."""
+        tr = self.tracer
+        res = None
+        while req.retries < self.config.max_retries:
+            req.retries += 1
+            self.metrics.record_retries(1)
+            try:
+                with tr.span("retry", track=f"request-{req.request_id}",
+                             request_id=req.request_id,
+                             tenant=req.tenant, attempt=req.retries):
+                    res = self._run_one(req)
+            except Exception as e:  # noqa: BLE001 — retry keeps its err
+                err = e
+                continue
+            res.quarantined = True
+            self.metrics.record_quarantined_retry_ok(req.tenant)
+            # recorded exactly once, here (the failed batched attempt
+            # recorded nothing for this lane)
+            self.metrics.record(req.tenant, latency_s=res.latency_s,
+                                batch_size=res.batch_size,
+                                transcript=res.transcript,
+                                deadline_s=req.deadline_s)
+            break
+        if res is None:
+            self.metrics.record_error(req.tenant)
+            res = ServeResult(
+                request_id=req.request_id, tenant=req.tenant, docs=[],
+                ids=np.empty(0, np.int64), transcript=None,
+                latency_s=self._clock() - req.t_enqueue,
+                batch_size=batch_size, error=repr(err), quarantined=True)
+        return res
+
+    def _retry_submit(self, req: ServeRequest, err: Exception,
+                      batch_size: int) -> None:
+        """Hand one poisoned lane to the background retry lane (spawned
+        lazily here — an engine that never quarantines never starts the
+        thread).  The inflight count is raised *before* the submit so a
+        drain() racing this dispatch already sees the retry coming."""
+        with self._qlock:
+            if self._retry_pool is None:
+                self._retry_pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="retry-lane")
+            self._retry_inflight += 1
+        self._retry_pool.submit(self._retry_worker, req, err, batch_size)
+
+    def _retry_worker(self, req: ServeRequest, err: Exception,
+                      batch_size: int) -> None:
+        try:
+            res = self._retry_solo(req, err, batch_size)
+        except BaseException as e:  # noqa: BLE001 — zero-loss contract
+            # _retry_solo resolves protocol failures itself; this only
+            # fires on harness-level faults, and the request still gets
+            # exactly one (error) result
+            res = ServeResult(
+                request_id=req.request_id, tenant=req.tenant, docs=[],
+                ids=np.empty(0, np.int64), transcript=None,
+                latency_s=self._clock() - req.t_enqueue,
+                batch_size=batch_size, error=repr(e), quarantined=True)
+        with self._retry_cv:
+            self._retry_results.append(res)
+            self._retry_inflight -= 1
+            self._retry_cv.notify_all()
 
     def _search_topk(self, perturbed: np.ndarray, kprime: int) -> np.ndarray:
         """Module 2a, cloud half: the (B, k') candidate-id block for a
@@ -698,12 +810,17 @@ class ServeEngine:
         corpus slice and merges — by contract bit-identical to the full
         scan, which the differential harness in tests/test_router.py pins.
         Must stay a pure function of (perturbed, kprime): `_bisect_lanes`
-        re-runs arbitrary row subsets through it for fault attribution."""
+        re-runs arbitrary row subsets through it for fault attribution.
+        The default scan reads the engine's pinned `CorpusView` (not the
+        live index), so a concurrent ingest cannot shift candidate ids
+        mid-epoch; with `EngineConfig.nprobe` set on an IVF-built corpus
+        it routes through the clustered first stage instead."""
         if self._searcher is not None:
             return np.asarray(self._searcher(perturbed, kprime))
         return np.asarray(batching.topk_batch(
-            self.cloud.index, perturbed, kprime,
-            use_pallas=self.config.use_pallas).indices)
+            self.view, perturbed, kprime,
+            use_pallas=self.config.use_pallas,
+            nprobe=self.config.nprobe).indices)
 
     # -- sequential comparison path ----------------------------------------
 
@@ -718,11 +835,14 @@ class ServeEngine:
             # top-k' goes through this engine's searcher, not a whole-index
             # scan: under a router that is the per-slice scan + merge, so a
             # quarantined lane's solo retry stays bit-identical to the
-            # scatter-gather path by construction
-            docs, ids, tr = protocol.run_remoterag(
-                sess.user, self.cloud, req.embedding, req.key,
-                topk_fn=self._search_topk)
-        sess.num_requests += 1
+            # scatter-gather path by construction.  The session lock keeps
+            # the tenant's rng stream serialized against a concurrent
+            # dispatch batch when this runs on the retry lane.
+            with sess.lock:
+                docs, ids, tr = protocol.run_remoterag(
+                    sess.user, self.cloud, req.embedding, req.key,
+                    topk_fn=self._search_topk)
+                sess.num_requests += 1
         return ServeResult(request_id=req.request_id, tenant=req.tenant,
                            docs=docs, ids=ids, transcript=tr,
                            latency_s=self._clock() - req.t_enqueue,
@@ -831,7 +951,8 @@ class ServeEngine:
             with tr.span("encrypt", track=f"request-{req.request_id}",
                          request_id=req.request_id, batch_id=bid,
                          tenant=req.tenant, lane=lane):
-                return users[lane].encrypt_query(req.embedding)
+                with sessions[lane].lock:   # rng draw vs. the retry lane
+                    return users[lane].encrypt_query(req.embedding)
 
         enc, bad = _lane_stage(encrypt, alive)
         drop(bad)
@@ -897,11 +1018,12 @@ class ServeEngine:
             with tr.span("finish", track=f"request-{req.request_id}",
                          request_id=req.request_id, batch_id=bid,
                          tenant=req.tenant, lane=lane):
-                positions = user.positions_from_scores(
-                    scores[lane], len(reply.candidate_ids))
-                docs, ids, transcript = protocol.finish_request(
-                    user, self.cloud, wire[lane], reply, positions)
-            sessions[lane].num_requests += 1
+                with sessions[lane].lock:   # OT draws rng, see Session.lock
+                    positions = user.positions_from_scores(
+                        scores[lane], len(reply.candidate_ids))
+                    docs, ids, transcript = protocol.finish_request(
+                        user, self.cloud, wire[lane], reply, positions)
+                    sessions[lane].num_requests += 1
             return ServeResult(
                 request_id=req.request_id,
                 tenant=req.tenant, docs=docs, ids=ids,

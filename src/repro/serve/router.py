@@ -260,13 +260,11 @@ class ReplicaRouter:
         self._scan_hook: Optional[Callable[[int], None]] = None
 
         ecfg = self.config.engine
-        align = 1
-        if ecfg.cache_config is not None:
-            shard_docs = ecfg.cache_config.resolve_shard_docs(index.num_rows)
-            if shard_docs * self.config.num_replicas <= index.num_rows:
-                align = shard_docs
-        spans = plan_row_slices(index.num_rows, self.config.num_replicas,
-                                align=align)
+        # pin the corpus at construction, like each engine does: slice
+        # ownership is planned against this frozen view and only moves
+        # when `replan` advances it after an ingest
+        self.view = index.corpus_view()
+        spans = self._plan_spans(self.view)
         self.replicas: List[_Replica] = []
         for r, (start, stop) in enumerate(spans):
             tracer = None
@@ -279,11 +277,74 @@ class ReplicaRouter:
                 searcher=_ScatterSearcher(self, r))
             self.replicas.append(_Replica(
                 replica_id=r, engine=engine,
-                sl=index.slice_view(start, stop),
+                sl=self.view.slice_view(start, stop),
                 step_pool=ThreadPoolExecutor(
                     1, thread_name_prefix=f"replica{r}-step"),
                 scan_pool=ThreadPoolExecutor(
                     1, thread_name_prefix=f"replica{r}-scan")))
+
+    def _plan_spans(self, view) -> List[Tuple[int, int]]:
+        """Slice ownership for ``view``'s rows.  With an IVF-built corpus
+        the cuts land on *cluster* boundaries nearest an even row split —
+        each replica owns whole clusters, so first-stage routing doubles
+        as replica prediction, and (clusters being built shard-aligned)
+        slices still share candidate-cache shard boundaries.  Without a
+        cluster map this is the historical cache-aligned even split."""
+        num_rows = view.num_rows
+        nrep = self.config.num_replicas
+        cm = view.cluster_map
+        if cm is not None and cm.num_clusters >= nrep:
+            stops = [int(s) for s in cm.stops]
+            if stops[-1] != num_rows:       # defensive: cover a ragged tail
+                stops.append(num_rows)
+            # choose nrep-1 strictly increasing cluster boundaries, each
+            # nearest its even-split target; stops[-1] (== num_rows) is
+            # never a cut, so every replica gets at least one cluster
+            cuts: List[int] = []
+            prev = -1
+            for r in range(1, nrep):
+                target = num_rows * r / nrep
+                lo = prev + 1
+                hi = len(stops) - 2 - (nrep - 1 - r)
+                j = min(range(lo, hi + 1),
+                        key=lambda i: abs(stops[i] - target))
+                cuts.append(stops[j])
+                prev = j
+            edges = [0] + cuts + [num_rows]
+            return list(zip(edges[:-1], edges[1:]))
+        ecfg = self.config.engine
+        align = 1
+        if ecfg.cache_config is not None:
+            shard_docs = ecfg.cache_config.resolve_shard_docs(num_rows)
+            if shard_docs * nrep <= num_rows:
+                align = shard_docs
+        return plan_row_slices(num_rows, nrep, align=align)
+
+    def replan(self, epoch: Optional[int] = None) -> List[List[int]]:
+        """Re-plan replica slice ownership from the corpus cluster map
+        after an epoch advance (default: the index's current epoch).
+
+        Slices swap atomically under the router lock and every healthy
+        replica's engine re-pins its corpus view, so subsequent scatters
+        cover the new rows and new sessions plan against (and are epoch-
+        stamped with) the grown corpus.  The per-slice scan + (score desc,
+        global id asc) merge is partition-independent, so results stay
+        bit-identical to a single whole-corpus engine at the same epoch —
+        the invariant the differential harness pins.  Call while quiesced
+        (between step/drain calls): an engine mid-dispatch keeps the view
+        it started with.  Returns the new ``[start, stop)`` spans."""
+        if self._closed:
+            raise RuntimeError("router is closed; cannot replan")
+        view = self.index.corpus_view(epoch)
+        spans = self._plan_spans(view)
+        with self._lock:
+            self.view = view
+            for h, (start, stop) in zip(self.replicas, spans):
+                h.sl = view.slice_view(start, stop)
+        for h in self.replicas:
+            if not h.quarantined:
+                h.engine.refresh_corpus(view.epoch)
+        return [[start, stop] for start, stop in spans]
 
     # -- sessions + submit ---------------------------------------------------
 
@@ -292,6 +353,10 @@ class ReplicaRouter:
         return len(self.replicas)
 
     def open_session(self, tenant: str, **session_kwargs) -> Session:
+        # same epoch stamp as ServeEngine.open_session, from the router's
+        # pinned view — a single engine and a router fed the same opens
+        # therefore hit identical plan-cache keys
+        session_kwargs.setdefault("epoch", self.view.epoch)
         return self.sessions.open(tenant, **session_kwargs)
 
     def home_replica(self, tenant: str) -> int:
@@ -514,6 +579,7 @@ class ReplicaRouter:
         """Router counters + per-replica engine summaries (JSON-ready)."""
         return {
             "router": self.metrics.summary(),
+            "epoch": self.view.epoch,
             "slices": [[h.sl.start, h.sl.stop] for h in self.replicas],
             "quarantined": {
                 str(h.replica_id): h.quarantine_reason

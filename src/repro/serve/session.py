@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 import time
 from typing import Dict, Optional
 
@@ -24,7 +25,13 @@ from repro.crypto import rlwe
 class PlanCache:
     """Memoize planner.plan on (n, N, k, eps/radius, plan kwargs) — exactly
     the arguments the planner consumes, so tenants that differ only in
-    crypto backend share one plan."""
+    crypto backend share one plan.
+
+    Entries are additionally stamped with the corpus ``epoch`` they were
+    planned against: N (the Theorem-1 corpus size) changes when ingestion
+    advances the epoch, and the stamp makes a stale plan unreachable even
+    for a hypothetical ingest that leaves N unchanged — the serve layer
+    passes its pinned `CorpusView.epoch` here."""
 
     def __init__(self) -> None:
         self._plans: Dict[tuple, ProtocolPlan] = {}
@@ -32,9 +39,10 @@ class PlanCache:
         self.misses = 0
 
     def get(self, *, n: int, N: int, k: int, eps: Optional[float] = None,
-            radius: Optional[float] = None,
+            radius: Optional[float] = None, epoch: int = 0,
             **plan_kwargs) -> ProtocolPlan:
-        key = (n, N, k, eps, radius, tuple(sorted(plan_kwargs.items())))
+        key = (n, N, k, eps, radius, epoch,
+               tuple(sorted(plan_kwargs.items())))
         plan = self._plans.get(key)
         if plan is not None:
             self.hits += 1
@@ -66,6 +74,13 @@ class Session:
     created_at: float
     knobs: tuple = ()              # the open() arguments that built this
     num_requests: int = 0
+    # serializes the tenant's rng-consuming protocol stages (query
+    # encryption, OT retrieval): the engine's background retry lane may
+    # run a quarantined request for this tenant concurrently with a
+    # dispatch batch, and the numpy Generator must advance one draw at a
+    # time to keep streams well-defined
+    lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     @property
     def backend(self) -> str:
@@ -105,12 +120,14 @@ class SessionManager:
     def open(self, tenant: str, *, n: int, N: int, k: int,
              eps: Optional[float] = None, radius: Optional[float] = None,
              backend: str = "rlwe", seed: Optional[int] = None,
-             paillier_bits: int = 512,
+             paillier_bits: int = 512, epoch: int = 0,
              plan_kwargs: Optional[dict] = None) -> Session:
         """Create (or return) the tenant's session.  Keygen happens here,
         once; the plan comes from the shared cache.  Re-opening an existing
         tenant with *different* knobs is an error — the old plan would keep
-        being used silently (e.g. a stale, weaker privacy budget)."""
+        being used silently (e.g. a stale, weaker privacy budget).
+        ``epoch`` stamps the plan-cache entry with the corpus epoch the
+        caller planned against (see `PlanCache`)."""
         knobs = (n, N, k, eps, radius, backend, seed, paillier_bits,
                  tuple(sorted((plan_kwargs or {}).items())))
         if tenant in self._sessions:
@@ -121,7 +138,7 @@ class SessionManager:
                     f"{sess.knobs}; close/rename the session to change them")
             return sess
         plan = self.plan_cache.get(n=n, N=N, k=k, eps=eps, radius=radius,
-                                   **(plan_kwargs or {}))
+                                   epoch=epoch, **(plan_kwargs or {}))
         if seed is None and self.deterministic_seeds:
             seed = tenant_seed(tenant)
         rng = np.random.default_rng(seed)  # seed None -> OS entropy

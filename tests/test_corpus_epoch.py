@@ -1,0 +1,488 @@
+"""Epoch-versioned corpus core + IVF first-stage routing: the acceptance
+harness of the dynamic-corpus refactor.
+
+Load-bearing invariants pinned here:
+
+  * IVF with ``nprobe == num_clusters`` is bit-identical to the flat scan
+    (values, ids, tie order) — at the retrieval layer and through the full
+    protocol, swept over batch {1,3,8} x {rlwe,paillier} x replicas
+    {1,2,4}.
+  * A fixed-epoch replay returns pre-ingestion bits even while (or after)
+    a writer appends — engines/routers pin their `CorpusView` at
+    construction, so ingestion under live traffic never shifts an open
+    epoch's results.
+  * A mid-ingestion gather never observes a half-swapped tail shard
+    (`ShardedCandidateCache.ingest_tail` publishes atomically).
+  * Router slice re-plan on epoch advance preserves the (score desc,
+    global id asc) merge order — post-replan scatter-gather equals a
+    whole-corpus scan of the grown corpus.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.crypto import rlwe
+from repro.data import synth
+from repro.retrieval.index import ClusterMap, FlatIndex, IvfConfig
+from repro.retrieval.topk import cluster_topk, distributed_topk, plan_nprobe
+from repro.serve import (
+    EngineConfig,
+    ReplicaRouter,
+    RouterConfig,
+    ServeEngine,
+    SessionManager,
+)
+from repro.serve.session import PlanCache
+
+N_DOCS, DIM, K = 600, 64, 4
+N_NEW = 72          # ingested tail (multiple of nothing in particular)
+N_REQ = 6
+NUM_CLUSTERS = 6
+TENANTS = ("alice", "bob", "carol")
+PARAMS = rlwe.RlweParams(n_poly=1024, chunk=512)
+SEED = 0
+
+
+def _corpus(rng):
+    """Unit corpus with planted duplicate rows: after the IVF build
+    permutation the copies land wherever k-means puts them, so identical
+    scores surface across cluster (and replica-slice) boundaries and the
+    merge tie-break is exercised for real."""
+    emb = synth.uniform_corpus(rng, N_DOCS, DIM)
+    emb[450] = emb[10]
+    emb[300] = emb[10]
+    return emb
+
+
+def _build(rng):
+    emb = _corpus(rng)
+    docs = [f"passage-{i}".encode() for i in range(N_DOCS)]
+    return FlatIndex.build(emb, documents=docs, normalize=False,
+                           ivf=IvfConfig(num_clusters=NUM_CLUSTERS,
+                                         seed=SEED))
+
+
+def _tail(rng):
+    emb = synth.uniform_corpus(rng, N_NEW, DIM)
+    return emb, [f"ingested-{i}".encode() for i in range(N_NEW)]
+
+
+@pytest.fixture(scope="module")
+def queries():
+    rng = np.random.default_rng(SEED + 1)
+    emb = _corpus(np.random.default_rng(SEED))
+    q = synth.queries_near_corpus(rng, emb, N_REQ)
+    q[2] = emb[10]          # aim one query straight at the duplicated row
+    return q
+
+
+@pytest.fixture(scope="module")
+def static_index():
+    """Shared read-only IVF index for the retrieval-layer differentials
+    (the protocol tests build fresh indexes — they ingest)."""
+    return _build(np.random.default_rng(SEED))
+
+
+# ---------------------------------------------------------------------------
+# retrieval layer
+# ---------------------------------------------------------------------------
+
+def test_ivf_build_geometry(static_index):
+    cm = static_index.cluster_map
+    assert cm is not None
+    assert cm.num_clusters == NUM_CLUSTERS
+    assert int(cm.sizes.sum()) == N_DOCS
+    assert cm.starts[0] == 0 and cm.stops[-1] == N_DOCS
+    # clusters tile the row space contiguously (starts == previous stops)
+    assert np.array_equal(cm.starts[1:], cm.stops[:-1])
+    assert static_index.epoch == 0
+    assert static_index.corpus_view().cluster_map is cm
+
+
+def test_ivf_shard_alignment():
+    """IVF clusters built with ``align=shard_docs`` share boundaries with
+    candidate-cache shards, so cluster routing doubles as shard
+    prediction."""
+    shard_docs = 50
+    idx = FlatIndex.build(
+        _corpus(np.random.default_rng(SEED)), normalize=False,
+        ivf=IvfConfig(num_clusters=NUM_CLUSTERS, align=shard_docs))
+    cm = idx.cluster_map
+    assert all(int(s) % shard_docs == 0 for s in cm.starts)
+
+
+def test_nprobe_all_is_bit_identical_to_flat_scan(static_index, queries):
+    view = static_index.corpus_view()
+    flat = distributed_topk(static_index, queries, 2 * K)
+    for nprobe in (None, NUM_CLUSTERS, NUM_CLUSTERS + 3):
+        routed = cluster_topk(view, queries, 2 * K, nprobe=nprobe)
+        assert np.array_equal(np.asarray(routed.indices),
+                              np.asarray(flat.indices))
+        assert np.array_equal(np.asarray(routed.values),
+                              np.asarray(flat.values))
+        assert bool(routed.exact)
+
+
+def test_small_nprobe_recall_at_planned_bound():
+    """On a clustered corpus (the workload IVF exists for) the planner-
+    derived nprobe recovers the flat scan's top-k exactly, while ``exact``
+    honestly reports the skipped rows."""
+    rng = np.random.default_rng(SEED)
+    centers = rng.normal(size=(NUM_CLUSTERS, DIM))
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    emb = np.repeat(centers, N_DOCS // NUM_CLUSTERS, axis=0)
+    emb = emb + 0.05 * rng.normal(size=emb.shape)
+    emb = (emb / np.linalg.norm(emb, axis=1, keepdims=True)).astype(
+        np.float32)
+    idx = FlatIndex.build(emb, normalize=False,
+                          ivf=IvfConfig(num_clusters=NUM_CLUSTERS,
+                                        seed=SEED))
+    view = idx.corpus_view()
+    q = synth.queries_near_corpus(np.random.default_rng(SEED + 1), emb,
+                                  N_REQ).astype(np.float32)
+    nprobe = plan_nprobe(view.cluster_map, 2 * K)
+    assert 1 <= nprobe < NUM_CLUSTERS
+    routed = cluster_topk(view, q, K, nprobe=nprobe)
+    assert not bool(routed.exact)
+    flat = distributed_topk(idx, q, K)
+    assert np.array_equal(np.asarray(routed.indices),
+                          np.asarray(flat.indices))    # recall@k == 1.0
+
+
+def test_plan_nprobe_bounds(static_index):
+    cm = static_index.cluster_map
+    assert plan_nprobe(cm, 1) >= 1
+    assert plan_nprobe(cm, N_DOCS) == NUM_CLUSTERS     # need everything
+    assert plan_nprobe(cm, 1, slack=1e9) == NUM_CLUSTERS
+    with pytest.raises(ValueError):
+        plan_nprobe(cm, 0)
+
+
+def test_cluster_topk_requires_ivf():
+    idx = FlatIndex.build(_corpus(np.random.default_rng(SEED)),
+                          normalize=False)
+    with pytest.raises(ValueError, match="IVF"):
+        cluster_topk(idx.corpus_view(), np.zeros((1, DIM), np.float32), K)
+
+
+def test_ingest_advances_epoch_and_appends_tail_cluster(queries):
+    idx = _build(np.random.default_rng(SEED))
+    new_emb, new_docs = _tail(np.random.default_rng(SEED + 2))
+    before = distributed_topk(idx, queries, 2 * K)
+    v1 = idx.ingest(new_emb, documents=new_docs, normalize=False)
+    assert (idx.epoch, v1.epoch) == (1, 1)
+    assert v1.num_rows == N_DOCS + N_NEW
+    assert v1.cluster_map.num_clusters == NUM_CLUSTERS + 1
+    assert int(v1.cluster_map.starts[-1]) == N_DOCS
+    assert idx.documents[N_DOCS:] == new_docs
+    # epoch-0 view: old geometry, old bits
+    v0 = idx.corpus_view(0)
+    assert v0.num_rows == N_DOCS
+    assert v0.cluster_map.num_clusters == NUM_CLUSTERS
+    replay = cluster_topk(v0, queries, 2 * K)
+    assert np.array_equal(np.asarray(replay.indices),
+                          np.asarray(before.indices))
+    # grown corpus: routed == flat over all N_DOCS + N_NEW rows
+    after_flat = distributed_topk(idx, queries, 2 * K)
+    after_routed = cluster_topk(v1, queries, 2 * K)
+    assert np.array_equal(np.asarray(after_routed.indices),
+                          np.asarray(after_flat.indices))
+
+
+def test_fixed_epoch_replay_under_concurrent_ingestion(queries):
+    """A pinned epoch-0 view replays identical bits while a writer thread
+    appends tail after tail."""
+    idx = _build(np.random.default_rng(SEED))
+    v0 = idx.corpus_view()
+    want = np.asarray(cluster_topk(v0, queries, 2 * K).indices)
+    stop = threading.Event()
+    errs = []
+
+    def writer():
+        rng = np.random.default_rng(SEED + 3)
+        try:
+            for _ in range(6):
+                emb, docs = _tail(rng)
+                idx.ingest(emb, documents=docs, normalize=False)
+        except Exception as e:          # noqa: BLE001 — surfaced below
+            errs.append(e)
+        finally:
+            stop.set()
+
+    t = threading.Thread(target=writer)
+    t.start()
+    rounds = 0
+    while not stop.is_set() or rounds == 0:
+        got = np.asarray(cluster_topk(v0, queries, 2 * K).indices)
+        assert np.array_equal(got, want), "fixed-epoch replay drifted"
+        rounds += 1
+    t.join()
+    assert not errs
+    assert idx.epoch == 6
+    # and the pinned view still replays after all six ingests landed
+    got = np.asarray(cluster_topk(idx.corpus_view(0), queries,
+                                  2 * K).indices)
+    assert np.array_equal(got, want)
+
+
+def test_ingest_validation():
+    idx = _build(np.random.default_rng(SEED))
+    with pytest.raises(ValueError):
+        idx.ingest(np.zeros((3, DIM + 1), np.float32))      # dim mismatch
+    docless = FlatIndex.build(_corpus(np.random.default_rng(SEED)),
+                              normalize=False)
+    with pytest.raises(ValueError):
+        docless.ingest(np.zeros((3, DIM), np.float32),
+                       documents=[b"a", b"b", b"c"])
+
+
+# ---------------------------------------------------------------------------
+# sharded candidate cache: atomic tail-shard swap
+# ---------------------------------------------------------------------------
+
+def _sharded_cache(emb, shard_docs=64):
+    dense = rlwe.build_candidate_cache(PARAMS, emb)
+    return rlwe.shard_candidate_cache(
+        dense, rlwe.CandidateCacheConfig(shard_docs=shard_docs))
+
+
+def test_ingest_tail_bits_and_epoch():
+    rng = np.random.default_rng(SEED)
+    emb = _corpus(rng)
+    new_emb, _ = _tail(rng)
+    sh = _sharded_cache(emb)
+    ids = np.array([[0, 5, 599], [123, 64, 7]])
+    before = np.asarray(sh.gather(ids))
+    sh.ingest_tail(rlwe._pack_corpus_ntt(PARAMS, new_emb), epoch=1)
+    assert (sh.epoch, sh.num_docs) == (1, N_DOCS + N_NEW)
+    assert sh.stats()["ingests"] == 1
+    # old ids: bit-identical to pre-ingest
+    assert np.array_equal(np.asarray(sh.gather(ids)), before)
+    # new ids: bit-identical to a cache built from the full corpus
+    full = _sharded_cache(np.concatenate([emb, new_emb]))
+    tail_ids = np.array([[N_DOCS, N_DOCS + N_NEW - 1, 60]])
+    assert np.array_equal(np.asarray(sh.gather(tail_ids)),
+                          np.asarray(full.gather(tail_ids)))
+    with pytest.raises(ValueError, match="stale"):
+        sh.ingest_tail(rlwe._pack_corpus_ntt(PARAMS, new_emb[:2]), epoch=1)
+    sh.close()
+    full.close()
+
+
+def test_mid_ingestion_gather_never_half_swapped():
+    """Concurrent gathers during ingest_tail see either the old corpus or
+    the fully published one — never a half-swapped tail.  The `_ingest_hook`
+    seam runs a gather at the worst moment (tail packed, publish pending),
+    and a hammering reader thread covers the in-between interleavings."""
+    rng = np.random.default_rng(SEED)
+    emb = _corpus(rng)
+    new_emb, _ = _tail(rng)
+    sh = _sharded_cache(emb)
+    ids = np.array([[0, 63, 64, 599]])
+    want = np.asarray(sh.gather(ids))
+    mid = {}
+
+    def hook(cache):
+        assert cache.num_docs == N_DOCS      # not yet published
+        mid["gather"] = np.asarray(cache.gather(ids))
+
+    sh._ingest_hook = hook
+    stop = threading.Event()
+    errs = []
+
+    def reader():
+        try:
+            while not stop.is_set():
+                got = np.asarray(sh.gather(ids))
+                if not np.array_equal(got, want):
+                    errs.append("old-id gather drifted during ingest")
+                    return
+        except Exception as e:          # noqa: BLE001 — surfaced below
+            errs.append(repr(e))
+
+    t = threading.Thread(target=reader)
+    t.start()
+    sh.ingest_tail(rlwe._pack_corpus_ntt(PARAMS, new_emb), epoch=1)
+    stop.set()
+    t.join()
+    assert not errs
+    assert np.array_equal(mid["gather"], want)
+    assert np.array_equal(np.asarray(sh.gather(ids)), want)
+    assert sh.num_docs == N_DOCS + N_NEW
+    sh.close()
+
+
+# ---------------------------------------------------------------------------
+# full protocol: batch x backend x replicas sweep
+# ---------------------------------------------------------------------------
+
+def _sessions():
+    return SessionManager(rlwe_params=PARAMS, deterministic_seeds=True)
+
+
+def _open_all(srv, *, backend, N=N_DOCS):
+    kw = {"paillier_bits": 256} if backend == "paillier" else {}
+    for t in TENANTS:
+        srv.open_session(t, n=DIM, N=N, k=K, backend=backend,
+                         plan_kwargs={"kprime": 8}, **kw)
+
+
+def _submit_all(srv, queries):
+    return [srv.submit(TENANTS[i % len(TENANTS)], q,
+                       key=jax.random.PRNGKey(i))
+            for i, q in enumerate(queries)]
+
+
+def _flat_reference(queries, *, max_batch, backend):
+    """Flat-scan single engine over a fresh pre-ingestion index."""
+    idx = _build(np.random.default_rng(SEED))
+    eng = ServeEngine(
+        idx, config=EngineConfig(max_batch=max_batch, max_wait_s=30.0),
+        sessions=_sessions())
+    _open_all(eng, backend=backend)
+    _submit_all(eng, queries)
+    out = eng.drain()
+    eng.close()
+    return out
+
+
+_REFS = {}      # (max_batch, backend) -> flat pre-ingestion results
+
+
+def _assert_identical(want, got):
+    assert sorted(r.request_id for r in got) == \
+        sorted(r.request_id for r in want)
+    by_rid = {r.request_id: r for r in want}
+    for rb in got:
+        rs = by_rid[rb.request_id]
+        assert rs.tenant == rb.tenant
+        assert rs.ids.tolist() == rb.ids.tolist()
+        assert rs.docs == rb.docs
+        assert rs.transcript.total_bytes == rb.transcript.total_bytes
+
+
+@pytest.mark.parametrize("backend", ["rlwe", "paillier"])
+@pytest.mark.parametrize("max_batch", [1, 3, 8])
+@pytest.mark.parametrize("num_replicas", [1, 2, 4])
+def test_differential_sweep(queries, max_batch, backend, num_replicas):
+    """The acceptance sweep, two differentials per combo:
+
+    1. IVF serving == flat scan: a router over the IVF-built corpus
+       (cluster-aligned replica slices, engines configured nprobe=all)
+       returns bit-identical results to the flat single-engine scan.
+    2. Fixed-epoch replay == pre-ingestion corpus: the router pinned its
+       view at construction, so a tail ingested *before the requests run*
+       changes nothing — the grown index serves epoch-0 bits.
+    """
+    key = (max_batch, backend)
+    if key not in _REFS:
+        _REFS[key] = _flat_reference(queries, max_batch=max_batch,
+                                     backend=backend)
+    want = _REFS[key]
+
+    idx = _build(np.random.default_rng(SEED))
+    rt = ReplicaRouter(
+        idx,
+        config=RouterConfig(
+            num_replicas=num_replicas,
+            engine=EngineConfig(max_batch=max_batch, max_wait_s=30.0,
+                                nprobe=NUM_CLUSTERS)),
+        sessions=_sessions())
+    _open_all(rt, backend=backend)
+    # ingest under the router's feet: epoch advances, the pinned view
+    # must not
+    new_emb, new_docs = _tail(np.random.default_rng(SEED + 2))
+    idx.ingest(new_emb, documents=new_docs, normalize=False)
+    assert idx.epoch == 1 and rt.view.epoch == 0
+    _submit_all(rt, queries)
+    got = rt.drain()
+    rt.close()
+    _assert_identical(want, got)
+
+
+def test_router_replan_preserves_merge_order(queries):
+    """After ingest + replan the scatter-gather merge equals a whole-
+    corpus scan of the grown corpus (score desc, global id asc), and the
+    full protocol through the replanned router equals a fresh single
+    engine at the new epoch."""
+    idx = _build(np.random.default_rng(SEED))
+    rt = ReplicaRouter(
+        idx, config=RouterConfig(
+            num_replicas=2,
+            engine=EngineConfig(max_batch=3, max_wait_s=30.0)),
+        sessions=_sessions())
+    new_emb, new_docs = _tail(np.random.default_rng(SEED + 2))
+    idx.ingest(new_emb, documents=new_docs, normalize=False)
+    spans = rt.replan()
+    assert rt.view.epoch == 1
+    assert spans[0][0] == 0 and spans[-1][1] == N_DOCS + N_NEW
+    # slices land on cluster boundaries (cluster map drives the cuts)
+    stops = {int(s) for s in idx.cluster_map.stops} | {0}
+    assert all(start in stops for start, _ in spans)
+    # scatter merge over the new slices == whole-corpus flat scan
+    q32 = np.asarray(queries, np.float32)
+    merged = rt._scatter_topk(q32, 2 * K, home=0)
+    flat = distributed_topk(idx, q32, 2 * K)
+    assert np.array_equal(merged, np.asarray(flat.indices))
+    # protocol-level: replanned router == fresh whole-corpus engine
+    _open_all(rt, backend="rlwe", N=N_DOCS + N_NEW)
+    _submit_all(rt, queries)
+    got = rt.drain()
+    rt.close()
+    eng = ServeEngine(
+        idx, config=EngineConfig(max_batch=3, max_wait_s=30.0),
+        sessions=_sessions())
+    _open_all(eng, backend="rlwe", N=N_DOCS + N_NEW)
+    _submit_all(eng, queries)
+    want = eng.drain()
+    eng.close()
+    _assert_identical(want, got)
+
+
+def test_plan_cache_epoch_stamp():
+    pc = PlanCache()
+    a = pc.get(n=DIM, N=N_DOCS, k=K, radius=0.05)
+    b = pc.get(n=DIM, N=N_DOCS, k=K, radius=0.05)
+    assert a is b and (pc.hits, pc.misses) == (1, 1)
+    c = pc.get(n=DIM, N=N_DOCS, k=K, radius=0.05, epoch=1)
+    assert c is not None and pc.misses == 2     # epoch is part of the key
+    assert len(pc) == 2
+
+
+def test_engine_refresh_corpus_serves_new_rows(queries):
+    """refresh_corpus() is the engine-level epoch advance: before it the
+    engine scans the pinned rows, after it the ingested rows are
+    reachable."""
+    idx = _build(np.random.default_rng(SEED))
+    eng = ServeEngine(idx, config=EngineConfig(max_batch=3,
+                                               max_wait_s=30.0),
+                      sessions=_sessions())
+    assert eng.view.epoch == 0
+    # make the tail irresistible: exact copies of the queries
+    tail = np.asarray(queries, np.float32)
+    idx.ingest(tail, documents=[f"hot-{i}".encode()
+                                for i in range(len(tail))],
+               normalize=False)
+    pinned = np.asarray(eng._search_topk(np.asarray(queries, np.float32),
+                                         2 * K))
+    assert pinned.max() < N_DOCS            # new rows invisible pre-refresh
+    view = eng.refresh_corpus()
+    assert view.epoch == 1 and eng.view.num_rows == N_DOCS + len(tail)
+    refreshed = np.asarray(eng._search_topk(
+        np.asarray(queries, np.float32), 2 * K))
+    for i in range(len(tail)):
+        assert N_DOCS + i in refreshed[i]   # each query finds its copy
+    eng.close()
+
+
+def test_cluster_map_appended():
+    cm = ClusterMap(centroids=np.eye(2, DIM, dtype=np.float32),
+                    starts=np.array([0, 30]), stops=np.array([30, 60]))
+    cm2 = cm.appended(np.ones(DIM, np.float32), 60, 75)
+    assert cm2.num_clusters == 3
+    assert (int(cm2.starts[-1]), int(cm2.stops[-1])) == (60, 75)
+    assert cm.num_clusters == 2             # immutable original

@@ -50,5 +50,20 @@ def test_encrypted_dot_negative_values(sk):
     assert scores[0] == pytest.approx(0.0, abs=1e-3)
 
 
+def test_encode_vector_matches_scalar_encode():
+    """The batched fixed-point encode is bit-identical to the per-component
+    scalar path, including round-half-even ties and negative residues."""
+    n = (1 << 255) + 97
+    rng = np.random.default_rng(0)
+    e = rng.normal(size=257)
+    assert paillier.encode_vector(e, n) == \
+        [paillier._encode(v, n) for v in e]
+    # exact .5 ties at the rounding boundary, both signs, plus zeros
+    step = 1.0 / (1 << paillier.FRAC_BITS)
+    ties = np.array([(k + 0.5) * step for k in range(-8, 8)] + [0.0, -0.0])
+    assert paillier.encode_vector(ties, n) == \
+        [paillier._encode(v, n) for v in ties]
+
+
 def test_ciphertext_size_model(sk):
     assert sk.pub.ciphertext_bytes() == pytest.approx(2 * 256 / 8, abs=2)

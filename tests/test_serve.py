@@ -435,10 +435,11 @@ def test_batch_only_heisenbug_heals_without_quarantine(corpus, monkeypatch):
     index, _, queries = corpus
     real = batching_mod.topk_batch
 
-    def flaky(index_, pert, kprime, *, use_pallas=None):
+    def flaky(index_, pert, kprime, *, use_pallas=None, nprobe=None):
         if np.shape(pert)[0] > 1:
             raise RuntimeError("batch-only fault")
-        return real(index_, pert, kprime, use_pallas=use_pallas)
+        return real(index_, pert, kprime, use_pallas=use_pallas,
+                    nprobe=nprobe)
 
     monkeypatch.setattr(batching_mod, "topk_batch", flaky)
     _, want = _run(index, queries, sequential=True, max_batch=1)
